@@ -1,0 +1,66 @@
+"""Paper Fig. 4 analogue — fixed workload swept across slice types.
+
+The Icepack synthetic-ice-shelf experiment held the workload fixed (4-rank
+MPI, dx=1000m) and swept EC2 instance types/generations, reporting
+time-to-solution (4a) and cost-per-solution (4b).  Here the fixed workload
+is one training step of glm4-9b/train_4k at 64 chips, swept across chip
+generations (v4 → v5e → v5p; the m6a → m7a → m8a analogue); the planner's
+roofline model provides step time and $ — with the measured quantity being
+the planner itself (its latency is what an interactive Adviser user
+experiences).
+"""
+from __future__ import annotations
+
+import time
+from typing import List
+
+from repro.configs import get_config, get_shape
+from repro.core.catalog import CATALOG
+from repro.core.costmodel import PlanGeometry, estimate
+
+ARCH = "glm4-9b"
+SHAPE = "train_4k"
+CHIPS = 64
+
+
+def rows() -> List[dict]:
+    cfg = get_config(ARCH)
+    shape = get_shape(SHAPE)
+    out = []
+    for sl in CATALOG:
+        if sl.multi_pod or sl.total_chips != CHIPS:
+            continue
+        geom = PlanGeometry(data=CHIPS // 4, model=4, remat="full")
+        t0 = time.perf_counter()
+        est = estimate(cfg, shape, sl, geom)
+        dt = (time.perf_counter() - t0) * 1e6
+        out.append({
+            "slice": sl.name,
+            "generation": sl.chip.name,
+            "est_step_ms": est.step_s * 1e3,
+            "cost_per_step_usd": est.cost_per_step,
+            "bottleneck": est.bottleneck,
+            "hbm_frac": est.hbm_frac,
+            "planner_us_per_call": dt,
+            "feasible": est.feasible,
+        })
+    return out
+
+
+def main(csv: bool = True) -> None:
+    rs = rows()
+    best_time = min(r["est_step_ms"] for r in rs if r["feasible"])
+    best_cost = min(r["cost_per_step_usd"] for r in rs if r["feasible"])
+    for r in rs:
+        derived = (
+            f"step={r['est_step_ms']:.1f}ms"
+            f";cost=${r['cost_per_step_usd']:.5f}"
+            f";bottleneck={r['bottleneck']}"
+            f";speed_vs_best={best_time / r['est_step_ms']:.2f}"
+            f";cost_vs_best={r['cost_per_step_usd'] / best_cost:.2f}"
+        )
+        print(f"instance_sweep/{r['slice']},{r['planner_us_per_call']:.1f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,82 @@
+"""Kernel microbenchmarks: oracle (XLA) path wall-time on CPU — the
+numbers that matter on this container — plus one interpret-mode run per
+kernel to confirm the Pallas body executes.  On TPU the same harness
+times the compiled Pallas kernels."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ops, ref
+
+
+def _time(fn, *args, iters=5):
+    fn(*args)  # compile/warm
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def main() -> None:
+    rng = np.random.default_rng(0)
+    B, S, H, KH, D = 1, 512, 8, 2, 64
+
+    q = jnp.asarray(rng.normal(size=(B, S, H, D)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(B, S, KH, D)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(B, S, KH, D)), jnp.float32)
+    attn = jax.jit(lambda q, k, v: ref.attention(q, k, v, causal=True))
+    us = _time(attn, q, k, v)
+    flops = 4 * B * S * S * H * D * 0.5
+    print(f"kernels/attention_ref_512,{us:.1f},gflops={flops/us/1e3:.2f}")
+
+    from repro.kernels.flash_xla import flash_attention_xla
+    fx = jax.jit(lambda q, k, v: flash_attention_xla(q, k, v, True, 0, 0, 128, 256))
+    us = _time(fx, q, k, v)
+    print(f"kernels/flash_xla_512,{us:.1f},gflops={flops/us/1e3:.2f}")
+
+    Bm, Hm, Sm, Dm = 1, 4, 512, 64
+    qm = jnp.asarray(rng.normal(size=(Bm, Hm, Sm, Dm)), jnp.float32)
+    ip = jnp.asarray(rng.normal(size=(Bm, Hm, Sm)), jnp.float32)
+    fp = jnp.asarray(rng.normal(size=(Bm, Hm, Sm)) + 1, jnp.float32)
+    ml = jax.jit(lambda q, i, f: ref.mlstm_scan(q, q, q, i, f)[0])
+    us = _time(ml, qm, ip, fp)
+    print(f"kernels/mlstm_ref_512,{us:.1f},tokens_per_s={Sm*Bm/us*1e6:.0f}")
+
+    Bs, Ss, Din, N = 1, 512, 256, 16
+    x = jnp.asarray(rng.normal(size=(Bs, Ss, Din)), jnp.float32)
+    dt = jnp.asarray(np.abs(rng.normal(size=(Bs, Ss, Din))) * 0.1, jnp.float32)
+    A = jnp.asarray(-np.abs(rng.normal(size=(Din, N))), jnp.float32)
+    Bmat = jnp.asarray(rng.normal(size=(Bs, Ss, N)), jnp.float32)
+    Cmat = jnp.asarray(rng.normal(size=(Bs, Ss, N)), jnp.float32)
+    Dv = jnp.asarray(rng.normal(size=(Din,)), jnp.float32)
+    sc = jax.jit(lambda *a: ref.ssm_scan(*a)[0])
+    us = _time(sc, x, dt, A, Bmat, Cmat, Dv)
+    print(f"kernels/ssm_ref_512,{us:.1f},tokens_per_s={Ss*Bs/us*1e6:.0f}")
+
+    M, Dd, F, E = 1024, 128, 256, 8
+    toks = jnp.asarray(rng.normal(size=(M, Dd)), jnp.float32)
+    sizes = jnp.asarray(rng.multinomial(M, np.ones(E) / E), jnp.int32)
+    w = jnp.asarray(rng.normal(size=(E, Dd, F)), jnp.float32)
+    gm = jax.jit(ref.moe_gmm)
+    us = _time(gm, toks, sizes, w)
+    gf = 2 * M * Dd * F
+    print(f"kernels/moe_gmm_ref_1024,{us:.1f},gflops={gf/us/1e3:.2f}")
+
+    # interpret-mode spot check (Pallas kernel bodies execute on CPU)
+    ops.set_backend("interpret")
+    t0 = time.perf_counter()
+    out = ops.flash_attention(q[:, :128], k[:, :128], v[:, :128],
+                              causal=True, block_q=64, block_k=64)
+    jax.block_until_ready(out)
+    us = (time.perf_counter() - t0) * 1e6
+    ops.set_backend("ref")
+    print(f"kernels/flash_pallas_interpret_128,{us:.1f},mode=interpret")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,49 @@
+"""Benchmark orchestrator — one section per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows:
+  * catalog_stats   — Fig. 1 analogue (choice explosion, planner search)
+  * instance_sweep  — Fig. 4 analogue (time & $ across chip generations)
+  * scaling         — Table 2 analogue (scale-up vs scale-out efficiency)
+  * kernels_bench   — kernel micro latencies (oracle + interpret spot)
+  * throughput      — measured train/serve throughput (reduced, CPU host)
+  * roofline        — deliverable (g): terms from the dry-run artifact
+"""
+from __future__ import annotations
+
+import sys
+import traceback
+
+
+def main() -> None:
+    from benchmarks import (
+        catalog_stats,
+        instance_sweep,
+        kernels_bench,
+        roofline,
+        scaling,
+        throughput,
+    )
+
+    sections = [
+        ("catalog_stats", catalog_stats.main),
+        ("instance_sweep", instance_sweep.main),
+        ("scaling", scaling.main),
+        ("kernels_bench", kernels_bench.main),
+        ("throughput", throughput.main),
+        ("roofline", roofline.main),
+    ]
+    print("name,us_per_call,derived")
+    failed = 0
+    for name, fn in sections:
+        try:
+            fn()
+        except Exception as e:
+            failed += 1
+            print(f"{name}/ERROR,0,{type(e).__name__}: {e}")
+            traceback.print_exc(file=sys.stderr)
+    if failed:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,87 @@
+"""Paper Table 2 analogue — scale-up vs scale-out strong scaling.
+
+PISM's Greenland spin-up was run at fixed problem size from np=8..96,
+either on one big node (scale-up) or a cluster of small ones (scale-out),
+and parallel efficiency collapsed once inter-node latency dominated.  The
+TPU translation: fixed workload (internlm2-20b train_4k), chips 8..512,
+either growing one pod (scale-up: ICI all the way) or ganging 64-chip
+pods (scale-out: cross-pod DCI in the gradient path).  Efficiency =
+T(8)·8 / (T(n)·n) from the roofline model — the same quantity as the
+paper's table.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import List
+
+from repro.configs import get_config, get_shape
+from repro.core.catalog import CHIPS as CHIP_SPECS, SliceType
+from repro.core.costmodel import PlanGeometry, estimate
+
+ARCH = "qwen2-1.5b"
+SHAPE = "train_4k"
+STEPS = (8, 16, 32, 64, 128, 256, 512, 1024, 2048)
+POD = 64  # scale-out building block
+
+
+def _geom(chips: int, pods: int) -> PlanGeometry:
+    per_pod = chips // pods
+    model = min(16, per_pod)
+    data = per_pod // model
+    return PlanGeometry(data=data, model=model, pods=pods, remat="full")
+
+
+def rows() -> List[dict]:
+    cfg = get_config(ARCH)
+    shape = get_shape(SHAPE)
+    chip = CHIP_SPECS["v5e"]
+    out = []
+    for n in STEPS:
+        for strategy in ("scale-up", "scale-out"):
+            if strategy == "scale-up":
+                if n > chip.max_pod_chips:
+                    continue
+                sl = SliceType(f"v5e-{n}", chip, n, 1)
+                geom = _geom(n, 1)
+            else:
+                pods = max(1, n // POD)
+                if n % POD and n > POD:
+                    continue
+                if n <= POD:
+                    sl = SliceType(f"v5e-{n}", chip, n, 1)
+                    geom = _geom(n, 1)
+                else:
+                    sl = SliceType(f"{pods}x-v5e-{POD}", chip, POD, pods)
+                    geom = _geom(n, pods)
+            t0 = time.perf_counter()
+            est = estimate(cfg, shape, sl, geom)
+            dt = (time.perf_counter() - t0) * 1e6
+            out.append({
+                "strategy": strategy,
+                "chips": n,
+                "pods": geom.pods,
+                "step_s": est.step_s,
+                "bottleneck": est.bottleneck,
+                "us": dt,
+            })
+    return out
+
+
+def main() -> None:
+    rs = rows()
+    base = {s: next(r["step_s"] * r["chips"] for r in rs
+                    if r["strategy"] == s and r["chips"] == STEPS[0])
+            for s in ("scale-up", "scale-out")}
+    for r in rs:
+        eff = base[r["strategy"]] / (r["step_s"] * r["chips"]) * 100
+        derived = (
+            f"chips={r['chips']};pods={r['pods']}"
+            f";step={r['step_s']*1e3:.1f}ms;efficiency={eff:.1f}%"
+            f";bottleneck={r['bottleneck']}"
+        )
+        print(f"scaling/{r['strategy']}-{r['chips']},{r['us']:.1f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

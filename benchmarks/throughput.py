@@ -1,0 +1,65 @@
+"""Measured end-to-end throughput on this host (reduced configs): train
+steps/s per family and serving tokens/s through the continuous-batching
+engine.  These are the only *wall-clock* numbers in the suite (CPU host);
+everything fleet-scale is roofline-derived."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config, reduced
+from repro.configs.base import ShapeConfig
+from repro.data import DataConfig, make_stream
+from repro.models import build_model
+from repro.parallel import Plan
+from repro.train import OptimizerConfig, init_train_state, make_train_step
+
+ARCHS = ["qwen2-1.5b", "phi3.5-moe-42b-a6.6b", "xlstm-125m", "hymba-1.5b"]
+
+
+def main() -> None:
+    for arch in ARCHS:
+        cfg = reduced(get_config(arch))
+        model = build_model(cfg)
+        shape = ShapeConfig("bench", 32, 4, "train")
+        opt = OptimizerConfig(lr=1e-3, warmup_steps=1, total_steps=100)
+        plan = Plan(remat="none")
+        state = init_train_state(model, jax.random.PRNGKey(0), opt, plan)
+        step = jax.jit(make_train_step(model, opt, plan))
+        stream = make_stream(cfg, shape, DataConfig(seed=0, vocab_size=cfg.vocab_size))
+        batch = {k: jnp.asarray(v) for k, v in stream.batch_at(0).items()}
+        state, _ = step(state, batch)  # compile
+        t0 = time.perf_counter()
+        iters = 5
+        for i in range(iters):
+            state, m = step(state, batch)
+        jax.block_until_ready(m["loss"])
+        us = (time.perf_counter() - t0) / iters * 1e6
+        toks = shape.tokens_per_step
+        print(f"throughput/train-{arch},{us:.0f},tok_per_s={toks/us*1e6:,.0f}"
+              f";loss={float(m['loss']):.3f}")
+
+    # serving
+    from repro.serve import Request, ServeEngine
+
+    cfg = reduced(get_config("qwen2-1.5b"))
+    model = build_model(cfg)
+    params, _ = model.init(jax.random.PRNGKey(0))
+    eng = ServeEngine(model, params, max_batch=4, max_seq=64, eos_id=-1)
+    rng = np.random.default_rng(0)
+    for i in range(8):
+        eng.submit(Request(uid=i, prompt=rng.integers(1, cfg.vocab_size, 8),
+                           max_new_tokens=16))
+    t0 = time.perf_counter()
+    done = eng.run()
+    dt = time.perf_counter() - t0
+    toks = sum(len(c.tokens) for c in done)
+    print(f"throughput/serve-qwen2-1.5b,{dt/max(toks,1)*1e6:.0f},"
+          f"tok_per_s={toks/dt:.1f};requests={len(done)}")
+
+
+if __name__ == "__main__":
+    main()

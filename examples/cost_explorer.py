@@ -1,0 +1,60 @@
+"""Cost/performance exploration — the paper's Fig. 4 workflow as an
+interactive tool.  'Which hardware should I run my training job on, and
+what will it cost?' answered without naming a single instance type.
+
+    PYTHONPATH=src python examples/cost_explorer.py --arch glm4-9b \
+        --shape train_4k --budget 500
+"""
+import argparse
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.core import ResourceIntent, plan  # noqa: E402
+from repro.core.catalog import CHIPS  # noqa: E402
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="glm4-9b")
+    ap.add_argument("--shape", default="train_4k")
+    ap.add_argument("--budget", type=float, default=None, help="$/hour cap")
+    ap.add_argument("--deadline-ms", type=float, default=None,
+                    help="max step time")
+    args = ap.parse_args()
+
+    print(f"workload: {args.arch} × {args.shape}")
+    print(f"{'':14s} {'goal=quick_test':^38s} {'goal=production':^38s}")
+
+    for goal in ("quick_test", "production", "exploration"):
+        intent = ResourceIntent(
+            arch=args.arch, shape=args.shape, goal=goal,
+            budget_usd_per_hour=args.budget,
+            max_step_seconds=args.deadline_ms / 1e3 if args.deadline_ms else None,
+        )
+        choices = plan(intent, top_k=3)
+        print(f"\n-- {goal} --")
+        if not choices:
+            print("   no feasible plan under constraints")
+            continue
+        for i, c in enumerate(choices):
+            print(f"  #{i+1} {c.summary}")
+
+    # generation sweep (Fig. 4a/4b analogue): same chip count per generation
+    print("\n-- chip-generation sweep (64 chips, like the paper's "
+          "m6a->m7a->m8a) --")
+    for gen in CHIPS:
+        intent = ResourceIntent(arch=args.arch, shape=args.shape,
+                                goal="exploration", chip_generation=gen,
+                                min_chips=64, max_chips=64)
+        c = plan(intent, top_k=1)
+        if c:
+            e = c[0].est
+            print(f"  {gen:4s} step={e.step_s*1e3:9.1f}ms  "
+                  f"cost/step=${e.cost_per_step:.5f}  "
+                  f"bottleneck={e.bottleneck}")
+
+
+if __name__ == "__main__":
+    main()

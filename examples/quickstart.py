@@ -1,0 +1,43 @@
+"""Quickstart: the Adviser experience in six lines of intent.
+
+A scientist who knows *what* they want (train qwen2 on their data, under
+budget) and nothing about meshes, shardings, remat or chip SKUs:
+
+    python examples/quickstart.py
+
+What happens: template lookup -> planner (intent -> slice + mesh + plan)
+-> budget gate -> envelope-run (checkpoints, structured logs) ->
+validation checks -> provenance record with a loss curve.
+"""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.core import REGISTRY, ProvenanceStore, run_workflow  # noqa: E402
+
+
+def main():
+    store = ProvenanceStore("runs")
+    template = REGISTRY.get("train-qwen2-1.5b")
+
+    print(f"template : {template.name} v{template.version}")
+    print(f"           {template.description}")
+
+    result = run_workflow(template, store, steps_override=20)
+
+    print(f"\nrun      : {result.record.run_id}")
+    if result.plan_choice:
+        print(f"plan     : {result.plan_choice.summary}")
+    print("checks   :")
+    for name, (ok, detail) in result.checks.items():
+        print(f"  [{'PASS' if ok else 'FAIL'}] {name:20s} {detail}")
+    hist = result.record.metrics()
+    print(f"\nloss     : {hist[0]['loss']:.4f} -> {hist[-1]['loss']:.4f} "
+          f"over {len(hist)} steps")
+    print(f"artifacts: {result.record.artifacts_dir}")
+    assert result.ok
+
+
+if __name__ == "__main__":
+    main()

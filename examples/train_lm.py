@@ -1,0 +1,110 @@
+"""End-to-end driver: train a ~100M-parameter qwen2-family model for a few
+hundred steps through the full platform stack (data pipeline, AdamW,
+envelope with checkpoints + straggler watch, provenance).
+
+Default is the ~100M config / 200 steps (expect ~1–2 h on this CPU
+container; it is sized for a real accelerator).  ``--preset smoke`` runs
+a ~7M model for 60 steps in a couple of minutes — same code path.
+
+    PYTHONPATH=src python examples/train_lm.py --preset smoke
+    PYTHONPATH=src python examples/train_lm.py            # full ~100M
+"""
+import argparse
+import dataclasses
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+
+from repro.checkpoint import Checkpointer  # noqa: E402
+from repro.configs import get_config  # noqa: E402
+from repro.configs.base import ShapeConfig, reduced  # noqa: E402
+from repro.core.envelope import ExecutionEnvelope  # noqa: E402
+from repro.core.provenance import ProvenanceStore  # noqa: E402
+from repro.data import DataConfig, make_stream  # noqa: E402
+from repro.models import build_model  # noqa: E402
+from repro.parallel import Plan  # noqa: E402
+from repro.train import OptimizerConfig, init_train_state, make_train_step  # noqa: E402
+
+PRESETS = {
+    # ~100M params: 12L, d=768, 12H — the assignment's end-to-end driver
+    "100m": dict(num_layers=12, d_model=768, num_heads=12, num_kv_heads=4,
+                 head_dim=64, d_ff=2048, vocab_size=32768, batch=16, seq=512,
+                 steps=200),
+    # ~7M: CI-sized, identical code path
+    "smoke": dict(num_layers=4, d_model=256, num_heads=4, num_kv_heads=2,
+                  head_dim=64, d_ff=1024, vocab_size=4096, batch=4, seq=128,
+                  steps=60),
+}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--preset", default="100m", choices=sorted(PRESETS))
+    ap.add_argument("--steps", type=int, default=None)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    args = ap.parse_args()
+    p = PRESETS[args.preset]
+    steps = args.steps or p["steps"]
+
+    cfg = dataclasses.replace(
+        get_config("qwen2-1.5b"),
+        name=f"qwen2-{args.preset}",
+        num_layers=p["num_layers"], d_model=p["d_model"],
+        num_heads=p["num_heads"], num_kv_heads=p["num_kv_heads"],
+        head_dim=p["head_dim"], d_ff=p["d_ff"], vocab_size=p["vocab_size"],
+        tie_embeddings=True,
+    )
+    model = build_model(cfg)
+    shape = ShapeConfig("train", p["seq"], p["batch"], "train")
+    opt = OptimizerConfig(lr=args.lr, warmup_steps=max(steps // 20, 5),
+                          total_steps=steps, weight_decay=0.01)
+    plan = Plan(remat="none", microbatch=1)
+
+    stream = make_stream(cfg, shape, DataConfig(seed=0, vocab_size=min(8192, cfg.vocab_size)))
+    step_jit = jax.jit(make_train_step(model, opt, plan))
+
+    store = ProvenanceStore("runs")
+    record = store.create_run(
+        template=f"example-train-{args.preset}", template_version="1",
+        config={"preset": p, "lr": args.lr}, plan={"remat": plan.remat},
+    )
+    env = ExecutionEnvelope(
+        record, checkpointer=Checkpointer(f"{record.artifacts_dir}/ckpt", keep=2),
+        checkpoint_every=max(steps // 4, 10),
+    )
+
+    n_params = {}
+
+    def init_fn():
+        state = init_train_state(model, jax.random.PRNGKey(0), opt, plan)
+        n_params["n"] = sum(x.size for x in jax.tree.leaves(state["params"]))
+        return state
+
+    def step_fn(state, step):
+        batch = {k: jnp.asarray(v) for k, v in stream.batch_at(step).items()}
+        state, metrics = step_jit(state, batch)
+        if step % 10 == 0:
+            print(f"  step {step:4d} loss={float(metrics['loss']):.4f} "
+                  f"lr={float(metrics['lr']):.2e}", flush=True)
+        return state, metrics
+
+    t0 = time.time()
+    env.run(init_state=init_fn, step_fn=step_fn, num_steps=steps)
+    dt = time.time() - t0
+    hist = record.metrics()
+    losses = [h["loss"] for h in hist]
+    print(f"\nparams      : {n_params['n']/1e6:.1f}M")
+    print(f"steps       : {len(losses)} in {dt:.0f}s "
+          f"({p['batch']*p['seq']*len(losses)/dt:,.0f} tok/s)")
+    print(f"loss        : {losses[0]:.4f} -> {losses[-1]:.4f}")
+    print(f"run record  : {record.dir}")
+    assert losses[-1] < losses[0]
+
+
+if __name__ == "__main__":
+    main()

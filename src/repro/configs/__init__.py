@@ -1,0 +1,83 @@
+"""Architecture registry: exact assigned ids -> ModelConfig.
+
+``get_config("<arch-id>")`` accepts the exact assignment id or the short
+alias (module name).  ``ARCHS`` lists all ten assigned architectures.
+"""
+from __future__ import annotations
+
+from repro.configs.base import ModelConfig, ShapeConfig, SHAPES, reduced, shape_applicable
+
+from repro.configs import (
+    phi35_moe_42b,
+    qwen3_moe_235b,
+    whisper_large_v3,
+    qwen15_4b,
+    internlm2_20b,
+    qwen2_15b,
+    glm4_9b,
+    xlstm_125m,
+    hymba_15b,
+    phi3_vision,
+)
+
+ARCHS = {
+    "phi3.5-moe-42b-a6.6b": phi35_moe_42b.CONFIG,
+    "qwen3-moe-235b-a22b": qwen3_moe_235b.CONFIG,
+    "whisper-large-v3": whisper_large_v3.CONFIG,
+    "qwen1.5-4b": qwen15_4b.CONFIG,
+    "internlm2-20b": internlm2_20b.CONFIG,
+    "qwen2-1.5b": qwen2_15b.CONFIG,
+    "glm4-9b": glm4_9b.CONFIG,
+    "xlstm-125m": xlstm_125m.CONFIG,
+    "hymba-1.5b": hymba_15b.CONFIG,
+    "phi-3-vision-4.2b": phi3_vision.CONFIG,
+}
+
+_ALIASES = {
+    "phi35-moe": "phi3.5-moe-42b-a6.6b",
+    "qwen3-moe": "qwen3-moe-235b-a22b",
+    "whisper": "whisper-large-v3",
+    "qwen15-4b": "qwen1.5-4b",
+    "internlm2": "internlm2-20b",
+    "qwen2": "qwen2-1.5b",
+    "glm4": "glm4-9b",
+    "xlstm": "xlstm-125m",
+    "hymba": "hymba-1.5b",
+    "phi3-vision": "phi-3-vision-4.2b",
+}
+
+
+def get_config(arch: str) -> ModelConfig:
+    key = _ALIASES.get(arch, arch)
+    if key not in ARCHS:
+        raise KeyError(
+            f"unknown arch {arch!r}; known: {sorted(ARCHS)} (aliases {sorted(_ALIASES)})"
+        )
+    return ARCHS[key]
+
+
+def get_shape(name: str) -> ShapeConfig:
+    if name not in SHAPES:
+        raise KeyError(f"unknown shape {name!r}; known: {sorted(SHAPES)}")
+    return SHAPES[name]
+
+
+def all_cells():
+    """Yield every (arch_id, shape_name, applicable, reason) assignment cell."""
+    for arch_id, cfg in ARCHS.items():
+        for shape_name, shape in SHAPES.items():
+            ok, why = shape_applicable(cfg, shape)
+            yield arch_id, shape_name, ok, why
+
+
+__all__ = [
+    "ModelConfig",
+    "ShapeConfig",
+    "SHAPES",
+    "ARCHS",
+    "get_config",
+    "get_shape",
+    "all_cells",
+    "reduced",
+    "shape_applicable",
+]

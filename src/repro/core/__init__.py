@@ -1,0 +1,29 @@
+"""The paper's primary contribution: the Adviser platform core —
+workflow templates, intent-based planning over a resource catalog,
+roofline cost model, provenance, budgets and the execution envelope."""
+from repro.core.budget import BudgetExceeded, BudgetLedger, PermissionDenied, Workspace
+from repro.core.catalog import CATALOG, CHIPS, SliceType, build_catalog, catalog_summary, find_slice
+from repro.core.costmodel import CostEstimate, PlanGeometry, estimate
+from repro.core.envelope import ExecutionEnvelope
+from repro.core.intent import ResourceIntent
+from repro.core.planner import PlanChoice, enumerate_plans, plan, rank, to_runtime_plan
+from repro.core.provenance import ProvenanceStore, RunRecord, capture_environment, stable_hash
+from repro.core.workflow import (
+    CHECKS,
+    REGISTRY,
+    WorkflowRegistry,
+    WorkflowResult,
+    WorkflowTemplate,
+    run_workflow,
+)
+
+__all__ = [
+    "BudgetExceeded", "BudgetLedger", "PermissionDenied", "Workspace",
+    "CATALOG", "CHIPS", "SliceType", "build_catalog", "catalog_summary", "find_slice",
+    "CostEstimate", "PlanGeometry", "estimate",
+    "ExecutionEnvelope", "ResourceIntent",
+    "PlanChoice", "enumerate_plans", "plan", "rank", "to_runtime_plan",
+    "ProvenanceStore", "RunRecord", "capture_environment", "stable_hash",
+    "CHECKS", "REGISTRY", "WorkflowRegistry", "WorkflowResult",
+    "WorkflowTemplate", "run_workflow",
+]

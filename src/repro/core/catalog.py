@@ -1,0 +1,112 @@
+"""Resource catalog: the TPU-fleet analogue of the EC2 instance-type list.
+
+The paper's Fig. 1 motivates Adviser with the explosion of instance
+choices (1000+ EC2 types).  A TPU fleet has the same shape of problem:
+chip generations × slice sizes × single/multi-pod topologies.  The catalog
+is the planner's search space; prices are representative on-demand
+$/chip-hour (documented here, relative comparisons are what matter — the
+paper's Fig. 4 argument).
+
+Chip generations play the role of the paper's m6a → m7a → m8a sweep.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import Dict, List, Optional, Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class ChipSpec:
+    name: str
+    peak_bf16_flops: float  # FLOP/s
+    hbm_bytes: float
+    hbm_bw: float  # B/s
+    ici_bw: float  # B/s per chip (intra-pod link)
+    dci_bw: float  # B/s per chip (cross-pod)
+    price_per_hour: float  # $/chip-hour (representative)
+    max_pod_chips: int
+
+
+# v5e is the assignment's target (197 TF bf16 / 819 GB/s HBM / 50 GB/s ICI).
+CHIPS: Dict[str, ChipSpec] = {
+    "v4": ChipSpec("v4", 275e12, 32e9, 1228e9, 45e9, 12e9, 3.22, 1024 * 2),
+    "v5e": ChipSpec("v5e", 197e12, 16e9, 819e9, 50e9, 12.5e9, 1.20, 256),
+    "v5p": ChipSpec("v5p", 459e12, 95e9, 2765e9, 90e9, 25e9, 4.20, 1024 * 8),
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class SliceType:
+    """One launchable option: a slice of a chip generation, possibly
+    spanning pods."""
+
+    name: str
+    chip: ChipSpec
+    chips_per_pod: int
+    num_pods: int
+
+    @property
+    def total_chips(self) -> int:
+        return self.chips_per_pod * self.num_pods
+
+    @property
+    def price_per_hour(self) -> float:
+        return self.total_chips * self.chip.price_per_hour
+
+    @property
+    def multi_pod(self) -> bool:
+        return self.num_pods > 1
+
+
+def build_catalog() -> List[SliceType]:
+    out: List[SliceType] = []
+    for chip in CHIPS.values():
+        size = 4
+        while size <= chip.max_pod_chips:
+            out.append(SliceType(f"{chip.name}-{size}", chip, size, 1))
+            size *= 2
+        # multi-pod assemblies of the largest pod
+        for pods in (2, 4, 8):
+            size = chip.max_pod_chips
+            out.append(
+                SliceType(f"{pods}x{chip.name}-{size}", chip, size, pods)
+            )
+    return out
+
+
+CATALOG: List[SliceType] = build_catalog()
+
+
+def find_slice(name: str) -> SliceType:
+    for s in CATALOG:
+        if s.name == name:
+            return s
+    raise KeyError(f"unknown slice {name!r}; have {[s.name for s in CATALOG]}")
+
+
+def mesh_shapes_for(slice_: SliceType) -> List[Tuple[Tuple[int, ...], Tuple[str, ...]]]:
+    """Candidate (shape, axis-names) meshes for a slice: the planner's
+    data/model split search space."""
+    n = slice_.chips_per_pod
+    out = []
+    model = 1
+    while model <= n:
+        data = n // model
+        if data * model == n and data >= 1:
+            if slice_.num_pods > 1:
+                out.append(
+                    ((slice_.num_pods, data, model), ("pod", "data", "model"))
+                )
+            else:
+                out.append(((data, model), ("data", "model")))
+        model *= 2
+    return out
+
+
+def catalog_summary() -> Dict[str, int]:
+    return {
+        "total_options": len(CATALOG),
+        "chip_generations": len(CHIPS),
+        "multi_pod_options": sum(1 for s in CATALOG if s.multi_pod),
+    }

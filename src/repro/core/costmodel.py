@@ -1,0 +1,279 @@
+"""Analytic roofline cost model: the planner's scoring function.
+
+For a (model config × shape × slice × plan) cell it estimates the three
+roofline terms the assignment defines —
+
+    compute    = FLOPs / (chips × peak)
+    memory     = HBM bytes / (chips × hbm_bw)
+    collective = collective bytes / (chips × link_bw)
+
+plus per-device memory occupancy (feasibility) and $ cost.  The dry-run
+later *verifies* these against the compiled HLO (cost_analysis /
+memory_analysis / collective parse) — the planner must be cheap because it
+scores hundreds of candidates per intent, the compiler is the ground
+truth for the chosen one.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, Optional, Tuple
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.core.catalog import SliceType
+
+
+@dataclasses.dataclass(frozen=True)
+class PlanGeometry:
+    """The parallel geometry the planner scores (mirror of parallel.Plan,
+    decoupled so the cost model has no jax dependency)."""
+
+    data: int = 1
+    model: int = 1
+    pods: int = 1
+    fsdp: bool = True
+    remat: str = "full"  # none | dots | full
+    microbatch: int = 1
+    compress_grads: bool = False
+
+    @property
+    def total(self) -> int:
+        return self.data * self.model * self.pods
+
+    @property
+    def dp_total(self) -> int:
+        return self.data * self.pods
+
+
+@dataclasses.dataclass
+class CostEstimate:
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    step_s: float
+    bytes_per_device: float
+    hbm_frac: float
+    cost_per_step: float
+    cost_per_mtok: float  # $ per million tokens
+    bottleneck: str
+    feasible: bool
+    detail: Dict[str, float]
+
+
+BYTES = {"bfloat16": 2, "float32": 4, "int8": 1}
+
+
+def _train_flops(cfg: ModelConfig, shape: ShapeConfig) -> float:
+    """fwd+bwd FLOPs per step (model = 6·N_active·tokens + attention)."""
+    tokens = shape.tokens_per_step
+    base = 6.0 * cfg.active_param_count() * tokens
+    # attention scores+values: fwd 4·B·S²·H·Dh (causal ÷2), bwd ×2
+    S, B = shape.seq_len, shape.global_batch
+    if cfg.family in ("ssm",):
+        attn = 0.0
+    else:
+        w = cfg.sliding_window or S
+        eff = min(S, w)
+        attn = 3.0 * 4.0 * B * S * eff * cfg.num_heads * cfg.head_dim * 0.5
+        attn *= cfg.num_layers
+    return base + attn
+
+
+def _decode_flops(cfg: ModelConfig, shape: ShapeConfig) -> float:
+    B = shape.global_batch
+    base = 2.0 * cfg.active_param_count() * B
+    S = shape.seq_len
+    if cfg.family == "ssm":
+        attn = 0.0
+    else:
+        w = cfg.sliding_window or S
+        ctx_local = min(S, w)
+        n_global = len(cfg.global_attn_layers) if cfg.global_attn_layers else 0
+        n_local = cfg.num_layers - n_global
+        ctx = n_local * ctx_local + n_global * S if n_global else cfg.num_layers * ctx_local
+        attn = 4.0 * B * ctx * cfg.num_heads * cfg.head_dim
+    return base + attn
+
+
+def _prefill_flops(cfg: ModelConfig, shape: ShapeConfig) -> float:
+    t = _train_flops(cfg, shape)
+    return t / 3.0  # fwd only
+
+
+def state_bytes(cfg: ModelConfig, geom: PlanGeometry, kind: str,
+                moment_dtype: str = "float32") -> float:
+    """Global bytes of persistent state (params + opt for train; params
+    for serve)."""
+    n = cfg.param_count()
+    pb = n * BYTES["float32"]  # master params f32
+    if kind != "train":
+        return n * BYTES[cfg.dtype]
+    mb = 2 * n * BYTES[moment_dtype]
+    return pb + mb
+
+
+def kv_cache_bytes(cfg: ModelConfig, shape: ShapeConfig) -> float:
+    B, S = shape.global_batch, shape.seq_len
+    bt = BYTES[cfg.dtype]
+    if cfg.family == "ssm":
+        d_in = 2 * cfg.d_model
+        dh = d_in // cfg.num_heads
+        return cfg.num_layers * B * cfg.num_heads * dh * dh * 4.0
+    per_layer_full = 2 * B * S * cfg.num_kv_heads * cfg.head_dim * bt
+    if cfg.family == "hybrid" and cfg.sliding_window:
+        W = min(cfg.sliding_window, S)
+        n_global = len(cfg.global_attn_layers)
+        n_local = cfg.num_layers - n_global
+        per_layer_win = 2 * B * W * cfg.num_kv_heads * cfg.head_dim * bt
+        ssm = cfg.num_layers * B * (2 * cfg.d_model) * cfg.ssm_state * 4.0
+        return n_global * per_layer_full + n_local * per_layer_win + ssm
+    total = cfg.num_layers * per_layer_full
+    if cfg.is_encoder_decoder:
+        total += 2 * cfg.num_layers * B * cfg.encoder_frames * cfg.num_kv_heads * cfg.head_dim * bt
+    return total
+
+
+def activation_bytes(cfg: ModelConfig, shape: ShapeConfig, geom: PlanGeometry) -> float:
+    """Live activation bytes per device during train fwd+bwd (remat-aware,
+    per-microbatch)."""
+    if shape.kind != "train":
+        B, S = shape.global_batch, shape.seq_len
+        if shape.kind == "decode":
+            S = 1
+        return B * S * cfg.d_model * BYTES[cfg.dtype] * 8 / geom.total
+    B = shape.global_batch / max(geom.dp_total, 1) / max(geom.microbatch, 1)
+    S = shape.seq_len
+    bt = BYTES[cfg.dtype]
+    d = cfg.d_model
+    if geom.remat == "full":
+        per_layer = B * S * d * bt  # only the block input is saved
+        live = cfg.num_layers * per_layer + 4 * B * S * d * bt
+    elif geom.remat == "dots":
+        per_layer = 3 * B * S * d * bt
+        live = cfg.num_layers * per_layer + 4 * B * S * d * bt
+    else:
+        ff = max(cfg.d_ff, d * 2)
+        per_layer = (6 * d + 2 * ff) * B * S * bt / max(geom.model, 1) * 1.0
+        live = cfg.num_layers * per_layer
+    # logits are the spike for big-vocab models
+    logits = B * S * cfg.vocab_size * 4.0 / max(geom.model, 1)
+    return live / max(geom.model, 1) + logits
+
+
+def collective_bytes(cfg: ModelConfig, shape: ShapeConfig, geom: PlanGeometry,
+                     kind: str) -> Dict[str, float]:
+    """Per-step global collective traffic by category (bytes summed over
+    devices, ring-algorithm convention: volume ≈ 2·payload·(n-1)/n ≈ 2·payload)."""
+    bt = BYTES[cfg.dtype]
+    n = cfg.param_count()
+    out: Dict[str, float] = {"tp_allreduce": 0.0, "dp_gradreduce": 0.0,
+                             "fsdp_gather": 0.0, "ep_alltoall": 0.0,
+                             "pod_gradreduce": 0.0}
+    tokens = shape.tokens_per_step
+    act = tokens * cfg.d_model * bt
+    if geom.model > 1:
+        # 2 allreduce per block fwd (attn out + mlp out), x3 for bwd
+        nblocks = cfg.num_layers + (cfg.encoder_layers if cfg.is_encoder_decoder else 0)
+        mult = 3.0 if kind == "train" else 1.0
+        out["tp_allreduce"] = 2.0 * act * 2 * nblocks * mult
+    if kind == "train":
+        grad_bytes = n * BYTES["float32"]
+        if geom.fsdp:
+            # params all-gather fwd+bwd, grads reduce-scatter
+            out["fsdp_gather"] = 2 * n * bt + grad_bytes
+        if geom.dp_total > 1 and not geom.fsdp:
+            out["dp_gradreduce"] = 2 * grad_bytes
+        if geom.pods > 1:
+            pod_bytes = 2 * grad_bytes / max(geom.data * geom.model, 1)
+            if geom.compress_grads:
+                pod_bytes /= 4.0  # int8 + scales
+            out["pod_gradreduce"] = pod_bytes
+    if cfg.num_experts > 0:
+        disp = tokens * cfg.top_k * cfg.moe_capacity_factor * cfg.d_model * bt
+        mult = 3.0 if kind == "train" else 1.0
+        out["ep_alltoall"] = 2.0 * disp * cfg.num_layers * mult / max(1, 1)
+    return out
+
+
+def estimate(cfg: ModelConfig, shape: ShapeConfig, slice_: SliceType,
+             geom: PlanGeometry, moment_dtype: str = "float32") -> CostEstimate:
+    chip = slice_.chip
+    chips = geom.total
+    kind = shape.kind
+
+    if kind == "train":
+        flops = _train_flops(cfg, shape)
+    elif kind == "prefill":
+        flops = _prefill_flops(cfg, shape)
+    else:
+        flops = _decode_flops(cfg, shape)
+    compute_s = flops / (chips * chip.peak_bf16_flops)
+
+    # HBM traffic: weights stream once per microbatch (+opt update r/w in
+    # train), activations once, kv cache read per decode step
+    sbytes = state_bytes(cfg, geom, kind, moment_dtype)
+    act = activation_bytes(cfg, shape, geom)
+    if kind == "train":
+        hbm = sbytes * 3.0 * geom.microbatch + act * chips
+    elif kind == "prefill":
+        hbm = cfg.param_count() * BYTES[cfg.dtype] + act * chips
+    else:
+        hbm = cfg.param_count() * BYTES[cfg.dtype] + kv_cache_bytes(cfg, shape)
+    memory_s = hbm / (chips * chip.hbm_bw)
+
+    colls = collective_bytes(cfg, shape, geom, kind)
+    intra = sum(v for k, v in colls.items() if k != "pod_gradreduce")
+    inter = colls["pod_gradreduce"]
+    collective_s = intra / (chips * chip.ici_bw) + (
+        inter / (chips * chip.dci_bw) if inter else 0.0
+    )
+    # latency floor: ring collectives cost ~2(n-1) hops regardless of size.
+    # This is what makes over-provisioning small workloads lose — the real
+    # phenomenon behind the paper's Table 2 efficiency collapse.
+    HOP_ICI, HOP_DCI = 1e-6, 10e-6
+    nblocks = cfg.num_layers + (cfg.encoder_layers if cfg.is_encoder_decoder else 0)
+    n_ops = 0.0
+    if geom.model > 1:
+        n_ops += 4.0 * nblocks * (3.0 if kind == "train" else 1.0)
+    if kind == "train" and (geom.fsdp or geom.dp_total > 1):
+        n_ops += 2.0 * nblocks
+    if cfg.num_experts > 0:
+        n_ops += 2.0 * cfg.num_layers * (3.0 if kind == "train" else 1.0)
+    ring = max(geom.data * geom.model, 2)
+    collective_s += n_ops * 2 * (ring - 1) * HOP_ICI / max(geom.microbatch, 1) ** 0
+    if geom.pods > 1 and kind == "train":
+        collective_s += 2 * (geom.pods - 1) * HOP_DCI * 2 * nblocks
+
+    # per-device occupancy
+    dev_state = sbytes / chips
+    dev_cache = kv_cache_bytes(cfg, shape) / chips if kind != "train" else 0.0
+    dev_grads = cfg.param_count() * 4.0 / chips if kind == "train" else 0.0
+    dev_act = act
+    bytes_per_device = dev_state + dev_cache + dev_grads + dev_act
+    hbm_frac = bytes_per_device / chip.hbm_bytes
+
+    # roofline combine: dominant term with 15% tax for imperfect overlap
+    step_s = max(compute_s, memory_s, collective_s)
+    step_s = step_s + 0.15 * (compute_s + memory_s + collective_s - step_s)
+
+    terms = {"compute": compute_s, "memory": memory_s, "collective": collective_s}
+    bottleneck = max(terms, key=terms.get)
+    price_s = slice_.chip.price_per_hour * chips / 3600.0
+    cost_per_step = price_s * step_s
+    tokens = shape.tokens_per_step
+    cost_per_mtok = cost_per_step / max(tokens, 1) * 1e6
+    feasible = hbm_frac <= 0.92 and chips == slice_.total_chips
+
+    return CostEstimate(
+        compute_s=compute_s,
+        memory_s=memory_s,
+        collective_s=collective_s,
+        step_s=step_s,
+        bytes_per_device=bytes_per_device,
+        hbm_frac=hbm_frac,
+        cost_per_step=cost_per_step,
+        cost_per_mtok=cost_per_mtok,
+        bottleneck=bottleneck,
+        feasible=feasible,
+        detail={**terms, **colls, "flops": flops, "hbm_bytes": hbm},
+    )

@@ -1,0 +1,162 @@
+"""Planner: ResourceIntent → ranked, feasible execution plans.
+
+This is the Adviser Execution Engine's instance-selection logic adapted to
+a TPU fleet: enumerate (slice × mesh split × remat/microbatch geometry)
+candidates from the catalog, score each with the analytic roofline cost
+model, reject infeasible ones (HBM, budget, step-time caps), and rank by
+the intent's goal:
+
+  * ``production``   — lowest $ per token among plans within 1.5× of the
+                       fastest (throughput-efficient);
+  * ``exploration``  — lowest step time (fastest turnaround);
+  * ``quick_test``   — smallest feasible slice (cheapest absolute $/h).
+
+The winner's predictions are later validated against the compiled HLO in
+the dry-run; `examples/cost_explorer.py` reproduces the paper's Fig. 4
+sweep with this machinery.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional
+
+from repro.configs import get_config, get_shape
+from repro.core.catalog import CATALOG, SliceType, find_slice, mesh_shapes_for
+from repro.core.costmodel import CostEstimate, PlanGeometry, estimate
+from repro.core.intent import ResourceIntent
+
+
+@dataclasses.dataclass
+class PlanChoice:
+    slice: SliceType
+    mesh_shape: tuple
+    mesh_axes: tuple
+    geometry: PlanGeometry
+    est: CostEstimate
+
+    @property
+    def summary(self) -> str:
+        g = self.geometry
+        return (
+            f"{self.slice.name:>14s} mesh={self.mesh_shape!s:<14s} "
+            f"remat={g.remat:<5s} ubatch={g.microbatch} "
+            f"step={self.est.step_s*1e3:8.2f}ms "
+            f"bottleneck={self.est.bottleneck:<10s} "
+            f"hbm={self.est.hbm_frac*100:5.1f}% "
+            f"$/Mtok={self.est.cost_per_mtok:8.4f}"
+        )
+
+
+def _geometries(mesh_shape: tuple, mesh_axes: tuple, kind: str,
+                global_batch: int) -> List[PlanGeometry]:
+    dims = dict(zip(mesh_axes, mesh_shape))
+    pods = dims.get("pod", 1)
+    data = dims.get("data", 1)
+    model = dims.get("model", 1)
+    out = []
+    remats = ("dots", "full", "none") if kind == "train" else ("none",)
+    ubatches = (1, 2, 4) if kind == "train" else (1,)
+    for remat in remats:
+        for ub in ubatches:
+            if global_batch % max(data * pods * ub, 1) != 0:
+                continue
+            out.append(PlanGeometry(
+                data=data, model=model, pods=pods,
+                fsdp=True, remat=remat, microbatch=ub,
+            ))
+    return out or [PlanGeometry(data=data, model=model, pods=pods)]
+
+
+def enumerate_plans(intent: ResourceIntent) -> List[PlanChoice]:
+    intent.validate()
+    cfg = get_config(intent.arch)
+    shape = get_shape(intent.shape)
+
+    slices = CATALOG
+    if intent.slice_name:
+        slices = [find_slice(intent.slice_name)]
+    choices: List[PlanChoice] = []
+    for sl in slices:
+        if intent.chip_generation and sl.chip.name != intent.chip_generation:
+            continue
+        if not intent.allow_multi_pod and sl.multi_pod:
+            continue
+        chips = sl.total_chips
+        if intent.min_chips and chips < intent.min_chips:
+            continue
+        if intent.max_chips and chips > intent.max_chips:
+            continue
+        if intent.budget_usd_per_hour and sl.price_per_hour > intent.budget_usd_per_hour:
+            continue
+        for mesh_shape, mesh_axes in mesh_shapes_for(sl):
+            if intent.mesh_shape and tuple(mesh_shape) != tuple(intent.mesh_shape):
+                continue
+            for geom in _geometries(mesh_shape, mesh_axes, shape.kind,
+                                    shape.global_batch):
+                est = estimate(cfg, shape, sl, geom)
+                if not est.feasible:
+                    continue
+                if intent.max_step_seconds and est.step_s > intent.max_step_seconds:
+                    continue
+                choices.append(PlanChoice(sl, tuple(mesh_shape), tuple(mesh_axes),
+                                          geom, est))
+    return choices
+
+
+def rank(choices: List[PlanChoice], goal: str) -> List[PlanChoice]:
+    if not choices:
+        return []
+    if goal == "exploration":
+        return sorted(choices, key=lambda c: c.est.step_s)
+    if goal == "quick_test":
+        return sorted(choices, key=lambda c: (c.slice.price_per_hour, c.est.step_s))
+    # production: cheapest $ per token (the paper's Fig. 4b criterion),
+    # step time as tie-break within ~2% cost bands
+    return sorted(
+        choices,
+        key=lambda c: (round(c.est.cost_per_mtok, 4), c.est.step_s),
+    )
+
+
+def plan(intent: ResourceIntent, top_k: int = 5) -> List[PlanChoice]:
+    """The public entry: ranked feasible plans for an intent."""
+    return rank(enumerate_plans(intent), intent.goal)[:top_k]
+
+
+def to_runtime_plan(choice: PlanChoice, cfg=None, profile: str = "optimized"):
+    """Convert a PlanChoice into the runtime Plan consumed by the
+    sharding/step layer.
+
+    ``profile="optimized"`` additionally encodes the §Perf-validated
+    expertise (EXPERIMENTS.md): triangular flash attention everywhere,
+    context-parallel attention when heads don't divide the model axis,
+    shard_map all-to-all MoE, chunked checkpointed-adjoint selective scan —
+    this is the Adviser thesis made concrete: hillclimb findings become
+    platform defaults users never have to know about.
+    """
+    from repro.parallel.sharding import Plan
+
+    axes = choice.mesh_axes
+    dims = dict(zip(axes, choice.mesh_shape))
+    dp = tuple(a for a in ("pod", "data") if a in axes)
+    kw = {}
+    if profile == "optimized":
+        kw["attn_impl"] = "tri"
+        if cfg is not None:
+            model_deg = dims.get("model", 1)
+            if model_deg > 1 and cfg.num_heads % model_deg != 0:
+                kw["seq_shard_attn"] = True
+            if cfg.num_experts > 0:
+                kw["moe_impl"] = "shard_map"
+            if cfg.family in ("ssm", "hybrid"):
+                kw["ssm_chunk"] = 16
+    return Plan(
+        name=f"{choice.slice.name}-{'x'.join(map(str, choice.mesh_shape))}",
+        dp_axes=dp,
+        fsdp_axes=dp,
+        fsdp=choice.geometry.fsdp,
+        remat=choice.geometry.remat,
+        microbatch=choice.geometry.microbatch,
+        compress_grads=choice.geometry.compress_grads,
+        **kw,
+    )

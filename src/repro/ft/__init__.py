@@ -1,0 +1,18 @@
+from repro.ft.elastic import elastic_restart, reshard_state
+from repro.ft.failures import (
+    FailureSchedule,
+    InjectedFailure,
+    RestartPolicy,
+    StragglerWatch,
+    run_with_restarts,
+)
+
+__all__ = [
+    "FailureSchedule",
+    "InjectedFailure",
+    "RestartPolicy",
+    "StragglerWatch",
+    "run_with_restarts",
+    "elastic_restart",
+    "reshard_state",
+]

@@ -1,0 +1,51 @@
+"""Elastic rescaling: re-plan to a different chip count and reshard the
+checkpointed state.
+
+Flow (mirrors what the Execution Engine does after losing/gaining nodes):
+  1. planner picks the best feasible plan for the *new* chip count;
+  2. a new mesh is built; parameter shardings are re-derived from the same
+     logical axes (models are mesh-agnostic);
+  3. the checkpoint is restored with ``device_put`` onto the new
+     shardings — shapes are unchanged, placement differs;
+  4. the data stream continues from the restored step — the pipeline is a
+     pure function of (seed, step), so no data is lost or repeated.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional, Tuple
+
+import jax
+from jax.sharding import Mesh
+
+from repro.models.api import Model
+from repro.parallel.sharding import Plan, make_param_shardings
+
+Pytree = Any
+
+
+def reshard_state(state: Pytree, model: Model, mesh: Mesh, plan: Plan,
+                  moment_dtype: str = "float32") -> Pytree:
+    """Re-place an (already host-resident or differently-sharded) train
+    state onto a new mesh according to ``plan``."""
+    specs, axes = model.param_specs()
+    p_shard = make_param_shardings(mesh, axes, specs, plan)
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    rep = NamedSharding(mesh, P())
+    shardings = {
+        "params": p_shard,
+        "opt": {"m": p_shard, "v": p_shard, "count": rep},
+        "step": rep,
+    }
+    if "grad_err" in state:
+        shardings["grad_err"] = p_shard
+
+    return jax.tree.map(jax.device_put, state, shardings)
+
+
+def elastic_restart(checkpointer, like_state: Pytree, model: Model,
+                    new_mesh: Mesh, plan: Plan) -> Tuple[Pytree, int]:
+    """Restore newest checkpoint onto a *new* mesh (different device count
+    than the mesh that wrote it)."""
+    state, step = checkpointer.restore(like_state)
+    return reshard_state(state, model, new_mesh, plan), step

@@ -1,0 +1,94 @@
+"""Fault tolerance: failure injection, restart policy, straggler watch.
+
+The paper's §6 names "durability for long-running jobs" as future work —
+we implement it.  The model here is the standard multi-controller TPU one:
+a node failure kills the step; recovery = re-provision (possibly at a
+different scale) + restore newest committed checkpoint + replay the data
+stream from the restored step (exact, because the pipeline is a pure
+function of step).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import deque
+from typing import Callable, Deque, Dict, List, Optional
+
+
+class InjectedFailure(RuntimeError):
+    """A simulated node/step failure."""
+
+
+@dataclasses.dataclass
+class FailureSchedule:
+    """Deterministic failure injection for tests/drills: fail at given
+    steps (each step fires once)."""
+
+    fail_at_steps: tuple = ()
+    _fired: set = dataclasses.field(default_factory=set)
+
+    def check(self, step: int) -> None:
+        if step in self.fail_at_steps and step not in self._fired:
+            self._fired.add(step)
+            raise InjectedFailure(f"injected node failure at step {step}")
+
+
+@dataclasses.dataclass
+class RestartPolicy:
+    max_restarts: int = 5
+    backoff_s: float = 0.0  # 0 in tests; exponential in production
+
+    def delay(self, attempt: int) -> float:
+        return self.backoff_s * (2 ** attempt)
+
+
+class StragglerWatch:
+    """Flags steps whose duration exceeds ``threshold`` × rolling median.
+
+    At fleet scale the mitigation is re-scheduling the slow host; here the
+    watch reports, and the envelope records the event in provenance so
+    'problems that only appear at scale' stay diagnosable (paper §4.3).
+    """
+
+    def __init__(self, window: int = 32, threshold: float = 3.0):
+        self.times: Deque[float] = deque(maxlen=window)
+        self.threshold = threshold
+        self.events: List[Dict] = []
+
+    def observe(self, step: int, duration_s: float) -> bool:
+        is_straggler = False
+        if len(self.times) >= 8:
+            med = sorted(self.times)[len(self.times) // 2]
+            if duration_s > self.threshold * med:
+                is_straggler = True
+                self.events.append(
+                    {"step": step, "duration_s": duration_s, "median_s": med}
+                )
+        self.times.append(duration_s)
+        return is_straggler
+
+
+def run_with_restarts(
+    run_fn: Callable[[int], int],
+    policy: RestartPolicy,
+    on_restart: Optional[Callable[[int, BaseException], None]] = None,
+) -> int:
+    """Drive ``run_fn(start_step) -> final_step`` through failures.
+
+    ``run_fn`` must resume from the checkpointed step it is given and
+    raise on failure; we restart up to ``max_restarts`` times.
+    """
+    attempt = 0
+    start_step = 0
+    while True:
+        try:
+            return run_fn(start_step)
+        except InjectedFailure as e:  # pragma: no branch
+            attempt += 1
+            if attempt > policy.max_restarts:
+                raise
+            if on_restart:
+                on_restart(attempt, e)
+            if policy.backoff_s:
+                time.sleep(policy.delay(attempt - 1))
+            start_step = -1  # sentinel: run_fn restores from checkpoint

@@ -1,0 +1,12 @@
+"""Pallas TPU kernels for the platform's compute hot spots.
+
+Each kernel ships three layers:
+  * ``<name>.py``   — pl.pallas_call + explicit BlockSpec VMEM tiling (TPU target)
+  * ``ops.py``      — jit'd dispatch: ref (XLA fallback) | interpret | tpu
+  * ``ref.py``      — pure-jnp oracle (the semantics tests sweep against)
+
+Plus the XLA-path structures the fallback needs to stay roofline-sane:
+``flash_xla.py`` / ``flash_tri.py`` (custom-VJP flash attention, triangular
+variant with causal block-skipping) and ``ssm_vjp.py`` (checkpointed-adjoint
+chunked selective scan).
+"""

@@ -1,0 +1,220 @@
+"""Triangular flash attention: causal block-skipping + fused backward.
+
+Two structural wins over ``flash_xla.py`` (the baseline):
+
+1. **Causal block skipping** — the (q-block × kv-block) iteration space is
+   enumerated as a *static lower-triangle pair list*; fully-masked block
+   pairs are never visited.  For causal attention this halves score/value
+   FLOPs — visible in the compiled HLO (the static analyzer counts the
+   pair-loop trip count), not just at runtime.
+
+2. **Fused backward** — one pass over the pair list computes dq, dk and
+   dv together, recomputing the probability block once per pair (the
+   baseline VJP walks the square twice and recomputes p in both the dq
+   and dk/dv loops).
+
+Cost model (units of one full-square score matmul):
+    baseline: fwd 2 + remat-refwd 2 + bwd (3 + 4) = 11
+    this:     (fwd 2 + refwd 2 + bwd 5) × ½ triangle = 4.5   (≈2.4×)
+
+Sliding-window masks restrict the pair list further (diagonal band).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+NEG_INF = -1e30
+
+
+def _pairs(nq: int, nk: int, bq: int, bk: int, causal: bool, window: int,
+           q_offset: int, order: str) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Static live (qi, ki) block pairs, ordered by qi ('q') or ki ('k'),
+    with an is-last-in-group flag."""
+    pairs = []
+    for qi in range(nq):
+        q_lo = q_offset + qi * bq
+        q_hi = q_lo + bq - 1
+        for ki in range(nk):
+            k_lo, k_hi = ki * bk, ki * bk + bk - 1
+            if causal and k_lo > q_hi:
+                continue
+            if window > 0 and q_lo - k_hi >= window:
+                continue
+            pairs.append((qi, ki))
+    if order == "k":
+        pairs.sort(key=lambda p: (p[1], p[0]))
+        group = [p[1] for p in pairs]
+    else:
+        pairs.sort(key=lambda p: (p[0], p[1]))
+        group = [p[0] for p in pairs]
+    last = [i + 1 == len(pairs) or group[i + 1] != group[i]
+            for i in range(len(pairs))]
+    qi = np.array([p[0] for p in pairs], np.int32)
+    ki = np.array([p[1] for p in pairs], np.int32)
+    return qi, ki, np.array(last, np.bool_)
+
+
+def _block_mask(qpb, kpb, T, causal, window):
+    m = kpb[None, :] < T
+    if causal:
+        m = m & (qpb[:, None] >= kpb[None, :])
+    if window > 0:
+        m = m & (qpb[:, None] - kpb[None, :] < window)
+    return m
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7))
+def flash_attention_tri(q, k, v, causal=True, window=0, q_offset=0,
+                        block_q=512, block_k=1024):
+    out, _ = _fwd(q, k, v, causal, window, q_offset, block_q, block_k)
+    return out
+
+
+def _prep(q, k, v, block_q, block_k):
+    B, S, H, D = q.shape
+    T, KH = k.shape[1], k.shape[2]
+    G = H // KH
+    bq, bk = min(block_q, S), min(block_k, T)
+    pad_q, pad_k = (-S) % bq, (-T) % bk
+    qp = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0), (0, 0))) if pad_q else q
+    kp = jnp.pad(k, ((0, 0), (0, pad_k), (0, 0), (0, 0))) if pad_k else k
+    vp = jnp.pad(v, ((0, 0), (0, pad_k), (0, 0), (0, 0))) if pad_k else v
+    nq, nk = (S + pad_q) // bq, (T + pad_k) // bk
+    qb = qp.astype(jnp.float32).reshape(B, nq, bq, KH, G, D)
+    kb = kp.astype(jnp.float32).reshape(B, nk, bk, KH, D)
+    vb = vp.astype(jnp.float32).reshape(B, nk, bk, KH, D)
+    return qb, kb, vb, (B, S, T, H, KH, G, D, bq, bk, nq, nk)
+
+
+def _fwd(q, k, v, causal, window, q_offset, block_q, block_k):
+    qb, kb, vb, dims = _prep(q, k, v, block_q, block_k)
+    B, S, T, H, KH, G, D, bq, bk, nq, nk = dims
+    scale = D ** -0.5
+    qi_l, ki_l, last_l = _pairs(nq, nk, bq, bk, causal, window, q_offset, "q")
+    qpos = q_offset + jnp.arange(nq * bq).reshape(nq, bq)
+    kpos = jnp.arange(nk * bk).reshape(nk, bk)
+
+    def step(carry, xs):
+        m_c, l_c, acc, o_all, lse_all = carry
+        qi, ki, is_last = xs
+        qblk = qb[:, qi] * scale  # (B,bq,KH,G,D)
+        kblk, vblk = kb[:, ki], vb[:, ki]
+        s = jnp.einsum("bqkgd,btkd->bkgqt", qblk, kblk)
+        s = jnp.where(
+            _block_mask(qpos[qi], kpos[ki], T, causal, window)[None, None, None],
+            s, NEG_INF)
+        m_new = jnp.maximum(m_c, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        alpha = jnp.exp(m_c - m_new)
+        l_new = l_c * alpha + jnp.sum(p, axis=-1)
+        acc_new = acc * alpha[..., None] + jnp.einsum("bkgqt,btkd->bkgqd", p, vblk)
+
+        def flush(args):
+            m_, l_, a_, o_all, lse_all = args
+            l_ = jnp.maximum(l_, 1e-30)
+            o_blk = (a_ / l_[..., None]).transpose(0, 3, 1, 2, 4)  # (B,bq,KH,G,D)
+            lse_blk = (m_ + jnp.log(l_)).transpose(0, 3, 1, 2)
+            o_all = jax.lax.dynamic_update_slice(
+                o_all, o_blk[:, None], (0, qi, 0, 0, 0, 0))
+            lse_all = jax.lax.dynamic_update_slice(
+                lse_all, lse_blk[:, None], (0, qi, 0, 0, 0))
+            z_m = jnp.full_like(m_, NEG_INF)
+            return z_m, jnp.zeros_like(l_), jnp.zeros_like(a_), o_all, lse_all
+
+        m_c, l_c, acc, o_all, lse_all = jax.lax.cond(
+            is_last, flush, lambda a: (a[0], a[1], a[2], a[3], a[4]),
+            (m_new, l_new, acc_new, o_all, lse_all))
+        return (m_c, l_c, acc, o_all, lse_all), None
+
+    m0 = jnp.full((B, KH, G, bq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, KH, G, bq), jnp.float32)
+    a0 = jnp.zeros((B, KH, G, bq, D), jnp.float32)
+    o0 = jnp.zeros((B, nq, bq, KH, G, D), jnp.float32)
+    lse0 = jnp.zeros((B, nq, bq, KH, G), jnp.float32)
+    (_, _, _, o_all, lse_all), _ = jax.lax.scan(
+        step, (m0, l0, a0, o0, lse0),
+        (jnp.asarray(qi_l), jnp.asarray(ki_l), jnp.asarray(last_l)))
+    out = o_all.reshape(B, nq * bq, H, D)[:, :S].astype(q.dtype)
+    lse = lse_all.reshape(B, nq * bq, KH, G)[:, :S]
+    return out, lse
+
+
+def _fwd_vjp(q, k, v, causal, window, q_offset, block_q, block_k):
+    out, lse = _fwd(q, k, v, causal, window, q_offset, block_q, block_k)
+    return out, (q, k, v, out, lse)
+
+
+def _bwd_vjp(causal, window, q_offset, block_q, block_k, res, do):
+    q, k, v, out, lse = res
+    qb, kb, vb, dims = _prep(q, k, v, block_q, block_k)
+    B, S, T, H, KH, G, D, bq, bk, nq, nk = dims
+    scale = D ** -0.5
+    dof = do.astype(jnp.float32)
+    delta = jnp.sum(dof * out.astype(jnp.float32), axis=-1)  # (B,S,H)
+    pad_q = nq * bq - S
+    dob = (jnp.pad(dof, ((0, 0), (0, pad_q), (0, 0), (0, 0))) if pad_q else dof
+           ).reshape(B, nq, bq, KH, G, D)
+    lseb = (jnp.pad(lse, ((0, 0), (0, pad_q), (0, 0), (0, 0))) if pad_q else lse
+            ).reshape(B, nq, bq, KH, G).transpose(0, 1, 3, 4, 2)
+    deltab = (jnp.pad(delta, ((0, 0), (0, pad_q), (0, 0))) if pad_q else delta
+              ).reshape(B, nq, bq, KH, G).transpose(0, 1, 3, 4, 2)
+    qpos = q_offset + jnp.arange(nq * bq).reshape(nq, bq)
+    kpos = jnp.arange(nk * bk).reshape(nk, bk)
+
+    # single fused pass, pairs grouped by kv block
+    qi_l, ki_l, last_l = _pairs(nq, nk, bq, bk, causal, window, q_offset, "k")
+
+    def step(carry, xs):
+        dq_all, dk_acc, dv_acc, dk_all, dv_all = carry
+        qi, ki, is_last = xs
+        qblk = qb[:, qi] * scale
+        kblk, vblk = kb[:, ki], vb[:, ki]
+        s = jnp.einsum("bqkgd,btkd->bkgqt", qblk, kblk)
+        s = jnp.where(
+            _block_mask(qpos[qi], kpos[ki], T, causal, window)[None, None, None],
+            s, NEG_INF)
+        p = jnp.exp(s - lseb[:, qi][..., None])  # (B,KH,G,bq,bk)
+        doblk = dob[:, qi]
+        dp = jnp.einsum("bqkgd,btkd->bkgqt", doblk, vblk)
+        ds = p * (dp - deltab[:, qi][..., None])
+        # dq (scatter-add into the q block's slot)
+        dq_blk = jnp.einsum("bkgqt,btkd->bqkgd", ds, kblk) * scale
+        cur = jax.lax.dynamic_slice(
+            dq_all, (0, qi, 0, 0, 0, 0), (B, 1, bq, KH, G, D))
+        dq_all = jax.lax.dynamic_update_slice(
+            dq_all, cur + dq_blk[:, None], (0, qi, 0, 0, 0, 0))
+        # dk/dv accumulate within the kv group
+        dk_acc = dk_acc + jnp.einsum("bkgqt,bqkgd->btkd", ds, qblk)  # scaled q
+        dv_acc = dv_acc + jnp.einsum("bkgqt,bqkgd->btkd", p, doblk)
+
+        def flush(args):
+            dk_a, dv_a, dk_all, dv_all = args
+            dk_all = jax.lax.dynamic_update_slice(
+                dk_all, dk_a[:, None], (0, ki, 0, 0, 0))
+            dv_all = jax.lax.dynamic_update_slice(
+                dv_all, dv_a[:, None], (0, ki, 0, 0, 0))
+            return jnp.zeros_like(dk_a), jnp.zeros_like(dv_a), dk_all, dv_all
+
+        dk_acc, dv_acc, dk_all, dv_all = jax.lax.cond(
+            is_last, flush, lambda a: a, (dk_acc, dv_acc, dk_all, dv_all))
+        return (dq_all, dk_acc, dv_acc, dk_all, dv_all), None
+
+    dq0 = jnp.zeros((B, nq, bq, KH, G, D), jnp.float32)
+    z = jnp.zeros((B, bk, KH, D), jnp.float32)
+    dk0 = jnp.zeros((B, nk, bk, KH, D), jnp.float32)
+    dv0 = jnp.zeros((B, nk, bk, KH, D), jnp.float32)
+    (dq_all, _, _, dk_all, dv_all), _ = jax.lax.scan(
+        step, (dq0, z, z, dk0, dv0),
+        (jnp.asarray(qi_l), jnp.asarray(ki_l), jnp.asarray(last_l)))
+    dq = dq_all.reshape(B, nq * bq, H, D)[:, :S].astype(q.dtype)
+    dk = dk_all.reshape(B, nk * bk, KH, D)[:, :T].astype(k.dtype)
+    dv = dv_all.reshape(B, nk * bk, KH, D)[:, :T].astype(v.dtype)
+    return dq, dk, dv
+
+
+flash_attention_tri.defvjp(_fwd_vjp, _bwd_vjp)

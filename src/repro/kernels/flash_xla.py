@@ -1,0 +1,166 @@
+"""Flash attention for the XLA path with a custom VJP.
+
+Plain autodiff through a chunked-attention scan *saves* every per-block
+probability tensor for the backward pass (observed: 12.9 GB per layer on
+the 16×16 dry-run).  The flash backward instead saves only (out, lse) —
+O(B·S·H·D) — and recomputes probabilities blockwise inside the backward
+loops, exactly like the TPU kernel's backward would.
+
+This is the model zoo's default attention; the Pallas kernel replaces the
+forward on real TPUs while this VJP structure stays identical.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def _blockify(x, bs):
+    # (B, S, ...) -> (B, n, bs, ...)
+    B, S = x.shape[0], x.shape[1]
+    pad = (-S) % bs
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad)) + ((0, 0),) * (x.ndim - 2))
+    n = (S + pad) // bs
+    return x.reshape((B, n, bs) + x.shape[2:]), pad
+
+
+def _mask(qpb, kpb, T, causal, window):
+    m = kpb[None, :] < T
+    if causal:
+        m = m & (qpb[:, None] >= kpb[None, :])
+    if window > 0:
+        m = m & (qpb[:, None] - kpb[None, :] < window)
+    return m
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7))
+def flash_attention_xla(q, k, v, causal=True, window=0, q_offset=0,
+                        block_q=512, block_k=1024):
+    out, _ = _fwd(q, k, v, causal, window, q_offset, block_q, block_k)
+    return out
+
+
+def _fwd(q, k, v, causal, window, q_offset, block_q, block_k):
+    B, S, H, D = q.shape
+    T, KH = k.shape[1], k.shape[2]
+    G = H // KH
+    bq, bk = min(block_q, S), min(block_k, T)
+    qb, _ = _blockify(q.astype(jnp.float32) * (D ** -0.5), bq)  # (B,nq,bq,H,D)
+    kb, _ = _blockify(k.astype(jnp.float32), bk)
+    vb, _ = _blockify(v.astype(jnp.float32), bk)
+    nq, nk = qb.shape[1], kb.shape[1]
+    qb = qb.reshape(B, nq, bq, KH, G, D)
+    qpos = q_offset + jnp.arange(nq * bq).reshape(nq, bq)
+    kpos = jnp.arange(nk * bk).reshape(nk, bk)
+
+    def q_block(qi):
+        qblk = qb[:, qi]  # (B,bq,KH,G,D)
+        qpb = qpos[qi]
+
+        def kv_step(carry, idx):
+            m_p, l_p, acc = carry
+            kblk, vblk, kpb = kb[:, idx], vb[:, idx], kpos[idx]
+            s = jnp.einsum("bqkgd,btkd->bkgqt", qblk, kblk)
+            s = jnp.where(_mask(qpb, kpb, T, causal, window)[None, None, None],
+                          s, NEG_INF)
+            m_c = jnp.maximum(m_p, jnp.max(s, axis=-1))
+            p = jnp.exp(s - m_c[..., None])
+            alpha = jnp.exp(m_p - m_c)
+            l_c = l_p * alpha + jnp.sum(p, axis=-1)
+            acc = acc * alpha[..., None] + jnp.einsum("bkgqt,btkd->bkgqd", p, vblk)
+            return (m_c, l_c, acc), None
+
+        m0 = jnp.full((B, KH, G, bq), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, KH, G, bq), jnp.float32)
+        a0 = jnp.zeros((B, KH, G, bq, D), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(kv_step, (m0, l0, a0), jnp.arange(nk))
+        l = jnp.maximum(l, 1e-30)
+        o = acc / l[..., None]
+        lse = m + jnp.log(l)  # (B,KH,G,bq)
+        return o.transpose(0, 3, 1, 2, 4), lse.transpose(0, 3, 1, 2)
+
+    o_blocks, lse_blocks = jax.lax.map(q_block, jnp.arange(nq))
+    out = o_blocks.transpose(1, 0, 2, 3, 4, 5).reshape(B, nq * bq, H, D)[:, :S]
+    lse = lse_blocks.transpose(1, 0, 2, 3, 4).reshape(B, nq * bq, KH, G)[:, :S]
+    return out.astype(q.dtype), lse
+
+
+def _fwd_vjp(q, k, v, causal, window, q_offset, block_q, block_k):
+    out, lse = _fwd(q, k, v, causal, window, q_offset, block_q, block_k)
+    return out, (q, k, v, out, lse)
+
+
+def _bwd_vjp(causal, window, q_offset, block_q, block_k, res, do):
+    q, k, v, out, lse = res
+    B, S, H, D = q.shape
+    T, KH = k.shape[1], k.shape[2]
+    G = H // KH
+    scale = D ** -0.5
+    bq, bk = min(block_q, S), min(block_k, T)
+
+    qf = q.astype(jnp.float32)
+    dof = do.astype(jnp.float32)
+    delta = jnp.sum(dof * out.astype(jnp.float32), axis=-1)  # (B,S,H)
+
+    qb, _ = _blockify(qf, bq)
+    dob, _ = _blockify(dof, bq)
+    lseb, _ = _blockify(lse, bq)  # (B,nq,bq,KH,G)
+    deltab, _ = _blockify(delta.reshape(B, S, KH, G), bq)
+    kb, _ = _blockify(k.astype(jnp.float32), bk)
+    vb, _ = _blockify(v.astype(jnp.float32), bk)
+    nq, nk = qb.shape[1], kb.shape[1]
+    qb = qb.reshape(B, nq, bq, KH, G, D)
+    dob = dob.reshape(B, nq, bq, KH, G, D)
+    qpos = q_offset + jnp.arange(nq * bq).reshape(nq, bq)
+    kpos = jnp.arange(nk * bk).reshape(nk, bk)
+
+    def p_block(qi, ki):
+        s = jnp.einsum("bqkgd,btkd->bkgqt", qb[:, qi] * scale, kb[:, ki])
+        msk = _mask(qpos[qi], kpos[ki], T, causal, window)
+        s = jnp.where(msk[None, None, None], s, NEG_INF)
+        return jnp.exp(s - lseb[:, qi].transpose(0, 2, 3, 1)[..., None])
+
+    # dq: loop q blocks, scan kv
+    def dq_block(qi):
+        def step(acc, ki):
+            p = p_block(qi, ki)  # (B,KH,G,bq,bk)
+            dp = jnp.einsum("bqkgd,btkd->bkgqt", dob[:, qi], vb[:, ki])
+            ds = p * (dp - deltab[:, qi].transpose(0, 2, 3, 1)[..., None])
+            acc = acc + jnp.einsum("bkgqt,btkd->bqkgd", ds, kb[:, ki])
+            return acc, None
+
+        acc0 = jnp.zeros((B, bq, KH, G, D), jnp.float32)
+        acc, _ = jax.lax.scan(step, acc0, jnp.arange(nk))
+        return acc * scale
+
+    dq = jax.lax.map(dq_block, jnp.arange(nq))  # (nq,B,bq,KH,G,D)
+    dq = dq.transpose(1, 0, 2, 3, 4, 5).reshape(B, nq * bq, H, D)[:, :S]
+
+    # dk/dv: loop kv blocks, scan q
+    def dkv_block(ki):
+        def step(carry, qi):
+            dk_acc, dv_acc = carry
+            p = p_block(qi, ki)
+            dv_acc = dv_acc + jnp.einsum("bkgqt,bqkgd->btkd", p, dob[:, qi])
+            dp = jnp.einsum("bqkgd,btkd->bkgqt", dob[:, qi], vb[:, ki])
+            ds = p * (dp - deltab[:, qi].transpose(0, 2, 3, 1)[..., None])
+            dk_acc = dk_acc + jnp.einsum("bkgqt,bqkgd->btkd", ds, qb[:, qi])
+            return (dk_acc, dv_acc), None
+
+        z = jnp.zeros((B, bk, KH, D), jnp.float32)
+        (dk_b, dv_b), _ = jax.lax.scan(step, (z, z), jnp.arange(nq))
+        return dk_b * scale, dv_b
+
+    dk_blocks, dv_blocks = jax.lax.map(dkv_block, jnp.arange(nk))
+    dk = dk_blocks.transpose(1, 0, 2, 3, 4).reshape(B, nk * bk, KH, D)[:, :T]
+    dv = dv_blocks.transpose(1, 0, 2, 3, 4).reshape(B, nk * bk, KH, D)[:, :T]
+    return dq.astype(q.dtype), dk.astype(k.dtype), dv.astype(v.dtype)
+
+
+flash_attention_xla.defvjp(_fwd_vjp, _bwd_vjp)

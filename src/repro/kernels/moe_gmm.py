@@ -1,0 +1,96 @@
+"""Grouped (ragged) matmul over expert-sorted tokens for TPU Pallas.
+
+MegaBlocks-style MoE expert compute without capacity padding: tokens are
+pre-sorted so expert ``e`` owns the contiguous row range
+[starts[e], starts[e] + sizes[e]).  The kernel walks (token-tile × expert)
+pairs; each token tile accumulates contributions from every expert whose
+range intersects it (at most a few), masking rows outside the range.  Tiles
+fully outside an expert's range are skipped with ``pl.when`` so the steady
+state is one (block_m × D) · (D × F) MXU matmul per live pair.
+
+Grid: (M/block_m, E) — expert axis innermost/sequential; the accumulator
+tile lives in VMEM scratch, flushed at e == E-1.
+
+Group offsets arrive via scalar-prefetch (SMEM) so index maps stay static.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _gmm_kernel(
+    starts_ref,  # SMEM (E,) i32 — scalar prefetch
+    ends_ref,  # SMEM (E,) i32 — scalar prefetch
+    x_ref,  # (block_m, D)
+    w_ref,  # (1, D, F)
+    o_ref,  # (block_m, F)
+    acc_scr,  # VMEM (block_m, F) f32
+    *,
+    block_m: int,
+    num_experts: int,
+):
+    ti = pl.program_id(0)
+    e = pl.program_id(1)
+
+    @pl.when(e == 0)
+    def _init():
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    row0 = ti * block_m
+    start = starts_ref[e]
+    end = ends_ref[e]
+    live = jnp.logical_and(row0 < end, row0 + block_m > start)
+
+    @pl.when(live)
+    def _compute():
+        rows = row0 + jax.lax.broadcasted_iota(jnp.int32, (block_m, 1), 0)
+        mask = jnp.logical_and(rows >= start, rows < end)  # (block_m, 1)
+        x = jnp.where(mask, x_ref[...].astype(jnp.float32), 0.0)
+        w = w_ref[0].astype(jnp.float32)  # (D, F)
+        acc_scr[...] += jax.lax.dot_general(
+            x, w, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+        )
+
+    @pl.when(e == num_experts - 1)
+    def _flush():
+        o_ref[...] = acc_scr[...].astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_m", "interpret"))
+def moe_gmm_sorted(
+    tokens: jax.Array,  # (M, D) expert-sorted
+    group_sizes: jax.Array,  # (E,) i32
+    w: jax.Array,  # (E, D, F)
+    *,
+    block_m: int = 256,
+    interpret: bool = False,
+) -> jax.Array:
+    M, D = tokens.shape
+    E, _, F = w.shape
+    assert M % block_m == 0, (M, block_m)
+    sizes = group_sizes.astype(jnp.int32)
+    starts = jnp.cumsum(sizes) - sizes
+    ends = starts + sizes
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(M // block_m, E),
+        in_specs=[
+            pl.BlockSpec((block_m, D), lambda t, e, starts, ends: (t, 0)),
+            pl.BlockSpec((1, D, F), lambda t, e, starts, ends: (e, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_m, F), lambda t, e, starts, ends: (t, 0)),
+        scratch_shapes=[pltpu.VMEM((block_m, F), jnp.float32)],
+    )
+    kernel = functools.partial(_gmm_kernel, block_m=block_m, num_experts=E)
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((M, F), tokens.dtype),
+        interpret=interpret,
+    )(starts, ends, tokens, w)

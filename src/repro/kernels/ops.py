@@ -1,0 +1,252 @@
+"""jit'd public wrappers around the Pallas kernels with oracle fallback.
+
+Backend selection (``set_backend`` / env ``REPRO_KERNEL_BACKEND``):
+
+  * ``ref``       — pure-jnp oracle (default: CPU container, dry-run lowering)
+  * ``interpret`` — Pallas kernels executed with ``interpret=True`` (CPU
+                    correctness validation of the TPU kernel bodies)
+  * ``tpu``       — compiled Pallas (the deployment target)
+
+Wrappers own all layout plumbing (BSHD↔BHSD transposes, lane padding to
+128, block padding) so both kernel and oracle see hardware-friendly
+shapes.
+"""
+from __future__ import annotations
+
+import os
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.flash_attention import flash_attention_bhsd
+from repro.kernels.mlstm_scan import mlstm_scan_bhsd
+from repro.kernels.ssm_scan import ssm_scan_bsd
+from repro.kernels.moe_gmm import moe_gmm_sorted
+
+_BACKEND = os.environ.get("REPRO_KERNEL_BACKEND", "ref")
+_VALID = ("ref", "interpret", "tpu")
+_ATTN_IMPL = os.environ.get("REPRO_ATTN_IMPL", "xla")  # xla | tri
+_SSM_CHUNK = 0  # 0 = per-step oracle scan; >0 = chunked fallback
+_FLASH_BQ, _FLASH_BK = 512, 1024
+
+
+def set_ssm_chunk(chunk: int) -> None:
+    global _SSM_CHUNK
+    _SSM_CHUNK = int(chunk)
+
+
+def set_flash_blocks(bq: int, bk: int) -> None:
+    global _FLASH_BQ, _FLASH_BK
+    _FLASH_BQ, _FLASH_BK = int(bq), int(bk)
+
+
+def set_attn_impl(name: str) -> None:
+    global _ATTN_IMPL
+    if name not in ("xla", "tri"):
+        raise ValueError(name)
+    _ATTN_IMPL = name
+
+
+def get_attn_impl() -> str:
+    return _ATTN_IMPL
+
+
+def set_backend(name: str) -> None:
+    global _BACKEND
+    if name not in _VALID:
+        raise ValueError(f"backend {name!r} not in {_VALID}")
+    _BACKEND = name
+
+
+def get_backend() -> str:
+    return _BACKEND
+
+
+def _pad_to(x: jax.Array, axis: int, mult: int) -> Tuple[jax.Array, int]:
+    size = x.shape[axis]
+    pad = (-size) % mult
+    if pad == 0:
+        return x, size
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths), size
+
+
+# --------------------------------------------------------------------------
+def flash_attention(
+    q: jax.Array,  # (B, S, H, D)
+    k: jax.Array,  # (B, T, KH, D)
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: int = 0,
+    q_offset: int = 0,
+    block_q: int = 256,
+    block_k: int = 256,
+) -> jax.Array:
+    if _BACKEND == "ref":
+        S, T = q.shape[1], k.shape[1]
+        if S * T <= 1024 * 1024:
+            return ref.attention(q, k, v, causal=causal, window=window,
+                                 q_offset=q_offset)
+        if _ATTN_IMPL == "tri":
+            from repro.kernels.flash_tri import flash_attention_tri
+
+            return flash_attention_tri(q, k, v, causal, window, q_offset,
+                                       _FLASH_BQ, _FLASH_BK)
+        from repro.kernels.flash_xla import flash_attention_xla
+
+        return flash_attention_xla(q, k, v, causal, window, q_offset,
+                                   _FLASH_BQ, _FLASH_BK)
+
+    B, S, H, D = q.shape
+    T = k.shape[1]
+    scale = D ** -0.5
+    bq = block_q if S >= block_q else S
+    bk = block_k if T >= block_k else T
+
+    qt = jnp.swapaxes(q, 1, 2)  # (B, H, S, D)
+    kt = jnp.swapaxes(k, 1, 2)
+    vt = jnp.swapaxes(v, 1, 2)
+    qt, _ = _pad_to(qt, 3, 128)
+    kt, _ = _pad_to(kt, 3, 128)
+    vt, _ = _pad_to(vt, 3, 128)
+    qt, s_orig = _pad_to(qt, 2, bq)
+    kt, t_orig = _pad_to(kt, 2, bk)
+    vt, _ = _pad_to(vt, 2, bk)
+
+    out = flash_attention_bhsd(
+        qt, kt, vt,
+        kv_seq=t_orig, scale=scale, causal=causal, window=window,
+        q_offset=q_offset, block_q=bq, block_k=bk,
+        interpret=(_BACKEND == "interpret"),
+    )
+    out = out[:, :, :s_orig, :D]
+    return jnp.swapaxes(out, 1, 2)
+
+
+def decode_attention(
+    q: jax.Array,  # (B, 1, H, D)
+    k: jax.Array,  # (B, T, KH, D) — cache
+    v: jax.Array,
+    *,
+    kv_len: jax.Array,  # (B,) valid lengths
+    window: int = 0,
+) -> jax.Array:
+    """Single-token attention against a cache.  XLA handles this well (it
+    is a bandwidth-bound matvec); all backends use the oracle path."""
+    return ref.attention(q, k, v, causal=False, window=0, kv_len=kv_len)
+
+
+# --------------------------------------------------------------------------
+def mlstm_scan(
+    q: jax.Array,  # (B, H, S, D)
+    k: jax.Array,
+    v: jax.Array,
+    i_pre: jax.Array,  # (B, H, S)
+    f_pre: jax.Array,
+    *,
+    chunk: int = 256,
+) -> jax.Array:
+    if _BACKEND == "ref":
+        h, _ = ref.mlstm_scan(q, k, v, i_pre, f_pre)
+        return h
+    S = q.shape[2]
+    c = min(chunk, S)
+    qp, s_orig = _pad_to(q, 2, c)
+    kp, _ = _pad_to(k, 2, c)
+    vp, _ = _pad_to(v, 2, c)
+    # padded steps: i gate -> -inf (no contribution), f gate -> +large (keep state)
+    pad = qp.shape[2] - S
+    if pad:
+        ip = jnp.pad(i_pre, ((0, 0), (0, 0), (0, pad)), constant_values=-1e30)
+        fp = jnp.pad(f_pre, ((0, 0), (0, 0), (0, pad)), constant_values=30.0)
+    else:
+        ip, fp = i_pre, f_pre
+    h = mlstm_scan_bhsd(qp, kp, vp, ip, fp, chunk=c, interpret=(_BACKEND == "interpret"))
+    return h[:, :, :s_orig]
+
+
+def mlstm_step(q, k, v, i_pre, f_pre, state):
+    """Single-token recurrent step (decode path — oracle recurrence)."""
+    h, state = ref.mlstm_scan(
+        q[:, :, None, :] if q.ndim == 3 else q,
+        k[:, :, None, :] if k.ndim == 3 else k,
+        v[:, :, None, :] if v.ndim == 3 else v,
+        i_pre[..., None] if i_pre.ndim == 2 else i_pre,
+        f_pre[..., None] if f_pre.ndim == 2 else f_pre,
+        initial=state,
+    )
+    return h[:, :, 0, :], state
+
+
+# --------------------------------------------------------------------------
+def ssm_scan(
+    x: jax.Array,  # (B, S, Din)
+    dt: jax.Array,
+    A: jax.Array,
+    Bmat: jax.Array,
+    Cmat: jax.Array,
+    D: jax.Array,
+    *,
+    block_d: int = 256,
+    chunk: int = 128,
+) -> jax.Array:
+    if _BACKEND == "ref":
+        if _SSM_CHUNK > 0:
+            from repro.kernels.ssm_vjp import ssm_scan_ckpt
+
+            return ssm_scan_ckpt(x, dt, A, Bmat, Cmat, D, _SSM_CHUNK)
+        y, _ = ref.ssm_scan(x, dt, A, Bmat, Cmat, D)
+        return y
+    Bsz, S, Din = x.shape
+    bd = min(block_d, Din)
+    c = min(chunk, S)
+    xp, d_orig = _pad_to(x, 2, bd)
+    dtp, _ = _pad_to(dt, 2, bd)
+    Ap, _ = _pad_to(A, 0, bd)
+    xp, s_orig = _pad_to(xp, 1, c)
+    dtp, _ = _pad_to(dtp, 1, c)
+    Bp, _ = _pad_to(Bmat, 1, c)
+    Cp, _ = _pad_to(Cmat, 1, c)
+    Dp, _ = _pad_to(D, 0, bd)
+    y = ssm_scan_bsd(
+        xp, dtp, Ap, Bp, Cp, Dp,
+        block_d=bd, chunk=c, interpret=(_BACKEND == "interpret"),
+    )
+    return y[:, :s_orig, :d_orig]
+
+
+def ssm_scan_with_state(x, dt, A, Bmat, Cmat, D):
+    """Prefill path: returns (y, final_state); honors the chunked
+    fallback knob (Pallas kernel path is train-oriented and stateless)."""
+    if _SSM_CHUNK > 0:
+        return ref.ssm_scan_chunked(x, dt, A, Bmat, Cmat, D, _SSM_CHUNK)
+    return ref.ssm_scan(x, dt, A, Bmat, Cmat, D)
+
+
+def ssm_step(x, dt, A, Bmat, Cmat, D, state):
+    """Single-token recurrent step for decode.  x,dt: (B, Din); B,C: (B, N)."""
+    y, state = ref.ssm_scan(
+        x[:, None], dt[:, None], A, Bmat[:, None], Cmat[:, None], D, initial=state
+    )
+    return y[:, 0], state
+
+
+# --------------------------------------------------------------------------
+def moe_gmm(
+    tokens: jax.Array,  # (M, D) expert-sorted
+    group_sizes: jax.Array,  # (E,)
+    w: jax.Array,  # (E, D, F)
+    *,
+    block_m: int = 256,
+) -> jax.Array:
+    if _BACKEND == "ref":
+        return ref.moe_gmm(tokens, group_sizes, w)
+    tp, m_orig = _pad_to(tokens, 0, block_m)
+    out = moe_gmm_sorted(
+        tp, group_sizes, w, block_m=block_m, interpret=(_BACKEND == "interpret")
+    )
+    return out[:m_orig]

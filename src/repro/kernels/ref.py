@@ -1,0 +1,301 @@
+"""Pure-jnp oracles for every Pallas kernel.
+
+These are the *reference semantics*: slow, simple, numerically careful.
+Kernel tests sweep shapes/dtypes and assert allclose against these; the
+model zoo uses them as the XLA fallback path (CPU container / dry-run).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+# --------------------------------------------------------------------------
+# Attention
+# --------------------------------------------------------------------------
+def attention(
+    q: jax.Array,  # (B, S, H, D)
+    k: jax.Array,  # (B, T, KH, D)
+    v: jax.Array,  # (B, T, KH, D)
+    *,
+    causal: bool = True,
+    window: int = 0,
+    q_offset: int = 0,
+    kv_len: Optional[jax.Array] = None,  # (B,) valid kv length (decode)
+) -> jax.Array:
+    """Multi-head attention with GQA, causal / sliding-window masking.
+
+    ``q_offset`` is the absolute position of q[0] (prefill continuation /
+    decode).  ``kv_len`` masks out cache slots >= kv_len[b].
+    """
+    B, S, H, D = q.shape
+    T, KH = k.shape[1], k.shape[2]
+    G = H // KH
+    qf = q.astype(jnp.float32) * (D ** -0.5)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    qf = qf.reshape(B, S, KH, G, D)
+    scores = jnp.einsum("bskgd,btkd->bkgst", qf, kf)  # (B, KH, G, S, T)
+
+    qpos = q_offset + jnp.arange(S)
+    kpos = jnp.arange(T)
+    mask = jnp.ones((S, T), dtype=bool)
+    if causal:
+        mask &= qpos[:, None] >= kpos[None, :]
+    if window > 0:
+        mask &= qpos[:, None] - kpos[None, :] < window
+    mask_b = jnp.broadcast_to(mask, (B, 1, 1, S, T))
+    if kv_len is not None:
+        mask_b = mask_b & (kpos[None, None, None, None, :] < kv_len[:, None, None, None, None])
+    scores = jnp.where(mask_b, scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgst,btkd->bskgd", probs, vf)
+    return out.reshape(B, S, H, D).astype(q.dtype)
+
+
+def attention_chunked(
+    q: jax.Array,  # (B, S, H, D)
+    k: jax.Array,  # (B, T, KH, D)
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: int = 0,
+    q_offset: int = 0,
+    block_q: int = 512,
+    block_k: int = 1024,
+) -> jax.Array:
+    """Flash-style attention in pure jnp: lax.scan over kv blocks with an
+    online softmax.  Same math as the Pallas kernel, O(S·block) memory —
+    this is the XLA fallback the model zoo uses so 32k-sequence cells do
+    not materialize S×T score tensors."""
+    B, S, H, D = q.shape
+    T, KH = k.shape[1], k.shape[2]
+    if S * T <= 4096 * 4096 // 16 or T <= block_k:
+        return attention(q, k, v, causal=causal, window=window, q_offset=q_offset)
+    G = H // KH
+    bq = min(block_q, S)
+    bk = min(block_k, T)
+    pad_q = (-S) % bq
+    pad_k = (-T) % bk
+    qp = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0), (0, 0))) if pad_q else q
+    kp = jnp.pad(k, ((0, 0), (0, pad_k), (0, 0), (0, 0))) if pad_k else k
+    vp = jnp.pad(v, ((0, 0), (0, pad_k), (0, 0), (0, 0))) if pad_k else v
+    Sp, Tp = S + pad_q, T + pad_k
+    nq, nk = Sp // bq, Tp // bk
+
+    qf = qp.astype(jnp.float32).reshape(B, nq, bq, KH, G, D) * (D ** -0.5)
+    kf = kp.astype(jnp.float32).reshape(B, nk, bk, KH, D)
+    vf = vp.astype(jnp.float32).reshape(B, nk, bk, KH, D)
+    qpos = q_offset + jnp.arange(Sp).reshape(nq, bq)
+    kpos = jnp.arange(Tp).reshape(nk, bk)
+
+    def process_q_block(qi):
+        qb = qf[:, qi]  # (B, bq, KH, G, D)
+        qpb = qpos[qi]  # (bq,)
+
+        def kv_step(carry, inputs):
+            m_prev, l_prev, acc = carry
+            kb, vb, kpb = inputs  # (B,bk,KH,D), (B,bk,KH,D), (bk,)
+            s = jnp.einsum("bqkgd,btkd->bkgqt", qb, kb)  # (B,KH,G,bq,bk)
+            mask = kpb[None, :] < T
+            if causal:
+                mask = mask & (qpb[:, None] >= kpb[None, :])
+            if window > 0:
+                mask = mask & (qpb[:, None] - kpb[None, :] < window)
+            s = jnp.where(mask[None, None, None], s, NEG_INF)
+            m_cur = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+            p = jnp.exp(s - m_cur[..., None])
+            alpha = jnp.exp(m_prev - m_cur)
+            l_cur = l_prev * alpha + jnp.sum(p, axis=-1)
+            acc = acc * alpha[..., None] + jnp.einsum("bkgqt,btkd->bkgqd", p, vb)
+            return (m_cur, l_cur, acc), None
+
+        m0 = jnp.full((B, KH, G, bq), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, KH, G, bq), jnp.float32)
+        a0 = jnp.zeros((B, KH, G, bq, D), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(
+            kv_step, (m0, l0, a0),
+            (kf.transpose(1, 0, 2, 3, 4), vf.transpose(1, 0, 2, 3, 4), kpos),
+        )
+        out = acc / jnp.maximum(l, 1e-30)[..., None]  # (B,KH,G,bq,D)
+        return out.transpose(0, 3, 1, 2, 4)  # (B,bq,KH,G,D)
+
+    blocks = jax.lax.map(process_q_block, jnp.arange(nq))  # (nq,B,bq,KH,G,D)
+    out = blocks.transpose(1, 0, 2, 3, 4, 5).reshape(B, Sp, H, D)
+    return out[:, :S].astype(q.dtype)
+
+
+# --------------------------------------------------------------------------
+# mLSTM (xLSTM matrix-memory cell) — exact sequential recurrence
+# --------------------------------------------------------------------------
+def mlstm_scan(
+    q: jax.Array,  # (B, H, S, D)
+    k: jax.Array,  # (B, H, S, D)
+    v: jax.Array,  # (B, H, S, DV)
+    i_pre: jax.Array,  # (B, H, S) input-gate preactivation (exp gate)
+    f_pre: jax.Array,  # (B, H, S) forget-gate preactivation (sigmoid gate)
+    initial: Optional[Tuple[jax.Array, jax.Array, jax.Array]] = None,
+) -> Tuple[jax.Array, Tuple[jax.Array, jax.Array, jax.Array]]:
+    """Stabilized mLSTM recurrence (xLSTM paper, eqs. 19–27).
+
+    Returns h: (B, H, S, DV) and final state (C, n, m).
+    """
+    B, H, S, D = q.shape
+    DV = v.shape[-1]
+    scale = D ** -0.5
+    qf, kf, vf = (x.astype(jnp.float32) for x in (q, k, v))
+    log_i = i_pre.astype(jnp.float32)
+    log_f = jax.nn.log_sigmoid(f_pre.astype(jnp.float32))
+
+    if initial is None:
+        C0 = jnp.zeros((B, H, D, DV), jnp.float32)
+        n0 = jnp.zeros((B, H, D), jnp.float32)
+        m0 = jnp.full((B, H), NEG_INF, jnp.float32)
+    else:
+        C0, n0, m0 = (x.astype(jnp.float32) for x in initial)
+
+    def step(carry, xs):
+        C, n, m = carry
+        qt, kt, vt, li, lf = xs  # (B,H,D), (B,H,D), (B,H,DV), (B,H), (B,H)
+        m_new = jnp.maximum(lf + m, li)
+        f_sc = jnp.exp(lf + m - m_new)[..., None]
+        i_sc = jnp.exp(li - m_new)[..., None]
+        C = f_sc[..., None] * C + i_sc[..., None] * (kt[..., :, None] * vt[..., None, :])
+        n = f_sc * n + i_sc * kt
+        qn = jnp.sum(n * qt, axis=-1) * scale  # (B, H)
+        denom = jnp.maximum(jnp.abs(qn), jnp.exp(-m_new))
+        h = jnp.einsum("bhd,bhdv->bhv", qt, C) * scale / denom[..., None]
+        return (C, n, m_new), h
+
+    xs = (
+        qf.transpose(2, 0, 1, 3),
+        kf.transpose(2, 0, 1, 3),
+        vf.transpose(2, 0, 1, 3),
+        log_i.transpose(2, 0, 1),
+        log_f.transpose(2, 0, 1),
+    )
+    (C, n, m), hs = jax.lax.scan(step, (C0, n0, m0), xs)
+    h = hs.transpose(1, 2, 0, 3).astype(v.dtype)  # (B, H, S, DV)
+    return h, (C, n, m)
+
+
+# --------------------------------------------------------------------------
+# Mamba-style selective state-space scan
+# --------------------------------------------------------------------------
+def ssm_scan(
+    x: jax.Array,  # (B, S, Din)
+    dt: jax.Array,  # (B, S, Din) — already softplus'd, > 0
+    A: jax.Array,  # (Din, N) — negative
+    Bmat: jax.Array,  # (B, S, N)
+    Cmat: jax.Array,  # (B, S, N)
+    D: jax.Array,  # (Din,)
+    initial: Optional[jax.Array] = None,  # (B, Din, N)
+) -> Tuple[jax.Array, jax.Array]:
+    """y_t = C_t · h_t + D x_t with h_t = exp(dt_t A) h_{t-1} + dt_t B_t x_t."""
+    Bsz, S, Din = x.shape
+    N = A.shape[-1]
+    xf, dtf = x.astype(jnp.float32), dt.astype(jnp.float32)
+    Af = A.astype(jnp.float32)
+    Bf, Cf = Bmat.astype(jnp.float32), Cmat.astype(jnp.float32)
+    h0 = (
+        jnp.zeros((Bsz, Din, N), jnp.float32)
+        if initial is None
+        else initial.astype(jnp.float32)
+    )
+
+    def step(h, xs):
+        xt, dtt, bt, ct = xs  # (B,Din),(B,Din),(B,N),(B,N)
+        decay = jnp.exp(dtt[..., None] * Af[None])  # (B, Din, N)
+        h = decay * h + (dtt * xt)[..., None] * bt[:, None, :]
+        y = jnp.einsum("bdn,bn->bd", h, ct)
+        return h, y
+
+    xs = (
+        xf.transpose(1, 0, 2),
+        dtf.transpose(1, 0, 2),
+        Bf.transpose(1, 0, 2),
+        Cf.transpose(1, 0, 2),
+    )
+    h, ys = jax.lax.scan(step, h0, xs)
+    y = ys.transpose(1, 0, 2) + xf * D.astype(jnp.float32)[None, None]
+    return y.astype(x.dtype), h
+
+
+def ssm_scan_chunked(
+    x: jax.Array,  # (B, S, Din)
+    dt: jax.Array,
+    A: jax.Array,  # (Din, N)
+    Bmat: jax.Array,
+    Cmat: jax.Array,
+    D: jax.Array,
+    chunk: int = 16,
+) -> Tuple[jax.Array, jax.Array]:
+    """Chunked selective scan: identical math to :func:`ssm_scan`, but the
+    sequence loop carries state once per *chunk* (inner steps unrolled).
+    This is the XLA-fallback mirror of the Pallas kernel's VMEM-resident
+    state: the (B, Din, N) carry crosses the loop boundary S/chunk times
+    instead of S times — ÷chunk HBM state traffic at the HLO level."""
+    Bsz, S, Din = x.shape
+    N = A.shape[-1]
+    pad = (-S) % chunk
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bmat = jnp.pad(Bmat, ((0, 0), (0, pad), (0, 0)))
+        Cmat = jnp.pad(Cmat, ((0, 0), (0, pad), (0, 0)))
+    nc = (S + pad) // chunk
+    xf = x.astype(jnp.float32).reshape(Bsz, nc, chunk, Din)
+    dtf = dt.astype(jnp.float32).reshape(Bsz, nc, chunk, Din)
+    Bf = Bmat.astype(jnp.float32).reshape(Bsz, nc, chunk, N)
+    Cf = Cmat.astype(jnp.float32).reshape(Bsz, nc, chunk, N)
+    Af = A.astype(jnp.float32)
+
+    def chunk_step(h, xs):
+        xc, dtc, bc, cc = xs  # (B, chunk, ...)
+        ys = []
+        for t in range(chunk):  # unrolled: state stays in registers/fusion
+            decay = jnp.exp(dtc[:, t][..., None] * Af[None])
+            h = decay * h + (dtc[:, t] * xc[:, t])[..., None] * bc[:, t][:, None, :]
+            # mul+sum (not einsum): keeps the whole unrolled chunk one
+            # elementwise fusion — no top-level dot streaming h to HBM
+            ys.append(jnp.sum(h * cc[:, t][:, None, :], axis=-1))
+        return h, jnp.stack(ys, axis=1)
+
+    h0 = jnp.zeros((Bsz, Din, N), jnp.float32)
+    h, ys = jax.lax.scan(
+        chunk_step, h0,
+        (xf.transpose(1, 0, 2, 3), dtf.transpose(1, 0, 2, 3),
+         Bf.transpose(1, 0, 2, 3), Cf.transpose(1, 0, 2, 3)),
+    )
+    y = ys.transpose(1, 0, 2, 3).reshape(Bsz, nc * chunk, Din)[:, :S]
+    y = y + x.astype(jnp.float32)[:, :S] * D.astype(jnp.float32)[None, None]
+    return y.astype(x.dtype), h
+
+
+# --------------------------------------------------------------------------
+# MoE grouped matmul over expert-sorted tokens
+# --------------------------------------------------------------------------
+def moe_gmm(
+    tokens: jax.Array,  # (M, D) sorted so that expert e's rows are contiguous
+    group_sizes: jax.Array,  # (E,) int32, sum == M (padding rows -> size 0 region ok)
+    w: jax.Array,  # (E, D, F)
+) -> jax.Array:
+    """out[i] = tokens[i] @ w[expert_of_row(i)]."""
+    M, Dd = tokens.shape
+    E = w.shape[0]
+    starts = jnp.cumsum(group_sizes) - group_sizes  # (E,)
+    row = jnp.arange(M)
+    # expert id per row: number of starts <= row (right-side bucket)
+    eid = jnp.sum(row[:, None] >= starts[None, :], axis=-1) - 1  # (M,)
+    eid = jnp.clip(eid, 0, E - 1)
+    onehot = jax.nn.one_hot(eid, E, dtype=jnp.float32)  # (M, E)
+    tf = tokens.astype(jnp.float32)
+    wf = w.astype(jnp.float32)
+    out = jnp.einsum("me,md,edf->mf", onehot, tf, wf)
+    # rows beyond total tokens (sum(group_sizes) < M) still map to last expert;
+    # callers treat them as padding.
+    return out.astype(tokens.dtype)

@@ -1,0 +1,95 @@
+"""Mamba-style selective state-space scan for TPU Pallas.
+
+    h_t = exp(dt_t ⊙ A) h_{t-1} + (dt_t ⊙ x_t) ⊗ B_t
+    y_t = h_t · C_t + D ⊙ x_t
+
+The time recurrence is sequential; channels are embarrassingly parallel.
+TPU adaptation: tile the channel dimension across the grid (each grid row
+owns a (block_d, N) state slab resident in VMEM) and walk the sequence in
+chunks along the innermost (sequential) grid axis, with an inner
+``fori_loop`` over the chunk's timesteps.  All per-step work is VPU
+elementwise + a tiny (block_d × N) reduction — the kernel exists to keep
+the state in VMEM across the whole sequence instead of bouncing it to HBM
+every step (the XLA scan fallback does exactly that bounce).
+
+Grid: (B, Din/block_d, S/chunk) — chunk axis innermost/sequential.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssm_kernel(
+    x_ref,  # (1, chunk, bd)
+    dt_ref,  # (1, chunk, bd)
+    A_ref,  # (bd, N)
+    B_ref,  # (1, chunk, N)
+    C_ref,  # (1, chunk, N)
+    y_ref,  # out (1, chunk, bd)
+    h_scr,  # VMEM (bd, N) f32
+    *,
+    chunk: int,
+):
+    ci = pl.program_id(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        h_scr[...] = jnp.zeros_like(h_scr)
+
+    A = A_ref[...].astype(jnp.float32)  # (bd, N)
+
+    def step(t, _):
+        xt = x_ref[0, t, :].astype(jnp.float32)  # (bd,)
+        dtt = dt_ref[0, t, :].astype(jnp.float32)  # (bd,)
+        bt = B_ref[0, t, :].astype(jnp.float32)  # (N,)
+        ct = C_ref[0, t, :].astype(jnp.float32)  # (N,)
+        h = h_scr[...]
+        decay = jnp.exp(dtt[:, None] * A)  # (bd, N)
+        h = decay * h + (dtt * xt)[:, None] * bt[None, :]
+        h_scr[...] = h
+        y = jnp.sum(h * ct[None, :], axis=-1)  # (bd,)
+        y_ref[0, t, :] = y.astype(y_ref.dtype)
+        return 0
+
+    jax.lax.fori_loop(0, chunk, step, 0)
+
+
+@functools.partial(jax.jit, static_argnames=("block_d", "chunk", "interpret"))
+def ssm_scan_bsd(
+    x: jax.Array,  # (B, S, Din)
+    dt: jax.Array,  # (B, S, Din)
+    A: jax.Array,  # (Din, N)
+    Bmat: jax.Array,  # (B, S, N)
+    Cmat: jax.Array,  # (B, S, N)
+    D: jax.Array,  # (Din,)
+    *,
+    block_d: int = 256,
+    chunk: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    Bsz, S, Din = x.shape
+    N = A.shape[-1]
+    assert Din % block_d == 0 and S % chunk == 0, (Din, block_d, S, chunk)
+    grid = (Bsz, Din // block_d, S // chunk)
+    kernel = functools.partial(_ssm_kernel, chunk=chunk)
+    y = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, chunk, block_d), lambda b, d, c: (b, c, d)),
+            pl.BlockSpec((1, chunk, block_d), lambda b, d, c: (b, c, d)),
+            pl.BlockSpec((block_d, N), lambda b, d, c: (d, 0)),
+            pl.BlockSpec((1, chunk, N), lambda b, d, c: (b, c, 0)),
+            pl.BlockSpec((1, chunk, N), lambda b, d, c: (b, c, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, chunk, block_d), lambda b, d, c: (b, c, d)),
+        out_shape=jax.ShapeDtypeStruct((Bsz, S, Din), x.dtype),
+        scratch_shapes=[pltpu.VMEM((block_d, N), jnp.float32)],
+        interpret=interpret,
+    )(x, dt, A, Bmat, Cmat)
+    return y + x * D[None, None, :].astype(x.dtype)

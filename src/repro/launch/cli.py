@@ -1,0 +1,161 @@
+"""`repro` CLI — the `adviser run` analogue.
+
+    # run a curated workflow by name (non-expert path)
+    python -m repro.launch.cli run train-qwen2-1.5b --steps 20
+
+    # intent-based resource selection (no hardware names)
+    python -m repro.launch.cli plan --arch glm4-9b --shape train_4k \
+        --goal production --budget 400
+
+    # expert path: explicit slice + mesh (paper's third CLI example)
+    python -m repro.launch.cli plan --arch glm4-9b --shape train_4k \
+        --slice v5e-256 --mesh 16,16
+
+    # catalog / templates / runs
+    python -m repro.launch.cli catalog
+    python -m repro.launch.cli templates
+    python -m repro.launch.cli runs --runs-dir runs
+    python -m repro.launch.cli compare RUN_A RUN_B
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import sys
+
+
+def cmd_plan(args) -> None:
+    from repro.core import ResourceIntent, plan
+
+    intent = ResourceIntent(
+        arch=args.arch, shape=args.shape, goal=args.goal,
+        budget_usd_per_hour=args.budget,
+        chip_generation=args.chip,
+        min_chips=args.min_chips, max_chips=args.max_chips,
+        allow_multi_pod=not args.no_multi_pod,
+        slice_name=args.slice,
+        mesh_shape=tuple(int(x) for x in args.mesh.split(",")) if args.mesh else None,
+    )
+    choices = plan(intent, top_k=args.top_k)
+    if not choices:
+        print("no feasible plan under the given constraints")
+        sys.exit(1)
+    print(f"intent: {intent}")
+    print(f"top {len(choices)} plans ({args.goal}):")
+    for i, c in enumerate(choices):
+        print(f"  #{i+1} {c.summary}")
+
+
+def cmd_run(args) -> None:
+    from repro.core import REGISTRY, ProvenanceStore, run_workflow
+
+    t = REGISTRY.get(args.template, args.version)
+    if args.override:
+        overrides = {}
+        for kv in args.override:
+            k, v = kv.split("=", 1)
+            try:
+                v = json.loads(v)
+            except json.JSONDecodeError:
+                pass
+            overrides[k] = v
+        t = t.with_overrides(**overrides)
+    store = ProvenanceStore(args.runs_dir)
+    res = run_workflow(t, store, user=args.user, workspace=args.workspace,
+                       steps_override=args.steps)
+    print(f"run {res.record.run_id}: ok={res.ok}")
+    for name, (ok, detail) in res.checks.items():
+        print(f"  check {name:20s} {'PASS' if ok else 'FAIL'}  {detail}")
+    if res.plan_choice:
+        print(f"  plan: {res.plan_choice.summary}")
+
+
+def cmd_catalog(args) -> None:
+    from repro.core import CATALOG, catalog_summary
+
+    print(json.dumps(catalog_summary(), indent=1))
+    for s in CATALOG:
+        print(f"  {s.name:>14s} chips={s.total_chips:5d} "
+              f"pods={s.num_pods} ${s.price_per_hour:9.2f}/h")
+
+
+def cmd_templates(args) -> None:
+    from repro.core import REGISTRY
+
+    for name, version, desc in REGISTRY.list():
+        print(f"  {name:28s} v{version:8s} {desc}")
+
+
+def cmd_runs(args) -> None:
+    from repro.core import ProvenanceStore
+
+    store = ProvenanceStore(args.runs_dir)
+    for run_id in store.list_runs():
+        rec = store.load(run_id)
+        hist = rec.metrics()
+        last = hist[-1] if hist else {}
+        print(f"  {run_id:48s} steps={len(hist):4d} "
+              f"loss={last.get('loss', float('nan')):.4f}")
+
+
+def cmd_compare(args) -> None:
+    from repro.core import ProvenanceStore
+
+    store = ProvenanceStore(args.runs_dir)
+    print(json.dumps(store.compare(args.run_a, args.run_b), indent=1, default=str))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(prog="repro", description=__doc__,
+                                 formatter_class=argparse.RawDescriptionHelpFormatter)
+    sub = ap.add_subparsers(dest="cmd", required=True)
+
+    p = sub.add_parser("plan", help="intent -> ranked execution plans")
+    p.add_argument("--arch", required=True)
+    p.add_argument("--shape", default="train_4k")
+    p.add_argument("--goal", default="production",
+                   choices=["production", "quick_test", "exploration"])
+    p.add_argument("--budget", type=float, default=None, help="$ per hour cap")
+    p.add_argument("--chip", default=None, choices=[None, "v4", "v5e", "v5p"])
+    p.add_argument("--min-chips", type=int, default=None)
+    p.add_argument("--max-chips", type=int, default=None)
+    p.add_argument("--no-multi-pod", action="store_true")
+    p.add_argument("--slice", default=None, help="expert override: slice name")
+    p.add_argument("--mesh", default=None, help="expert override: e.g. 16,16")
+    p.add_argument("--top-k", type=int, default=5)
+    p.set_defaults(fn=cmd_plan)
+
+    p = sub.add_parser("run", help="run a workflow template")
+    p.add_argument("template")
+    p.add_argument("--version", default=None)
+    p.add_argument("--steps", type=int, default=None)
+    p.add_argument("--override", action="append", default=[],
+                   help="param injection, e.g. optimizer.lr=0.001")
+    p.add_argument("--user", default="anonymous")
+    p.add_argument("--workspace", default="default")
+    p.add_argument("--runs-dir", default="runs")
+    p.set_defaults(fn=cmd_run)
+
+    p = sub.add_parser("catalog", help="list slice types")
+    p.set_defaults(fn=cmd_catalog)
+
+    p = sub.add_parser("templates", help="list workflow templates")
+    p.set_defaults(fn=cmd_templates)
+
+    p = sub.add_parser("runs", help="list recorded runs")
+    p.add_argument("--runs-dir", default="runs")
+    p.set_defaults(fn=cmd_runs)
+
+    p = sub.add_parser("compare", help="diff two runs (config + metrics)")
+    p.add_argument("run_a")
+    p.add_argument("run_b")
+    p.add_argument("--runs-dir", default="runs")
+    p.set_defaults(fn=cmd_compare)
+
+    args = ap.parse_args()
+    args.fn(args)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,162 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# ^ MUST precede every other import: jax locks the device count at first
+# init, and the dry-run needs 512 host devices for the production meshes.
+
+import argparse  # noqa: E402
+import json  # noqa: E402
+import time  # noqa: E402
+import traceback  # noqa: E402
+from typing import Dict, List, Optional  # noqa: E402
+
+import jax  # noqa: E402
+
+from repro.configs import ARCHS, SHAPES, all_cells  # noqa: E402
+from repro.launch.cells import analyze_compiled, build_cell, default_plan  # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+
+"""Multi-pod dry-run (assignment deliverable e).
+
+For every live (architecture × input-shape) cell, lower + compile the
+step on the single-pod 16×16 mesh AND the 2×16×16 multi-pod mesh, print
+``memory_analysis()`` / ``cost_analysis()`` and record collective traffic
+parsed from the partitioned HLO.  Results accumulate in a JSON artifact
+(default ``dryrun_results.json``) consumed by the roofline benchmark and
+EXPERIMENTS.md.
+"""
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             plan_kw: Optional[dict] = None,
+             moment_dtype: str = "float32",
+             hlo_dir: Optional[str] = None,
+             key: str = "") -> Dict:
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    from repro.configs import get_config
+    from repro.train import OptimizerConfig
+    plan = default_plan(get_config(arch), mesh, **(plan_kw or {}))
+    opt_cfg = OptimizerConfig(moment_dtype=moment_dtype)
+    t0 = time.time()
+    cell = build_cell(arch, shape_name, mesh, plan, opt_cfg)
+    with mesh:
+        lowered = cell.fn.lower(*cell.args)
+        t_lower = time.time() - t0
+        t1 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t1
+    if hlo_dir:
+        import gzip
+        os.makedirs(hlo_dir, exist_ok=True)
+        fname = key.replace("|", "__").replace("/", "_") + ".hlo.gz"
+        with gzip.open(os.path.join(hlo_dir, fname), "wt") as f:
+            f.write(compiled.as_text())
+    stats = analyze_compiled(compiled)
+    rec = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": cell.mesh_desc,
+        "multi_pod": multi_pod,
+        "kind": cell.kind,
+        "plan": {
+            "remat": cell.plan.remat,
+            "microbatch": cell.plan.microbatch,
+            "fsdp": cell.plan.fsdp,
+            "attn_impl": cell.plan.attn_impl,
+            "seq_shard_attn": cell.plan.seq_shard_attn,
+            "moment_dtype": moment_dtype,
+            "dp_axes": list(cell.plan.dp_axes),
+            "logical": {k: str(v) for k, v in cell.plan.logical.items()},
+        },
+        "lower_s": round(t_lower, 2),
+        "compile_s": round(t_compile, 2),
+        **stats,
+        "ok": True,
+    }
+    del compiled, lowered
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default=None, help="single arch id (default: all)")
+    ap.add_argument("--shape", default=None, help="single shape (default: all)")
+    ap.add_argument("--mesh", default="both", choices=["single", "multi", "both"])
+    ap.add_argument("--out", default="dryrun_results.json")
+    ap.add_argument("--force", action="store_true", help="recompute cached cells")
+    ap.add_argument("--remat", default="full")
+    ap.add_argument("--microbatch", type=int, default=1)
+    ap.add_argument("--attn-impl", default="xla", choices=["xla", "tri"])
+    ap.add_argument("--seq-shard-attn", action="store_true")
+    ap.add_argument("--compress-grads", action="store_true")
+    ap.add_argument("--moment-dtype", default="float32")
+    ap.add_argument("--tag", default="baseline", help="result-set tag")
+    ap.add_argument("--hlo-dir", default="hlo_artifacts",
+                    help="save gzipped partitioned HLO per cell ('' = off)")
+    args = ap.parse_args()
+
+    results: Dict[str, Dict] = {}
+    if os.path.exists(args.out):
+        with open(args.out) as f:
+            results = json.load(f)
+
+    cells = [
+        (a, s) for a, s, ok, _ in all_cells()
+        if ok and (args.arch is None or a == args.arch)
+        and (args.shape is None or s == args.shape)
+    ]
+    skips = [(a, s, why) for a, s, ok, why in all_cells() if not ok]
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+
+    print(f"dry-run: {len(cells)} live cells × {len(meshes)} meshes "
+          f"({len(skips)} documented skips), devices={jax.device_count()}")
+
+    plan_kw = {"remat": args.remat, "microbatch": args.microbatch,
+               "attn_impl": args.attn_impl,
+               "seq_shard_attn": args.seq_shard_attn,
+               "compress_grads": args.compress_grads}
+    n_done = n_fail = 0
+    for arch, shape in cells:
+        for mp in meshes:
+            key = f"{args.tag}|{arch}|{shape}|{'2x16x16' if mp else '16x16'}"
+            if key in results and results[key].get("ok") and not args.force:
+                print(f"[cache] {key}")
+                continue
+            print(f"[run  ] {key} ...", flush=True)
+            try:
+                rec = run_cell(arch, shape, mp, plan_kw, args.moment_dtype,
+                               args.hlo_dir or None, key)
+                rec["tag"] = args.tag
+                results[key] = rec
+                n_done += 1
+                mem_gb = rec.get("temp_size_in_bytes", 0) / 1e9
+                arg_gb = rec.get("argument_size_in_bytes", 0) / 1e9
+                print(
+                    f"        ok: compile={rec['compile_s']:.1f}s "
+                    f"flops={rec.get('flops', 0):.3e} "
+                    f"args={arg_gb:.2f}GB temp={mem_gb:.2f}GB "
+                    f"coll={rec['collectives']['total_operand_bytes']/1e9:.2f}GB/dev "
+                    f"({rec['collectives']['total_ops']} ops)"
+                )
+            except Exception as e:
+                n_fail += 1
+                results[key] = {
+                    "arch": arch, "shape": shape, "tag": args.tag,
+                    "multi_pod": mp, "ok": False,
+                    "error": f"{type(e).__name__}: {e}",
+                }
+                print(f"        FAIL: {type(e).__name__}: {e}")
+                traceback.print_exc(limit=3)
+            with open(args.out, "w") as f:
+                json.dump(results, f, indent=1)
+
+    results["_skips"] = [
+        {"arch": a, "shape": s, "reason": why} for a, s, why in skips
+    ]
+    with open(args.out, "w") as f:
+        json.dump(results, f, indent=1)
+    print(f"done: {n_done} compiled, {n_fail} failed -> {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,100 @@
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+
+"""Perf-iteration runner: compile tagged plan variants of one cell and
+print the roofline-term deltas vs the baseline tag.
+
+    PYTHONPATH=src python -m repro.launch.hillclimb \
+        --arch qwen2-1.5b --shape train_4k --mesh single \
+        --tag tri-attn --attn-impl tri
+
+Results accumulate in the same dryrun_results.json, tagged; the roofline
+benchmark and EXPERIMENTS.md §Perf read them side by side.
+"""
+
+import argparse  # noqa: E402
+import json  # noqa: E402
+import sys  # noqa: E402
+
+from repro.launch.dryrun import run_cell  # noqa: E402
+
+
+def term_summary(rec):
+    st = rec.get("hlo_stats", {})
+    PEAK, HBM, ICI = 197e12, 819e9, 50e9
+    c = st.get("flops", 0) / PEAK
+    m = st.get("hbm_bytes", 0) / HBM
+    x = st.get("total_collective_bytes", 0) / ICI
+    return {
+        "compute_ms": c * 1e3, "memory_ms": m * 1e3, "collective_ms": x * 1e3,
+        "step_bound_ms": max(c, m, x) * 1e3,
+        "temp_gb": rec.get("temp_size_in_bytes", 0) / 1e9,
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--mesh", default="single", choices=["single", "multi"])
+    ap.add_argument("--tag", required=True)
+    ap.add_argument("--baseline-tag", default="baseline")
+    ap.add_argument("--out", default="dryrun_results.json")
+    ap.add_argument("--hlo-dir", default="hlo_artifacts")
+    ap.add_argument("--remat", default="full")
+    ap.add_argument("--microbatch", type=int, default=2)
+    ap.add_argument("--attn-impl", default="xla", choices=["xla", "tri"])
+    ap.add_argument("--seq-shard-attn", action="store_true")
+    ap.add_argument("--compress-grads", action="store_true")
+    ap.add_argument("--no-fsdp", action="store_true")
+    ap.add_argument("--moment-dtype", default="float32")
+    ap.add_argument("--ssm-chunk", type=int, default=0)
+    ap.add_argument("--moe-impl", default="scatter", choices=["scatter", "shard_map"])
+    ap.add_argument("--flash-bq", type=int, default=512)
+    ap.add_argument("--flash-bk", type=int, default=1024)
+    args = ap.parse_args()
+
+    plan_kw = {"remat": args.remat, "microbatch": args.microbatch,
+               "attn_impl": args.attn_impl,
+               "seq_shard_attn": args.seq_shard_attn,
+               "compress_grads": args.compress_grads,
+               "ssm_chunk": args.ssm_chunk,
+               "moe_impl": args.moe_impl,
+               "flash_block_q": args.flash_bq,
+               "flash_block_k": args.flash_bk}
+    if args.no_fsdp:
+        plan_kw["fsdp"] = False
+    mp = args.mesh == "multi"
+    mesh_desc = "2x16x16" if mp else "16x16"
+    key = f"{args.tag}|{args.arch}|{args.shape}|{mesh_desc}"
+
+    results = {}
+    if os.path.exists(args.out):
+        results = json.load(open(args.out))
+
+    print(f"[hillclimb] {key} plan={plan_kw}", flush=True)
+    rec = run_cell(args.arch, args.shape, mp, plan_kw, args.moment_dtype,
+                   args.hlo_dir or None, key)
+    rec["tag"] = args.tag
+    results[key] = rec
+    with open(args.out, "w") as f:
+        json.dump(results, f, indent=1)
+
+    new = term_summary(rec)
+    base_key = f"{args.baseline_tag}|{args.arch}|{args.shape}|{mesh_desc}"
+    base = results.get(base_key)
+    print(f"\n{'term':16s} {'baseline':>12s} {'this':>12s} {'delta':>8s}")
+    if base and base.get("ok"):
+        old = term_summary(base)
+        for k in new:
+            b, n = old[k], new[k]
+            d = (n - b) / b * 100 if b else float("nan")
+            print(f"{k:16s} {b:12.2f} {n:12.2f} {d:+7.1f}%")
+    else:
+        for k, v in new.items():
+            print(f"{k:16s} {'-':>12s} {v:12.2f}")
+    print(f"compile_s={rec['compile_s']}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,317 @@
+"""Trip-count-aware static analysis of partitioned HLO.
+
+XLA's ``HloCostAnalysis`` (what ``compiled.cost_analysis()`` exposes)
+counts while-loop bodies ONCE — with scan-over-layers that undercounts
+FLOPs and collective traffic by ~num_layers×.  This analyzer parses the
+optimized HLO text, recovers loop trip counts from the loop-condition
+``compare(iv, constant)`` pattern, propagates call-site multiplicities
+through the computation graph (while bodies, fusions, calls), and
+accumulates:
+
+  * dot FLOPs           (2 · prod(result dims) · contraction size)
+  * HBM traffic         (operand + result bytes of every non-fusion-internal op)
+  * collective operand bytes, by kind and mesh-axis group size
+
+Everything is per-device (the module is the SPMD-partitioned program).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "s64": 8, "u64": 8,
+    "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1, "pred": 1,
+    "c64": 8, "c128": 16,
+}
+
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?(%[\w.\-]+)\s+=\s+(.*)$")
+_TYPE_RE = re.compile(r"^(\(?)((?:[a-z0-9]+\[[0-9,]*\](?:\{[^}]*\})?(?:,\s*)?|\s*/\*index=\d+\*/\s*)+)\)?\s+([\w\-\$]+)\(")
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_COMP_HEAD_RE = re.compile(r"^(?:ENTRY\s+)?(%[\w.\-]+)\s+\(.*\)\s+->")
+_OPERAND_RE = re.compile(r"(%[\w.\-]+)")
+_ATTR_COMP_RE = re.compile(r"(?:condition|body|to_apply|calls)=(%[\w.\-]+)")
+_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+_BATCH_RE = re.compile(r"lhs_batch_dims=\{([0-9,]*)\}")
+_CONST_RE = re.compile(r"constant\((\d+)\)")
+_GROUPS_RE = re.compile(r"replica_groups=\{\{([0-9]+(?:,[0-9]+)*)")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+_SKIP_OPS = {
+    "parameter", "get-tuple-element", "tuple", "bitcast", "constant",
+    "iota", "after-all", "partition-id", "replica-id", "copy-start",
+    "copy-done",
+    # control flow: the op's own operand tuple is not HBM traffic — its
+    # body's ops are counted (with the loop-trip multiplicity)
+    "while", "conditional", "call",
+}
+
+_COLL_KINDS = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+
+def _shape_list(type_str: str) -> List[Tuple[str, List[int]]]:
+    out = []
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt in _DTYPE_BYTES:
+            out.append((dt, [int(d) for d in dims.split(",") if d]))
+    return out
+
+
+def _bytes_of(shapes: List[Tuple[str, List[int]]]) -> int:
+    total = 0
+    for dt, dims in shapes:
+        n = 1
+        for d in dims:
+            n *= d
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclasses.dataclass
+class OpInfo:
+    name: str
+    op: str
+    result: List[Tuple[str, List[int]]]
+    line: str
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    ops: List[OpInfo]
+    root_line: str = ""
+
+
+def _parse_computations(text: str) -> Dict[str, Computation]:
+    comps: Dict[str, Computation] = {}
+    cur: Optional[Computation] = None
+    for line in text.splitlines():
+        if not line.strip():
+            continue
+        if not line.startswith(" "):
+            m = _COMP_HEAD_RE.match(line.replace("ENTRY ", "ENTRY "))
+            if line.startswith("ENTRY") or line.startswith("%"):
+                m = _COMP_HEAD_RE.match(line[6:] if line.startswith("ENTRY ") else line)
+                if m:
+                    cur = Computation(m.group(1), [])
+                    comps[m.group(1)] = cur
+                    if line.startswith("ENTRY"):
+                        comps["__entry__"] = cur
+            continue
+        if cur is None:
+            continue
+        dm = _DEF_RE.match(line)
+        if not dm:
+            continue
+        name, rhs = dm.group(1), dm.group(2)
+        tm = _TYPE_RE.match(rhs)
+        if not tm:
+            continue
+        op = tm.group(3)
+        result = _shape_list(tm.group(2))
+        cur.ops.append(OpInfo(name, op, result, line))
+        if line.lstrip().startswith("ROOT"):
+            cur.root_line = line
+    return comps
+
+
+def _symbol_table(comps: Dict[str, Computation]) -> Dict[str, List[Tuple[str, List[int]]]]:
+    table: Dict[str, List[Tuple[str, List[int]]]] = {}
+    for c in comps.values():
+        if c.name == "__entry__":
+            continue
+        for op in c.ops:
+            table[op.name] = op.result
+    return table
+
+
+def _param_shapes(comps, line_cache={}):
+    return
+
+
+def _trip_count(cond: Computation) -> int:
+    """Loop bound from the condition's ROOT compare against a constant."""
+    consts: Dict[str, int] = {}
+    for op in cond.ops:
+        m = _CONST_RE.search(op.line)
+        if m and op.op == "constant":
+            consts[op.name] = int(m.group(1))
+    root = cond.root_line or (cond.ops[-1].line if cond.ops else "")
+    if "compare(" in root:
+        inner = root.split("compare(", 1)[1]
+        names = _OPERAND_RE.findall(inner)
+        for nm in names:
+            if nm in consts:
+                return consts[nm]
+    # fallback: single constant in the condition
+    if len(consts) == 1:
+        return next(iter(consts.values()))
+    return 1
+
+
+def analyze_hlo(text: str) -> Dict[str, object]:
+    comps = _parse_computations(text)
+    entry = comps.get("__entry__")
+    if entry is None:
+        return {"error": "no entry computation"}
+    symbols = _symbol_table(comps)
+
+    # multiplicities via BFS over call edges
+    mult: Dict[str, float] = {entry.name: 1.0}
+    order = [entry.name]
+    seen = {entry.name}
+    qi = 0
+    while qi < len(order):
+        cname = order[qi]
+        qi += 1
+        c = comps.get(cname)
+        if c is None:
+            continue
+        m = mult.get(cname, 1.0)
+        for op in c.ops:
+            refs = _ATTR_COMP_RE.findall(op.line)
+            if not refs:
+                continue
+            child_mult = m
+            if op.op == "while":
+                cond_name = None
+                mm = re.search(r"condition=(%[\w.\-]+)", op.line)
+                if mm:
+                    cond_name = mm.group(1)
+                trip = _trip_count(comps[cond_name]) if cond_name in comps else 1
+                child_mult = m * max(trip, 1)
+            for ref in refs:
+                if ref in comps:
+                    # accumulate (a computation can be called from many sites)
+                    mult[ref] = mult.get(ref, 0.0) + child_mult
+                    if ref not in seen:
+                        seen.add(ref)
+                        order.append(ref)
+
+    # fusions' internal computations must not contribute HBM traffic;
+    # identify them, and flag DUS-rooted fusions (in-place updates whose
+    # big buffer operand aliases the result — only the update slice moves)
+    fusion_comps = set()
+    dus_fusions = set()
+    for c in comps.values():
+        for op in c.ops:
+            if op.op == "fusion":
+                mm = re.search(r"calls=(%[\w.\-]+)", op.line)
+                if mm:
+                    fusion_comps.add(mm.group(1))
+    for fname in fusion_comps:
+        fc = comps.get(fname)
+        if fc is not None and "dynamic-update-slice" in (fc.root_line or ""):
+            dus_fusions.add(fname)
+
+    flops = 0.0
+    hbm_bytes = 0.0
+    transcendental_like = 0.0
+    coll_bytes: Dict[str, float] = {}
+    coll_ops: Dict[str, float] = {}
+    coll_by_group: Dict[int, float] = {}
+
+    for cname, c in comps.items():
+        if cname == "__entry__":
+            continue
+        m = mult.get(cname, 0.0)
+        if m <= 0:
+            continue
+        in_fusion = cname in fusion_comps
+        for op in c.ops:
+            rb = _bytes_of(op.result)
+            # ---- dots (count flops even inside fusions) ------------------
+            if op.op in ("dot", "convolution"):
+                cm = _CONTRACT_RE.search(op.line)
+                contract = 1
+                if cm:
+                    idxs = [int(i) for i in cm.group(1).split(",") if i]
+                    operands = _OPERAND_RE.findall(
+                        op.line.split(op.op + "(", 1)[1]
+                    )
+                    lhs_shape = symbols.get(operands[0], [("f32", [1])])
+                    dims = lhs_shape[0][1] if lhs_shape else [1]
+                    for i in idxs:
+                        if i < len(dims):
+                            contract *= dims[i]
+                nres = 0
+                for dt, dims in op.result:
+                    p = 1
+                    for d in dims:
+                        p *= d
+                    nres += p
+                flops += m * 2.0 * nres * contract
+            # ---- collectives --------------------------------------------
+            kind = None
+            for k in _COLL_KINDS:
+                if op.op == k or op.op == k + "-start":
+                    kind = k
+                    break
+            if kind is not None:
+                gsize = 1
+                gm = _GROUPS_IOTA_RE.search(op.line)
+                if gm:
+                    gsize = int(gm.group(2))
+                else:
+                    gm2 = _GROUPS_RE.search(op.line)
+                    if gm2:
+                        gsize = len(gm2.group(1).split(","))
+                if kind == "all-gather":
+                    ob = rb / max(gsize, 1)
+                elif kind == "reduce-scatter":
+                    ob = rb * max(gsize, 1)
+                else:
+                    # -start ops carry (input, output) tuples: halve
+                    ob = rb / (2.0 if op.op.endswith("-start") else 1.0)
+                coll_bytes[kind] = coll_bytes.get(kind, 0.0) + m * ob
+                coll_ops[kind] = coll_ops.get(kind, 0.0) + m
+                coll_by_group[gsize] = coll_by_group.get(gsize, 0.0) + m * ob
+            # ---- HBM traffic (fusion-internal ops excluded) --------------
+            if not in_fusion and op.op not in _SKIP_OPS and op.op != "copy":
+                # (bare copies are CPU-backend layout artifacts; a TPU
+                # compile fuses or elides them)
+                if op.op == "fusion":
+                    mm = re.search(r"calls=(%[\w.\-]+)", op.line)
+                    if mm and mm.group(1) in dus_fusions:
+                        # in-place update fusion: count update-sized
+                        # operands only (buffer operand aliases result)
+                        args = _OPERAND_RE.findall(
+                            op.line.split("(", 1)[1].split(")", 1)[0])
+                        small = sum(
+                            _bytes_of(symbols.get(a, [])) for a in args
+                            if _bytes_of(symbols.get(a, [])) < rb / 2
+                        )
+                        hbm_bytes += m * 2 * small
+                        continue
+                if op.op in ("dynamic-slice", "gather", "slice"):
+                    # reads only the sliced window (= result), not the
+                    # whole operand; result write may fuse but count it
+                    hbm_bytes += m * 2 * rb
+                elif op.op in ("dynamic-update-slice", "scatter"):
+                    # in-place update: only the update operand moves
+                    args = _OPERAND_RE.findall(
+                        op.line.split("(", 1)[1].split(")", 1)[0]
+                    )
+                    upd = _bytes_of(symbols.get(args[1], [])) if len(args) > 1 else rb
+                    hbm_bytes += m * 2 * upd
+                else:
+                    operand_bytes = 0
+                    if "(" in op.line:
+                        args = _OPERAND_RE.findall(
+                            op.line.split("(", 1)[1].split(")", 1)[0]
+                        )
+                        for a in args:
+                            operand_bytes += _bytes_of(symbols.get(a, []))
+                    hbm_bytes += m * (rb + operand_bytes)
+
+    return {
+        "flops": flops,
+        "hbm_bytes": hbm_bytes,
+        "collective_operand_bytes": coll_bytes,
+        "collective_ops": coll_ops,
+        "collective_bytes_by_group_size": coll_by_group,
+        "total_collective_bytes": sum(coll_bytes.values()),
+        "num_computations": len(comps) - 1,
+    }

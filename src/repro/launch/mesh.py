@@ -1,0 +1,35 @@
+"""Production mesh construction.
+
+Kept as functions (never module-level constants) so importing this module
+never touches jax device state — the dry-run must set XLA_FLAGS before
+first jax init.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """The assignment's production mesh: 16×16 single-pod (256 chips) or
+    2×16×16 multi-pod (512 chips)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_mesh(shape: Tuple[int, ...], axes: Optional[Tuple[str, ...]] = None):
+    """General mesh builder for planner-chosen shapes."""
+    if axes is None:
+        axes = {
+            1: ("data",),
+            2: ("data", "model"),
+            3: ("pod", "data", "model"),
+        }[len(shape)]
+    return jax.make_mesh(tuple(shape), tuple(axes))
+
+
+def local_mesh():
+    """Single-device mesh with the production axis names (CPU paths)."""
+    return jax.make_mesh((1, 1), ("data", "model"))

@@ -1,0 +1,40 @@
+"""Re-run the static HLO analyzer over saved dry-run artifacts (no
+recompilation) and refresh ``hlo_stats`` in the results JSON — lets
+analyzer improvements apply retroactively.
+
+    PYTHONPATH=src python -m repro.launch.reanalyze --out dryrun_results.json
+"""
+from __future__ import annotations
+
+import argparse
+import gzip
+import json
+import os
+
+from repro.launch.hlo_stats import analyze_hlo
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="dryrun_results.json")
+    ap.add_argument("--hlo-dir", default="hlo_artifacts")
+    args = ap.parse_args()
+    results = json.load(open(args.out))
+    n = 0
+    for key, rec in results.items():
+        if key.startswith("_") or not isinstance(rec, dict) or not rec.get("ok"):
+            continue
+        fname = key.replace("|", "__").replace("/", "_") + ".hlo.gz"
+        path = os.path.join(args.hlo_dir, fname)
+        if not os.path.exists(path):
+            continue
+        with gzip.open(path, "rt") as f:
+            rec["hlo_stats"] = analyze_hlo(f.read())
+        n += 1
+    with open(args.out, "w") as f:
+        json.dump(results, f, indent=1)
+    print(f"re-analyzed {n} cells")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,105 @@
+"""Uniform model API: build_model(cfg) -> Model.
+
+``Model`` exposes the four entry points the platform lowers (train loss,
+prefill, decode) plus ``input_specs``/``cache_specs`` that return
+``jax.ShapeDtypeStruct`` stand-ins for the dry-run (no allocation).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import encdec, lm
+
+Pytree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: ModelConfig
+
+    # ---- init ------------------------------------------------------------
+    def init(self, rng: jax.Array) -> Tuple[Pytree, Pytree]:
+        if self.cfg.is_encoder_decoder:
+            return encdec.init_encdec(self.cfg, rng)
+        return lm.init_lm(self.cfg, rng)
+
+    def param_specs(self) -> Tuple[Pytree, Pytree]:
+        """(ShapeDtypeStruct tree, logical-axes tree) without allocation."""
+        rng_spec = jax.ShapeDtypeStruct((2,), jnp.uint32)
+        specs = jax.eval_shape(lambda r: self.init(r)[0], rng_spec)
+        return specs, self._axes_tree()
+
+    def _axes_tree(self) -> Pytree:
+        # logical axes are shape-independent; build them with a tiny trace
+        out = {}
+
+        def record(r):
+            p, a = self.init(r)
+            out["axes"] = a
+            return jax.tree.map(lambda x: jnp.zeros(()), p)
+
+        jax.eval_shape(record, jax.ShapeDtypeStruct((2,), jnp.uint32))
+        return out["axes"]
+
+    # ---- train -----------------------------------------------------------
+    def loss(self, params: Pytree, batch: Dict[str, jax.Array],
+             remat: str = "none"):
+        if self.cfg.is_encoder_decoder:
+            return encdec.loss_fn(params, self.cfg, batch, remat)
+        return lm.loss_fn(params, self.cfg, batch, remat)
+
+    # ---- serve -----------------------------------------------------------
+    def prefill(self, params: Pytree, tokens: jax.Array,
+                extra: Optional[Dict[str, jax.Array]] = None,
+                max_seq: Optional[int] = None):
+        if self.cfg.is_encoder_decoder:
+            return encdec.prefill(params, self.cfg, tokens, extra or {}, max_seq)
+        return lm.prefill(params, self.cfg, tokens, extra, max_seq)
+
+    def decode_step(self, params: Pytree, cache: Pytree, tokens: jax.Array):
+        if self.cfg.is_encoder_decoder:
+            return encdec.decode_step(params, self.cfg, cache, tokens)
+        return lm.decode_step(params, self.cfg, cache, tokens)
+
+    def init_cache(self, batch: int, max_seq: int) -> Pytree:
+        if self.cfg.is_encoder_decoder:
+            return encdec.init_cache(self.cfg, batch, max_seq)
+        return lm.init_cache(self.cfg, batch, max_seq)
+
+    def cache_specs(self, batch: int, max_seq: int) -> Pytree:
+        return jax.eval_shape(lambda: self.init_cache(batch, max_seq))
+
+    # ---- dry-run inputs ----------------------------------------------------
+    def input_specs(self, shape: ShapeConfig) -> Dict[str, Any]:
+        """ShapeDtypeStruct stand-ins for every model input of this cell."""
+        cfg = self.cfg
+        B = shape.global_batch
+        dt = jnp.dtype(cfg.dtype)
+        if shape.kind in ("train", "prefill"):
+            S = shape.seq_len
+            specs: Dict[str, Any] = {
+                "tokens": jax.ShapeDtypeStruct((B, S), jnp.int32)
+            }
+            if cfg.is_encoder_decoder:
+                specs["frames"] = jax.ShapeDtypeStruct(
+                    (B, cfg.encoder_frames, cfg.d_model), dt
+                )
+            if cfg.family == "vlm" and cfg.num_image_tokens:
+                specs["image_embeds"] = jax.ShapeDtypeStruct(
+                    (B, cfg.num_image_tokens, cfg.d_model), dt
+                )
+            return specs
+        # decode: one new token against a seq_len cache
+        return {
+            "tokens": jax.ShapeDtypeStruct((B, 1), jnp.int32),
+            "cache": self.cache_specs(B, shape.seq_len),
+        }
+
+
+def build_model(cfg: ModelConfig) -> Model:
+    return Model(cfg)

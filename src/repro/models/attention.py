@@ -1,0 +1,146 @@
+"""GQA attention: stacked-parameter init + train/prefill/decode application.
+
+Projections are 4-D ``(layers, embed, heads, head_dim)`` so the sharding
+layer can map the *head* axis to the model mesh axis independently of the
+head_dim (GSPMD tolerates uneven head counts on archs like qwen1.5 where
+H % 16 != 0).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.kernels import ops
+from repro.models.common import ParamBuilder, apply_rope, rope_angles
+from repro.parallel import hints
+
+
+def init_attention(pb: ParamBuilder, cfg: ModelConfig, num_layers: int, prefix: str = "attn"):
+    D, H, KH, Dh = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    L = num_layers
+    pb.p(f"{prefix}_wq", (L, D, H, Dh), ("layers", "embed", "heads", "head_dim"))
+    pb.p(f"{prefix}_wk", (L, D, KH, Dh), ("layers", "embed", "kv_heads", "head_dim"))
+    pb.p(f"{prefix}_wv", (L, D, KH, Dh), ("layers", "embed", "kv_heads", "head_dim"))
+    pb.p(f"{prefix}_wo", (L, H, Dh, D), ("layers", "heads", "head_dim", "embed"))
+    if cfg.qkv_bias:
+        pb.p(f"{prefix}_bq", (L, H, Dh), ("layers", "heads", "head_dim"), init="zeros")
+        pb.p(f"{prefix}_bk", (L, KH, Dh), ("layers", "kv_heads", "head_dim"), init="zeros")
+        pb.p(f"{prefix}_bv", (L, KH, Dh), ("layers", "kv_heads", "head_dim"), init="zeros")
+
+
+def qkv(p: Dict[str, Any], x: jax.Array, cfg: ModelConfig, prefix: str = "attn"):
+    """x: (B, S, D) -> q (B,S,H,Dh), k/v (B,S,KH,Dh).  p holds per-layer
+    slices (no leading layer dim)."""
+    dt = x.dtype
+    q = jnp.einsum("bsd,dhk->bshk", x, p[f"{prefix}_wq"].astype(dt))
+    k = jnp.einsum("bsd,dhk->bshk", x, p[f"{prefix}_wk"].astype(dt))
+    v = jnp.einsum("bsd,dhk->bshk", x, p[f"{prefix}_wv"].astype(dt))
+    if cfg.qkv_bias:
+        q = q + p[f"{prefix}_bq"].astype(dt)
+        k = k + p[f"{prefix}_bk"].astype(dt)
+        v = v + p[f"{prefix}_bv"].astype(dt)
+    return q, k, v
+
+
+def out_proj(p: Dict[str, Any], attn: jax.Array, prefix: str = "attn") -> jax.Array:
+    return jnp.einsum("bshk,hkd->bsd", attn, p[f"{prefix}_wo"].astype(attn.dtype))
+
+
+def attend_train(
+    p: Dict[str, Any],
+    x: jax.Array,  # (B, S, D) normed
+    cfg: ModelConfig,
+    *,
+    causal: bool = True,
+    window: int = 0,
+    use_rope: bool = True,
+    prefix: str = "attn",
+) -> jax.Array:
+    q, k, v = qkv(p, x, cfg, prefix)
+    if use_rope:
+        S = x.shape[1]
+        cos, sin = rope_angles(jnp.arange(S), cfg.head_dim, cfg.rope_theta)
+        q = apply_rope(q, cos, sin)
+        k = apply_rope(k, cos, sin)
+    q = hints.attn_q(q)  # optional context parallelism (planner knob)
+    out = ops.flash_attention(q, k, v, causal=causal, window=window)
+    return out_proj(p, out, prefix)
+
+
+def attend_cross(
+    p: Dict[str, Any],
+    x: jax.Array,  # (B, S, D) normed decoder states
+    kv_cache: Tuple[jax.Array, jax.Array],  # precomputed (B, T, KH, Dh) x2
+    cfg: ModelConfig,
+    prefix: str = "xattn",
+) -> jax.Array:
+    dt = x.dtype
+    q = jnp.einsum("bsd,dhk->bshk", x, p[f"{prefix}_wq"].astype(dt))
+    k, v = kv_cache
+    out = ops.flash_attention(q, k, v, causal=False)
+    return out_proj(p, out, prefix)
+
+
+def cross_kv(p: Dict[str, Any], enc: jax.Array, prefix: str = "xattn"):
+    dt = enc.dtype
+    k = jnp.einsum("bsd,dhk->bshk", enc, p[f"{prefix}_wk"].astype(dt))
+    v = jnp.einsum("bsd,dhk->bshk", enc, p[f"{prefix}_wv"].astype(dt))
+    return k, v
+
+
+def attend_decode(
+    p: Dict[str, Any],
+    x: jax.Array,  # (B, 1, D) normed
+    cache_k: jax.Array,  # (B, S_max, KH, Dh)
+    cache_v: jax.Array,
+    pos: jax.Array,  # (B,) current write position
+    cfg: ModelConfig,
+    *,
+    use_rope: bool = True,
+    window: int = 0,
+    slot_pos: Optional[jax.Array] = None,  # (B, S_max) absolute pos per slot (ring)
+    prefix: str = "attn",
+) -> Tuple[jax.Array, jax.Array, jax.Array, Optional[jax.Array]]:
+    """One-token attention with cache update.  Returns (out, new_k, new_v,
+    new_slot_pos).  When ``window > 0`` the cache is a ring buffer of width
+    S_max == window and ``slot_pos`` tracks absolute positions."""
+    B = x.shape[0]
+    S_max = cache_k.shape[1]
+    q, k, v = qkv(p, x, cfg, prefix)  # (B,1,*,Dh)
+    if use_rope:
+        cos, sin = rope_angles(pos[:, None], cfg.head_dim, cfg.rope_theta)  # (B,1,half)
+        q = apply_rope(q, cos, sin)
+        k = apply_rope(k, cos, sin)
+
+    slot = (pos % S_max) if window > 0 else pos  # (B,)
+    bidx = jnp.arange(B)
+    new_k = cache_k.at[bidx, slot].set(k[:, 0].astype(cache_k.dtype))
+    new_v = cache_v.at[bidx, slot].set(v[:, 0].astype(cache_v.dtype))
+
+    if window > 0:
+        assert slot_pos is not None
+        new_slot_pos = slot_pos.at[bidx, slot].set(pos)
+        valid = (new_slot_pos <= pos[:, None]) & (pos[:, None] - new_slot_pos < window)
+        # decode_attention masks by kv_len; emulate arbitrary mask by biasing
+        out = _masked_decode_attention(q, new_k, new_v, valid)
+        return out_proj(p, out, prefix), new_k, new_v, new_slot_pos
+
+    kv_len = pos + 1
+    out = ops.decode_attention(q, new_k, new_v, kv_len=kv_len)
+    return out_proj(p, out, prefix), new_k, new_v, None
+
+
+def _masked_decode_attention(q, k, v, valid):
+    """q: (B,1,H,Dh); k/v: (B,T,KH,Dh); valid: (B,T) bool."""
+    B, _, H, Dh = q.shape
+    T, KH = k.shape[1], k.shape[2]
+    G = H // KH
+    qf = q.astype(jnp.float32).reshape(B, 1, KH, G, Dh) * (Dh ** -0.5)
+    scores = jnp.einsum("bskgd,btkd->bkgst", qf, k.astype(jnp.float32))
+    scores = jnp.where(valid[:, None, None, None, :], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgst,btkd->bskgd", probs, v.astype(jnp.float32))
+    return out.reshape(B, 1, H, Dh).astype(q.dtype)

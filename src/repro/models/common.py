@@ -1,0 +1,143 @@
+"""Shared model building blocks: initializers, norms, RoPE, activations.
+
+Every parameter is created through :class:`ParamBuilder`, which records a
+parallel tree of *logical axis names* next to the parameter tree.  The
+sharding layer (``repro.parallel.sharding``) maps logical names to mesh
+axes according to the plan chosen by the planner — models never mention
+mesh axes directly (that is the Adviser separation: domain code is written
+once; the Execution Engine decides placement).
+"""
+from __future__ import annotations
+
+import hashlib
+from typing import Any, Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Pytree = Any
+
+
+def _fold(rng: jax.Array, name: str) -> jax.Array:
+    h = int.from_bytes(hashlib.md5(name.encode()).digest()[:4], "little")
+    return jax.random.fold_in(rng, h)
+
+
+class ParamBuilder:
+    """Accumulates a params dict plus a mirrored logical-axes dict."""
+
+    def __init__(self, rng: jax.Array, dtype=jnp.float32):
+        self.rng = rng
+        self.dtype = dtype
+        self.params: Dict[str, Any] = {}
+        self.axes: Dict[str, Any] = {}
+
+    def child(self, name: str) -> "ParamBuilder":
+        sub = ParamBuilder(_fold(self.rng, name), self.dtype)
+        self.params[name] = sub.params
+        self.axes[name] = sub.axes
+        return sub
+
+    def p(
+        self,
+        name: str,
+        shape: Sequence[int],
+        axes: Sequence[Optional[str]],
+        init: str = "normal",
+        scale: float = 0.02,
+    ) -> None:
+        assert len(shape) == len(axes), (name, shape, axes)
+        rng = _fold(self.rng, name)
+        if init == "normal":
+            # fan-in scaled normal
+            fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+            std = min(scale, fan_in ** -0.5)
+            val = jax.random.normal(rng, tuple(shape), self.dtype) * std
+        elif init == "zeros":
+            val = jnp.zeros(tuple(shape), self.dtype)
+        elif init == "ones":
+            val = jnp.ones(tuple(shape), self.dtype)
+        elif init == "small_normal":
+            val = jax.random.normal(rng, tuple(shape), self.dtype) * 0.01
+        else:
+            raise ValueError(init)
+        self.params[name] = val
+        self.axes[name] = tuple(axes)
+
+
+def rms_norm(x: jax.Array, gamma: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    out = x * jax.lax.rsqrt(var + eps) * gamma.astype(jnp.float32)
+    return out.astype(dt)
+
+
+def layer_norm(x: jax.Array, gamma: jax.Array, beta: jax.Array, eps: float = 1e-5) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+    out = (x - mu) * jax.lax.rsqrt(var + eps) * gamma.astype(jnp.float32) + beta.astype(jnp.float32)
+    return out.astype(dt)
+
+
+def make_norm(pb: ParamBuilder, name: str, d: int, kind: str):
+    if kind == "layernorm":
+        pb.p(f"{name}_g", (d,), ("embed",), init="ones")
+        pb.p(f"{name}_b", (d,), ("embed",), init="zeros")
+    else:
+        pb.p(f"{name}_g", (d,), ("embed",), init="ones")
+
+
+def apply_norm(params: Dict[str, Any], name: str, x: jax.Array, kind: str) -> jax.Array:
+    if kind == "layernorm":
+        return layer_norm(x, params[f"{name}_g"], params[f"{name}_b"])
+    return rms_norm(x, params[f"{name}_g"])
+
+
+def rope_angles(positions: jax.Array, head_dim: int, theta: float) -> Tuple[jax.Array, jax.Array]:
+    """positions: (...,) int -> cos/sin of shape (..., head_dim//2)."""
+    half = head_dim // 2
+    freq = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions.astype(jnp.float32)[..., None] * freq  # (..., half)
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jax.Array, cos: jax.Array, sin: jax.Array) -> jax.Array:
+    """x: (B, S, H, D). cos/sin: (B, S, D/2) or (S, D/2)."""
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    if cos.ndim == 2:  # (S, half) -> broadcast over batch & heads
+        cos = cos[None, :, None, :]
+        sin = sin[None, :, None, :]
+    else:  # (B, S, half)
+        cos = cos[:, :, None, :]
+        sin = sin[:, :, None, :]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(dt)
+
+
+def activation(x: jax.Array, kind: str) -> jax.Array:
+    if kind == "silu":
+        return jax.nn.silu(x)
+    if kind == "gelu":
+        return jax.nn.gelu(x)
+    raise ValueError(kind)
+
+
+def stack_layer_params(per_layer: Sequence[Pytree]) -> Pytree:
+    """Stack a list of identical-structure param trees along a new leading
+    'layers' axis (used to build scan-over-layers stacked params)."""
+    return jax.tree.map(lambda *xs: jnp.stack(xs, axis=0), *per_layer)
+
+
+def prepend_layers_axis(axes_tree: Pytree) -> Pytree:
+    return jax.tree.map(
+        lambda a: ("layers",) + tuple(a),
+        axes_tree,
+        is_leaf=lambda a: isinstance(a, tuple),
+    )

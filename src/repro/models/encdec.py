@@ -1,0 +1,229 @@
+"""Whisper-style encoder-decoder (audio family).
+
+The audio/conv frontend is a STUB per the assignment: ``input_specs()``
+supplies precomputed frame embeddings ``(B, frames, d_model)``.  Positional
+information is sinusoidal (parameter-free) for both stacks — a deliberate
+deviation from whisper's learned decoder embeddings so decode shapes are
+not bound to a trained max length (noted in DESIGN.md).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.kernels import ops
+from repro.models.attention import (
+    attend_decode,
+    cross_kv,
+    init_attention,
+    out_proj,
+    qkv,
+)
+from repro.models.common import ParamBuilder, apply_norm, make_norm
+from repro.parallel import hints
+from repro.models.lm import apply_mlp, init_mlp
+
+Pytree = Any
+
+
+def sinusoidal(positions: jax.Array, d: int) -> jax.Array:
+    half = d // 2
+    freq = jnp.exp(-jnp.log(10000.0) * jnp.arange(half) / (half - 1))
+    ang = positions.astype(jnp.float32)[..., None] * freq
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+def init_encdec(cfg: ModelConfig, rng: jax.Array) -> Tuple[Pytree, Pytree]:
+    pb = ParamBuilder(rng)
+    D = cfg.d_model
+    pb.p("embed", (cfg.vocab_size, D), ("vocab", "embed"))
+    if not cfg.tie_embeddings:
+        pb.p("lm_head", (D, cfg.vocab_size), ("embed", "vocab"))
+    make_norm(pb, "final", D, cfg.norm)
+    make_norm(pb, "enc_final", D, cfg.norm)
+
+    enc = pb.child("enc_blocks")
+    Le = cfg.encoder_layers
+    enc.p("norm1_g", (Le, D), ("layers", "embed"), init="ones")
+    enc.p("norm1_b", (Le, D), ("layers", "embed"), init="zeros")
+    enc.p("norm2_g", (Le, D), ("layers", "embed"), init="ones")
+    enc.p("norm2_b", (Le, D), ("layers", "embed"), init="zeros")
+    init_attention(enc, cfg, Le)
+    init_mlp(enc, cfg, Le)
+
+    dec = pb.child("blocks")
+    L = cfg.num_layers
+    for n in ("norm1", "norm2", "norm3"):
+        dec.p(f"{n}_g", (L, D), ("layers", "embed"), init="ones")
+        dec.p(f"{n}_b", (L, D), ("layers", "embed"), init="zeros")
+    init_attention(dec, cfg, L)  # self-attention
+    init_attention(dec, cfg, L, prefix="xattn")  # cross-attention
+    init_mlp(dec, cfg, L)
+    return pb.params, pb.axes
+
+
+def encode(params: Pytree, cfg: ModelConfig, frames: jax.Array) -> jax.Array:
+    """frames: (B, T, D) stub embeddings -> encoder states (B, T, D)."""
+    dt = jnp.dtype(cfg.dtype)
+    T = frames.shape[1]
+    x = hints.act(
+        frames.astype(dt) + sinusoidal(jnp.arange(T), cfg.d_model)[None].astype(dt)
+    )
+
+    def body(xx, pl_):
+        xx = hints.act(xx)
+        h = apply_norm(pl_, "norm1", xx, cfg.norm)
+        q, k, v = qkv(pl_, h, cfg)
+        q = hints.attn_q(q)
+        attn = ops.flash_attention(q, k, v, causal=False)
+        xx = xx + out_proj(pl_, attn)
+        h2 = apply_norm(pl_, "norm2", xx, cfg.norm)
+        xx = xx + apply_mlp(pl_, h2, cfg)
+        return xx, None
+
+    x, _ = jax.lax.scan(body, x, params["enc_blocks"])
+    return apply_norm(params, "enc_final", x, cfg.norm)
+
+
+def _dec_embed(params, cfg, tokens, offset):
+    dt = jnp.dtype(cfg.dtype)
+    x = jnp.take(params["embed"], tokens, axis=0).astype(dt)
+    pos = offset + jnp.arange(tokens.shape[1])
+    return hints.act(x + sinusoidal(pos, cfg.d_model)[None].astype(dt))
+
+
+def forward_train(params: Pytree, cfg: ModelConfig, tokens: jax.Array,
+                  extra: Dict[str, jax.Array],
+                  remat: str = "none") -> Tuple[jax.Array, jax.Array]:
+    """tokens: (B, S) decoder tokens; extra["frames"]: (B, T, D)."""
+    enc = encode(params, cfg, extra["frames"])
+    x = _dec_embed(params, cfg, tokens, 0)
+
+    def body(xx, pl_):
+        xx = hints.act(xx)
+        h = apply_norm(pl_, "norm1", xx, cfg.norm)
+        q, k, v = qkv(pl_, h, cfg)
+        q = hints.attn_q(q)
+        attn = ops.flash_attention(q, k, v, causal=True)
+        xx = xx + out_proj(pl_, attn)
+        h2 = apply_norm(pl_, "norm2", xx, cfg.norm)
+        xk, xv = cross_kv(pl_, enc)
+        qx = hints.attn_q(
+            jnp.einsum("bsd,dhk->bshk", h2, pl_["xattn_wq"].astype(h2.dtype)))
+        xout = ops.flash_attention(qx, xk, xv, causal=False)
+        xx = xx + out_proj(pl_, xout, prefix="xattn")
+        h3 = apply_norm(pl_, "norm3", xx, cfg.norm)
+        xx = xx + apply_mlp(pl_, h3, cfg)
+        return xx, None
+
+    if remat in ("full", "dots"):
+        body = jax.checkpoint(body)
+    x, _ = jax.lax.scan(body, x, params["blocks"])
+    xn = apply_norm(params, "final", x, cfg.norm)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    if cfg.tie_embeddings:
+        head = hints.pin_replicated(head)
+    logits = hints.logits(jnp.einsum("bsd,dv->bsv", xn, head.astype(xn.dtype)))
+    return logits, jnp.zeros((), jnp.float32)
+
+
+def loss_fn(params: Pytree, cfg: ModelConfig, batch: Dict[str, jax.Array],
+            remat: str = "none"):
+    tokens = batch["tokens"]
+    logits, aux = forward_train(params, cfg, tokens, batch, remat)
+    logits = logits[:, :-1].astype(jnp.float32)
+    targets = tokens[:, 1:]
+    logz = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+    ce = jnp.mean(logz - gold)
+    return ce, {"loss": ce, "ce": ce, "aux": aux,
+                "tokens": jnp.asarray(targets.size, jnp.float32)}
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_seq: int) -> Pytree:
+    dt = jnp.dtype(cfg.dtype)
+    KH, Dh, L = cfg.num_kv_heads, cfg.head_dim, cfg.num_layers
+    T = cfg.encoder_frames
+    return {
+        "k": jnp.zeros((L, batch, max_seq, KH, Dh), dt),
+        "v": jnp.zeros((L, batch, max_seq, KH, Dh), dt),
+        "xk": jnp.zeros((L, batch, T, KH, Dh), dt),
+        "xv": jnp.zeros((L, batch, T, KH, Dh), dt),
+        "pos": jnp.zeros((batch,), jnp.int32),
+    }
+
+
+def prefill(params: Pytree, cfg: ModelConfig, tokens: jax.Array,
+            extra: Dict[str, jax.Array],
+            max_seq: Optional[int] = None) -> Tuple[jax.Array, Pytree]:
+    B, S = tokens.shape
+    max_seq = max_seq or S
+    enc = encode(params, cfg, extra["frames"])
+    x = _dec_embed(params, cfg, tokens, 0)
+
+    def body(xx, pl_):
+        xx = hints.act(xx)
+        h = apply_norm(pl_, "norm1", xx, cfg.norm)
+        q, k, v = qkv(pl_, h, cfg)
+        q = hints.attn_q(q)
+        attn = ops.flash_attention(q, k, v, causal=True)
+        xx = xx + out_proj(pl_, attn)
+        h2 = apply_norm(pl_, "norm2", xx, cfg.norm)
+        xk, xv = cross_kv(pl_, enc)
+        qx = hints.attn_q(
+            jnp.einsum("bsd,dhk->bshk", h2, pl_["xattn_wq"].astype(h2.dtype)))
+        xout = ops.flash_attention(qx, xk, xv, causal=False)
+        xx = xx + out_proj(pl_, xout, prefix="xattn")
+        h3 = apply_norm(pl_, "norm3", xx, cfg.norm)
+        xx = xx + apply_mlp(pl_, h3, cfg)
+        pad = max_seq - S
+        kc = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        vc = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        return xx, (kc, vc, xk, xv)
+
+    x, (kc, vc, xk, xv) = jax.lax.scan(body, x, params["blocks"])
+    xn = apply_norm(params, "final", x[:, -1:], cfg.norm)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    if cfg.tie_embeddings:
+        head = hints.pin_replicated(head)
+    logits = jnp.einsum("bsd,dv->bsv", xn, head.astype(xn.dtype))[:, 0]
+    return logits, {"k": kc, "v": vc, "xk": xk, "xv": xv,
+                    "pos": jnp.full((B,), S, jnp.int32)}
+
+
+def decode_step(params: Pytree, cfg: ModelConfig, cache: Pytree,
+                tokens: jax.Array) -> Tuple[jax.Array, Pytree]:
+    pos = cache["pos"]
+    B = tokens.shape[0]
+    # per-sequence positional offset
+    dtv = jnp.dtype(cfg.dtype)
+    x = jnp.take(params["embed"], tokens, axis=0).astype(dtv)
+    x = x + sinusoidal(pos[:, None], cfg.d_model).astype(dtv)
+
+    def body(xx, xs):
+        pl_, kc, vc, xk, xv = xs
+        h = apply_norm(pl_, "norm1", xx, cfg.norm)
+        attn_out, nk, nv, _ = attend_decode(pl_, h, kc, vc, pos, cfg, use_rope=False)
+        xx = xx + attn_out
+        h2 = apply_norm(pl_, "norm2", xx, cfg.norm)
+        qx = jnp.einsum("bsd,dhk->bshk", h2, pl_["xattn_wq"].astype(h2.dtype))
+        T = xk.shape[1]
+        xout = ops.decode_attention(qx, xk, xv, kv_len=jnp.full((B,), T, jnp.int32))
+        xx = xx + out_proj(pl_, xout, prefix="xattn")
+        h3 = apply_norm(pl_, "norm3", xx, cfg.norm)
+        xx = xx + apply_mlp(pl_, h3, cfg)
+        return xx, (nk, nv)
+
+    x, (nk, nv) = jax.lax.scan(
+        body, x, (params["blocks"], cache["k"], cache["v"], cache["xk"], cache["xv"])
+    )
+    xn = apply_norm(params, "final", x, cfg.norm)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    if cfg.tie_embeddings:
+        head = hints.pin_replicated(head)
+    logits = jnp.einsum("bsd,dv->bsv", xn, head.astype(xn.dtype))[:, 0]
+    return logits, {"k": nk, "v": nv, "xk": cache["xk"], "xv": cache["xv"],
+                    "pos": pos + 1}

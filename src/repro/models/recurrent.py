@@ -1,0 +1,309 @@
+"""Recurrent blocks: xLSTM (mLSTM + sLSTM) and Mamba-style SSM heads.
+
+Train paths route through the Pallas-kernel dispatch (``kernels.ops``);
+decode paths carry O(1) recurrent state (this is why the ssm/hybrid archs
+are the only ones that run the ``long_500k`` cell).
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.kernels import ops
+from repro.models.common import ParamBuilder, activation, rms_norm
+
+# ===========================================================================
+# mLSTM (xLSTM matrix-memory block)
+# ===========================================================================
+
+
+def mlstm_dims(cfg: ModelConfig) -> Tuple[int, int, int]:
+    d_in = 2 * cfg.d_model  # projection factor 2
+    nh = cfg.num_heads
+    return d_in, nh, d_in // nh
+
+
+def init_mlstm(pb: ParamBuilder, cfg: ModelConfig, num_layers: int):
+    D = cfg.d_model
+    d_in, NH, DH = mlstm_dims(cfg)
+    L = num_layers
+    pb.p("ln_g", (L, D), ("layers", "embed"), init="ones")
+    pb.p("ln_b", (L, D), ("layers", "embed"), init="zeros")
+    pb.p("w_up_x", (L, D, d_in), ("layers", "embed", "mlp"))
+    pb.p("w_up_z", (L, D, d_in), ("layers", "embed", "mlp"))
+    # per-head block-diagonal projections (xLSTM paper §mLSTM): each head
+    # projects only its own DH-slice
+    pb.p("w_q", (L, NH, DH, DH), ("layers", "heads", "head_dim", None))
+    pb.p("w_k", (L, NH, DH, DH), ("layers", "heads", "head_dim", None))
+    pb.p("w_v", (L, NH, DH, DH), ("layers", "heads", "head_dim", None))
+    pb.p("w_i", (L, d_in, NH), ("layers", "mlp", "heads"), init="small_normal")
+    pb.p("w_f", (L, d_in, NH), ("layers", "mlp", "heads"), init="small_normal")
+    pb.p("b_i", (L, NH), ("layers", "heads"), init="zeros")
+    pb.p("b_f", (L, NH), ("layers", "heads"), init="ones")  # bias toward memory
+    pb.p("headnorm_g", (L, NH, DH), ("layers", "heads", "head_dim"), init="ones")
+    pb.p("w_down", (L, d_in, D), ("layers", "mlp", "embed"))
+
+
+def _mlstm_qkvif(p, h, cfg):
+    dt = h.dtype
+    d_in, NH, DH = mlstm_dims(cfg)
+    hh = h.reshape(h.shape[0], h.shape[1], NH, DH)  # (B,S,NH,DH)
+    q = jnp.einsum("bshd,hde->bhse", hh, p["w_q"].astype(dt))
+    k = jnp.einsum("bshd,hde->bhse", hh, p["w_k"].astype(dt))
+    v = jnp.einsum("bshd,hde->bhse", hh, p["w_v"].astype(dt))
+    i_pre = jnp.einsum("bsd,dh->bhs", h, p["w_i"].astype(dt)) + p["b_i"].astype(dt)[None, :, None]
+    f_pre = (
+        jnp.einsum("bsd,dh->bhs", h, p["w_f"].astype(dt))
+        + 3.0 * p["b_f"].astype(dt)[None, :, None]
+    )
+    return q, k, v, i_pre, f_pre
+
+
+def apply_mlstm(p: Dict[str, Any], x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    """Train/prefill path. x: (B, S, D)."""
+    from repro.models.common import layer_norm
+
+    d_in, NH, DH = mlstm_dims(cfg)
+    B, S, D = x.shape
+    xn = layer_norm(x, p["ln_g"], p["ln_b"])
+    h = jnp.einsum("bsd,de->bse", xn, p["w_up_x"].astype(x.dtype))
+    z = jnp.einsum("bsd,de->bse", xn, p["w_up_z"].astype(x.dtype))
+    q, k, v, i_pre, f_pre = _mlstm_qkvif(p, h, cfg)
+    out = ops.mlstm_scan(q, k, v, i_pre, f_pre)  # (B, NH, S, DH)
+    out = rms_norm(out.transpose(0, 2, 1, 3), p["headnorm_g"])  # (B,S,NH,DH)
+    out = out.reshape(B, S, d_in) * jax.nn.silu(z)
+    return x + jnp.einsum("bse,ed->bsd", out, p["w_down"].astype(x.dtype))
+
+
+def mlstm_state_spec(cfg: ModelConfig, batch: int):
+    d_in, NH, DH = mlstm_dims(cfg)
+    return {
+        "C": jnp.zeros((batch, NH, DH, DH), jnp.float32),
+        "n": jnp.zeros((batch, NH, DH), jnp.float32),
+        "m": jnp.full((batch, NH), -1e30, jnp.float32),
+    }
+
+
+def decode_mlstm(p, state, x, cfg):
+    """x: (B, 1, D). Returns (x_out, new_state)."""
+    from repro.models.common import layer_norm
+
+    d_in, NH, DH = mlstm_dims(cfg)
+    B = x.shape[0]
+    xn = layer_norm(x, p["ln_g"], p["ln_b"])
+    h = jnp.einsum("bsd,de->bse", xn, p["w_up_x"].astype(x.dtype))
+    z = jnp.einsum("bsd,de->bse", xn, p["w_up_z"].astype(x.dtype))
+    q, k, v, i_pre, f_pre = _mlstm_qkvif(p, h, cfg)  # (B,NH,1,DH)
+    hv, (C, n, m) = ops.mlstm_step(
+        q, k, v, i_pre, f_pre, (state["C"], state["n"], state["m"])
+    )  # (B, NH, DH)
+    out = rms_norm(hv[:, None], p["headnorm_g"])  # (B,1,NH,DH)
+    out = out.reshape(B, 1, d_in) * jax.nn.silu(z)
+    x_out = x + jnp.einsum("bse,ed->bsd", out, p["w_down"].astype(x.dtype))
+    return x_out, {"C": C, "n": n, "m": m}
+
+
+# ===========================================================================
+# sLSTM (scalar-memory block with head-wise recurrence)
+# ===========================================================================
+
+
+def slstm_dims(cfg: ModelConfig) -> Tuple[int, int]:
+    NH = cfg.num_heads
+    return NH, cfg.d_model // NH
+
+
+def slstm_ffn_dim(cfg: ModelConfig) -> int:
+    return int(math.ceil(cfg.d_model * 4 / 3 / 64) * 64)
+
+
+def init_slstm(pb: ParamBuilder, cfg: ModelConfig, num_layers: int):
+    D = cfg.d_model
+    NH, DH = slstm_dims(cfg)
+    Fs = slstm_ffn_dim(cfg)
+    L = num_layers
+    pb.p("ln_g", (L, D), ("layers", "embed"), init="ones")
+    pb.p("ln_b", (L, D), ("layers", "embed"), init="zeros")
+    pb.p("w_gates", (L, D, 4, NH, DH), ("layers", "embed", None, "heads", "head_dim"))
+    pb.p("r_gates", (L, NH, 4, DH, DH), ("layers", "heads", None, "head_dim", None),
+         init="small_normal")
+    pb.p("b_gates", (L, 4, NH, DH), ("layers", None, "heads", "head_dim"), init="zeros")
+    pb.p("headnorm_g", (L, NH, DH), ("layers", "heads", "head_dim"), init="ones")
+    pb.p("ln2_g", (L, D), ("layers", "embed"), init="ones")
+    pb.p("ln2_b", (L, D), ("layers", "embed"), init="zeros")
+    pb.p("ffn_wg", (L, D, Fs), ("layers", "embed", "mlp"))
+    pb.p("ffn_wu", (L, D, Fs), ("layers", "embed", "mlp"))
+    pb.p("ffn_wd", (L, Fs, D), ("layers", "mlp", "embed"))
+
+
+def slstm_state_spec(cfg: ModelConfig, batch: int):
+    NH, DH = slstm_dims(cfg)
+    return {
+        "h": jnp.zeros((batch, NH, DH), jnp.float32),
+        "c": jnp.zeros((batch, NH, DH), jnp.float32),
+        "n": jnp.zeros((batch, NH, DH), jnp.float32),
+        "m": jnp.full((batch, NH, DH), -1e30, jnp.float32),
+    }
+
+
+def _slstm_cell(p, state, xt):
+    """xt: (B, D) f32 normed input. One recurrence step."""
+    h, c, n, m = state["h"], state["c"], state["n"], state["m"]
+    pre = (
+        jnp.einsum("bd,dghk->bghk", xt, p["w_gates"].astype(jnp.float32))
+        + jnp.einsum("bhk,hgkl->bghl", h, p["r_gates"].astype(jnp.float32))
+        + p["b_gates"].astype(jnp.float32)[None]
+    )  # (B, 4, NH, DH)
+    z_pre, i_pre, f_pre, o_pre = pre[:, 0], pre[:, 1], pre[:, 2], pre[:, 3]
+    z = jnp.tanh(z_pre)
+    log_f = jax.nn.log_sigmoid(f_pre + 3.0)
+    m_new = jnp.maximum(log_f + m, i_pre)
+    i_sc = jnp.exp(i_pre - m_new)
+    f_sc = jnp.exp(log_f + m - m_new)
+    c_new = f_sc * c + i_sc * z
+    n_new = f_sc * n + i_sc
+    h_tilde = c_new / jnp.maximum(jnp.abs(n_new), 1e-6) * jnp.sign(n_new)
+    h_new = jax.nn.sigmoid(o_pre) * h_tilde
+    return {"h": h_new, "c": c_new, "n": n_new, "m": m_new}
+
+
+def apply_slstm(p: Dict[str, Any], x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    """Train/prefill path: sequential scan over time (sLSTM is inherently
+    sequential — the xLSTM paper places few of these blocks)."""
+    from repro.models.common import layer_norm
+
+    B, S, D = x.shape
+    NH, DH = slstm_dims(cfg)
+    xn = layer_norm(x, p["ln_g"], p["ln_b"]).astype(jnp.float32)
+
+    def step(state, xt):
+        new = _slstm_cell(p, state, xt)
+        return new, new["h"]
+
+    state0 = slstm_state_spec(cfg, B)
+    _, hs = jax.lax.scan(step, state0, xn.transpose(1, 0, 2))  # (S, B, NH, DH)
+    hs = hs.transpose(1, 0, 2, 3)  # (B, S, NH, DH)
+    out = rms_norm(hs, p["headnorm_g"]).reshape(B, S, D).astype(x.dtype)
+    x = x + out
+    xn2 = layer_norm(x, p["ln2_g"], p["ln2_b"])
+    hg = jnp.einsum("bsd,df->bsf", xn2, p["ffn_wg"].astype(x.dtype))
+    hu = jnp.einsum("bsd,df->bsf", xn2, p["ffn_wu"].astype(x.dtype))
+    ff = jnp.einsum("bsf,fd->bsd", activation(hg, "gelu") * hu, p["ffn_wd"].astype(x.dtype))
+    return x + ff
+
+
+def decode_slstm(p, state, x, cfg):
+    from repro.models.common import layer_norm
+
+    B = x.shape[0]
+    D = cfg.d_model
+    xn = layer_norm(x, p["ln_g"], p["ln_b"]).astype(jnp.float32)[:, 0]
+    new = _slstm_cell(p, state, xn)
+    out = rms_norm(new["h"][:, None], p["headnorm_g"]).reshape(B, 1, D).astype(x.dtype)
+    x = x + out
+    xn2 = layer_norm(x, p["ln2_g"], p["ln2_b"])
+    hg = jnp.einsum("bsd,df->bsf", xn2, p["ffn_wg"].astype(x.dtype))
+    hu = jnp.einsum("bsd,df->bsf", xn2, p["ffn_wu"].astype(x.dtype))
+    ff = jnp.einsum("bsf,fd->bsd", activation(hg, "gelu") * hu, p["ffn_wd"].astype(x.dtype))
+    return x + ff, new
+
+
+# ===========================================================================
+# Mamba-style SSM heads (hymba hybrid blocks)
+# ===========================================================================
+
+
+def ssm_dims(cfg: ModelConfig) -> Tuple[int, int, int]:
+    d_in = cfg.ssm_expand * cfg.d_model
+    return d_in, cfg.ssm_state, 16  # (d_inner, state, dt_rank)
+
+
+def init_ssm(pb: ParamBuilder, cfg: ModelConfig, num_layers: int, prefix: str = "ssm"):
+    D = cfg.d_model
+    d_in, N, R = ssm_dims(cfg)
+    L = num_layers
+    K = cfg.ssm_conv
+    pb.p(f"{prefix}_w_in", (L, D, d_in), ("layers", "embed", "mlp"))
+    pb.p(f"{prefix}_w_z", (L, D, d_in), ("layers", "embed", "mlp"))
+    pb.p(f"{prefix}_conv_w", (L, K, d_in), ("layers", None, "mlp"), init="small_normal")
+    pb.p(f"{prefix}_w_B", (L, d_in, N), ("layers", "mlp", None), init="small_normal")
+    pb.p(f"{prefix}_w_C", (L, d_in, N), ("layers", "mlp", None), init="small_normal")
+    pb.p(f"{prefix}_w_dt1", (L, d_in, R), ("layers", "mlp", None), init="small_normal")
+    pb.p(f"{prefix}_w_dt2", (L, R, d_in), ("layers", None, "mlp"), init="small_normal")
+    pb.p(f"{prefix}_b_dt", (L, d_in), ("layers", "mlp"), init="zeros")
+    pb.p(f"{prefix}_A_log", (L, d_in, N), ("layers", "mlp", None), init="zeros")
+    pb.p(f"{prefix}_D", (L, d_in), ("layers", "mlp"), init="ones")
+    pb.p(f"{prefix}_w_out", (L, d_in, D), ("layers", "mlp", "embed"))
+
+
+def _ssm_proj(p, xn, cfg, prefix):
+    dt_ = xn.dtype
+    xin = jnp.einsum("bsd,de->bse", xn, p[f"{prefix}_w_in"].astype(dt_))
+    z = jnp.einsum("bsd,de->bse", xn, p[f"{prefix}_w_z"].astype(dt_))
+    return xin, z
+
+
+def _ssm_coeffs(p, xc, cfg, prefix):
+    f32 = jnp.float32
+    Bm = jnp.einsum("bse,en->bsn", xc.astype(f32), p[f"{prefix}_w_B"].astype(f32))
+    Cm = jnp.einsum("bse,en->bsn", xc.astype(f32), p[f"{prefix}_w_C"].astype(f32))
+    dt_low = jnp.einsum("bse,er->bsr", xc.astype(f32), p[f"{prefix}_w_dt1"].astype(f32))
+    dt = jax.nn.softplus(
+        jnp.einsum("bsr,re->bse", dt_low, p[f"{prefix}_w_dt2"].astype(f32))
+        + p[f"{prefix}_b_dt"].astype(f32)[None, None]
+        - 4.0  # bias toward small dt
+    )
+    A = -jnp.exp(p[f"{prefix}_A_log"].astype(f32))  # (d_in, N), negative
+    return dt, A, Bm, Cm
+
+
+def apply_ssm(p: Dict[str, Any], xn: jax.Array, cfg: ModelConfig, prefix: str = "ssm") -> jax.Array:
+    """Train/prefill path.  xn: (B, S, D) already normed. Returns (B, S, D)."""
+    B, S, D = xn.shape
+    d_in, N, R = ssm_dims(cfg)
+    K = cfg.ssm_conv
+    xin, z = _ssm_proj(p, xn, cfg, prefix)
+    # causal depthwise conv over time
+    conv_w = p[f"{prefix}_conv_w"].astype(xin.dtype)  # (K, d_in)
+    xpad = jnp.pad(xin, ((0, 0), (K - 1, 0), (0, 0)))
+    xc = sum(xpad[:, i : i + S] * conv_w[i][None, None] for i in range(K))
+    xc = jax.nn.silu(xc)
+    dt, A, Bm, Cm = _ssm_coeffs(p, xc, cfg, prefix)
+    y = ops.ssm_scan(xc, dt.astype(xc.dtype), A, Bm, Cm, p[f"{prefix}_D"])
+    y = y * jax.nn.silu(z)
+    return jnp.einsum("bse,ed->bsd", y, p[f"{prefix}_w_out"].astype(xn.dtype))
+
+
+def ssm_state_spec(cfg: ModelConfig, batch: int):
+    d_in, N, _ = ssm_dims(cfg)
+    K = cfg.ssm_conv
+    return {
+        "h": jnp.zeros((batch, d_in, N), jnp.float32),
+        "conv": jnp.zeros((batch, K - 1, d_in), jnp.float32),
+    }
+
+
+def decode_ssm(p, state, xn, cfg, prefix: str = "ssm"):
+    """xn: (B, 1, D) normed. Returns (out (B,1,D), new_state)."""
+    B = xn.shape[0]
+    d_in, N, R = ssm_dims(cfg)
+    K = cfg.ssm_conv
+    xin, z = _ssm_proj(p, xn, cfg, prefix)  # (B,1,d_in)
+    conv_hist = jnp.concatenate(
+        [state["conv"].astype(xin.dtype), xin], axis=1
+    )  # (B, K, d_in)
+    conv_w = p[f"{prefix}_conv_w"].astype(xin.dtype)
+    xc = jnp.sum(conv_hist * conv_w[None], axis=1, keepdims=True)  # (B,1,d_in)
+    xc = jax.nn.silu(xc)
+    dt, A, Bm, Cm = _ssm_coeffs(p, xc, cfg, prefix)
+    y, h = ops.ssm_step(
+        xc[:, 0], dt[:, 0].astype(xc.dtype), A, Bm[:, 0], Cm[:, 0],
+        p[f"{prefix}_D"], state["h"],
+    )
+    y = y[:, None] * jax.nn.silu(z)
+    out = jnp.einsum("bse,ed->bsd", y, p[f"{prefix}_w_out"].astype(xn.dtype))
+    return out, {"h": h, "conv": conv_hist[:, 1:].astype(jnp.float32)}

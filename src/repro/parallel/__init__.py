@@ -1,0 +1,17 @@
+from repro.parallel.sharding import (
+    Plan,
+    batch_specs,
+    cache_specs_sharding,
+    constraint,
+    make_param_shardings,
+    param_spec,
+)
+
+__all__ = [
+    "Plan",
+    "batch_specs",
+    "cache_specs_sharding",
+    "constraint",
+    "make_param_shardings",
+    "param_spec",
+]

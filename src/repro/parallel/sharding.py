@@ -1,0 +1,232 @@
+"""Logical-axis → mesh sharding: the piece of the Execution Engine that
+turns a planner decision into concrete ``NamedSharding`` trees.
+
+Models annotate parameters with *logical* axis names ("embed", "heads",
+"mlp", "experts", …).  A :class:`Plan` maps logical names to mesh axes and
+adds FSDP ("ZeRO") sharding of the remaining largest dimension over the
+data axes.  Users never touch any of this — the planner emits the Plan
+(Adviser's instance-selection analogue) and this module applies it.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+Pytree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class Plan:
+    """A parallelism plan: what the planner hands to the runtime."""
+
+    name: str = "tp+fsdp"
+    # logical axis name -> mesh axis (or tuple of mesh axes)
+    logical: Dict[str, Any] = dataclasses.field(
+        default_factory=lambda: {
+            "vocab": "model",
+            "heads": "model",
+            "mlp": "model",
+            "experts": "model",
+        }
+    )
+    # mesh axes used for data parallelism (batch) and FSDP weight sharding
+    dp_axes: Tuple[str, ...] = ("data",)
+    fsdp_axes: Tuple[str, ...] = ("data",)
+    fsdp: bool = True
+    # train-step knobs
+    remat: str = "full"  # none | dots | full
+    microbatch: int = 1
+    shard_cache_seq: bool = True
+    compress_grads: bool = False
+    attn_impl: str = "xla"  # xla | tri (triangular flash, causal skip)
+    seq_shard_attn: bool = False  # context-parallel attention
+    ssm_chunk: int = 0  # >0: chunked selective-scan fallback
+    moe_impl: str = "scatter"  # scatter | shard_map (explicit a2a)
+    flash_block_q: int = 512
+    flash_block_k: int = 1024
+
+    def with_(self, **kw) -> "Plan":
+        return dataclasses.replace(self, **kw)
+
+
+def _axes_of(mesh: Mesh, names: Sequence[str]) -> int:
+    return int(np.prod([mesh.shape[n] for n in names])) if names else 1
+
+
+def _as_tuple(x) -> Tuple[str, ...]:
+    if x is None:
+        return ()
+    if isinstance(x, str):
+        return (x,)
+    return tuple(x)
+
+
+# when a logical dim cannot take its mesh axes (divisibility), try these
+# sibling dims of the same tensor instead (e.g. vocab 51866 on a 16-way
+# axis -> shard embed: row/column-parallel Megatron style).  head_dim is
+# deliberately NOT a fallback: sharding the attention contraction dim
+# makes XLA emit partial-sum all-reduces of S×T score tensors (observed:
+# 20 TB on the 16×16 mesh before this rule was removed).
+_FALLBACK_ORDER = ("mlp", "embed", "vocab")
+
+
+def param_spec(axes: Tuple[Optional[str], ...], shape: Tuple[int, ...],
+               mesh: Mesh, plan: Plan) -> P:
+    """Build the PartitionSpec for one parameter.
+
+    jit in_shardings demand exact divisibility, so every assignment is
+    divisibility-checked; axes that cannot land on their preferred dim
+    fall back to sibling dims in ``_FALLBACK_ORDER``.
+    """
+    used: set = set()
+    entries: list = [() for _ in shape]
+    homeless: list = []  # mesh axes whose preferred dim refused them
+
+    # embedding tables are gather operands: GSPMD cannot lower a gather
+    # whose operand is sharded on the *feature* dim (observed verifier
+    # failure on whisper/hymba, vocab % 16 != 0).  Vocab-bearing tensors
+    # therefore shard only their vocab dim; if it is indivisible they stay
+    # replicated.
+    vocab_tensor = "vocab" in axes
+
+    def try_assign(i: int, mesh_axes: Tuple[str, ...]) -> bool:
+        dim = shape[i]
+        cur = _axes_of(mesh, entries[i])
+        size = cur * _axes_of(mesh, mesh_axes)
+        if dim % size == 0 and dim >= size:
+            entries[i] = entries[i] + mesh_axes
+            used.update(mesh_axes)
+            return True
+        return False
+
+    for i, name in enumerate(axes):
+        if vocab_tensor and name != "vocab":
+            continue
+        for mx in _as_tuple(plan.logical.get(name)) if name else ():
+            if mx in used:
+                continue
+            if not try_assign(i, (mx,)):
+                homeless.append(mx)
+
+    for mx in homeless:
+        if mx in used:  # claimed by a later dim's own logical mapping
+            continue
+        if vocab_tensor:
+            continue
+        for fb in _FALLBACK_ORDER:
+            if fb in axes:
+                i = axes.index(fb)
+                if try_assign(i, (mx,)):
+                    break
+
+    total_elems = 1
+    for d in shape:
+        total_elems *= d
+    if plan.fsdp and total_elems >= (1 << 20):
+        # shard the largest still-unsharded dim over the fsdp axes; tiny
+        # leaves (norm gammas, biases) stay replicated — sharding them
+        # saves nothing and leaks weird shardings into gathers/norms
+        avail = tuple(a for a in plan.fsdp_axes if a not in used)
+        if avail:
+            fsdp_size = _axes_of(mesh, avail)
+            cand = [
+                (dim, i) for i, (dim, e) in enumerate(zip(shape, entries))
+                if not e and dim % fsdp_size == 0 and dim >= fsdp_size
+                and not (vocab_tensor and axes[i] != "vocab")
+            ]
+            if cand:
+                _, idx = max(cand)
+                entries[idx] = avail
+
+    return P(*[e if e else None for e in entries])
+
+
+def make_param_shardings(mesh: Mesh, axes_tree: Pytree, specs_tree: Pytree,
+                         plan: Plan) -> Pytree:
+    """axes_tree: logical-axes tuples; specs_tree: ShapeDtypeStructs (or
+    arrays) with matching structure."""
+
+    def one(axes, spec):
+        return NamedSharding(mesh, param_spec(tuple(axes), tuple(spec.shape), mesh, plan))
+
+    return jax.tree.map(
+        one, axes_tree, specs_tree,
+        is_leaf=lambda a: isinstance(a, tuple) and all(
+            x is None or isinstance(x, str) for x in a
+        ),
+    )
+
+
+def batch_specs(batch_tree: Pytree, mesh: Mesh, plan: Plan) -> Pytree:
+    """Shard every batch input on its leading (batch) dimension."""
+
+    def one(spec):
+        b = spec.shape[0]
+        dp = [a for a in plan.dp_axes if a in mesh.shape]
+        if b % _axes_of(mesh, dp) != 0:
+            dp = []
+        entries = [tuple(dp) if dp else None] + [None] * (len(spec.shape) - 1)
+        return NamedSharding(mesh, P(*entries))
+
+    return jax.tree.map(one, batch_tree)
+
+
+def cache_specs_sharding(cache_tree: Pytree, mesh: Mesh, plan: Plan,
+                         batch: int, max_seq: int) -> Pytree:
+    """Decode-cache sharding: batch axis → dp, the seq axis of big KV
+    leaves → model (sequence-sharded decode).  Falls back gracefully for
+    recurrent state leaves (no seq axis)."""
+    dp = tuple(a for a in plan.dp_axes if a in mesh.shape)
+    dp_size = _axes_of(mesh, dp)
+    model_axes = tuple(
+        a for a in _as_tuple(plan.logical.get("heads", "model")) if a in mesh.shape
+    ) or ("model",)
+
+    def one(spec):
+        shape = spec.shape
+        entries: list = [None] * len(shape)
+        used: set = set()
+        batch_assigned = False
+        # batch axis: first dim equal to `batch` (skip dim0 if it's layers)
+        for i, d in enumerate(shape):
+            if d == batch and dp and batch % dp_size == 0 and batch >= dp_size:
+                entries[i] = dp
+                used.update(dp)
+                batch_assigned = True
+                break
+        if plan.shard_cache_seq:
+            for i, d in enumerate(shape):
+                if entries[i] is None and d == max_seq and d >= 1024:
+                    # when batch couldn't shard (e.g. long_500k B=1), spread
+                    # the sequence over dp+model combined
+                    cand = model_axes if batch_assigned else dp + model_axes
+                    avail = tuple(a for a in cand if a not in used)
+                    if avail and d % _axes_of(mesh, avail) == 0:
+                        entries[i] = avail
+                        used.update(avail)
+                    break
+        if not any(entries):
+            # recurrent state leaves: shard the largest divisible dim over
+            # the model axes so big per-layer states spread out
+            avail = tuple(a for a in model_axes if a not in used)
+            if avail:
+                size = _axes_of(mesh, avail)
+                cand = [
+                    (d, i) for i, d in enumerate(shape)
+                    if d % size == 0 and d >= size and d != batch
+                ]
+                if cand:
+                    _, idx = max(cand)
+                    entries[idx] = avail
+        return NamedSharding(mesh, P(*entries))
+
+    return jax.tree.map(one, cache_tree)
+
+
+def constraint(x, mesh: Mesh, *names):
+    """with_sharding_constraint helper usable inside jit."""
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, P(*names)))

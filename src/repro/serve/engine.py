@@ -1,0 +1,153 @@
+"""Serving engine: slot-based continuous batching over the model decode
+paths.
+
+Design (vLLM-style, adapted to a static-shape JAX world):
+  * the engine owns a fixed decode batch of ``max_batch`` slots and one
+    jitted decode step for the whole batch — XLA-friendly static shapes;
+  * new requests are prefilled individually (B=1) and *inserted* into a
+    free slot of the batched cache (tree surgery on the batch axis);
+  * finished sequences (EOS / max_tokens) free their slot immediately, so
+    the decode batch continuously refills — no head-of-line blocking;
+  * sampling is greedy or temperature-based, per-slot rng.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Any, Callable, Deque, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.api import Model
+
+Pytree = Any
+
+
+@dataclasses.dataclass
+class Request:
+    uid: int
+    prompt: np.ndarray  # (S,) int32
+    max_new_tokens: int = 32
+    temperature: float = 0.0
+    extra: Optional[Dict[str, np.ndarray]] = None
+
+
+@dataclasses.dataclass
+class Completion:
+    uid: int
+    tokens: List[int]
+    prompt_len: int
+    finished_reason: str  # eos | length
+
+
+def _insert_slot(batched: Pytree, single: Pytree, slot: int) -> Pytree:
+    """Write a B=1 cache into slot ``slot`` of the batched cache."""
+
+    def one(b, s):
+        if b.shape == s.shape:
+            return b  # shared (non-batched) leaf
+        # the batch axis is the first axis where shapes differ
+        axis = next(i for i, (x, y) in enumerate(zip(b.shape, s.shape)) if x != y)
+        start = [0] * b.ndim
+        start[axis] = slot
+        return jax.lax.dynamic_update_slice(b, s.astype(b.dtype), tuple(start))
+
+    return jax.tree.map(one, batched, single)
+
+
+class ServeEngine:
+    def __init__(self, model: Model, params: Pytree, *, max_batch: int = 8,
+                 max_seq: int = 256, eos_id: int = 2, seed: int = 0):
+        self.model = model
+        self.params = params
+        self.max_batch = max_batch
+        self.max_seq = max_seq
+        self.eos_id = eos_id
+        self.rng = jax.random.PRNGKey(seed)
+
+        self.cache = model.init_cache(max_batch, max_seq)
+        self.active = np.zeros(max_batch, dtype=bool)
+        self.req: List[Optional[Request]] = [None] * max_batch
+        self.emitted: List[List[int]] = [[] for _ in range(max_batch)]
+        self.last_token = np.zeros((max_batch, 1), dtype=np.int32)
+        self.queue: Deque[Request] = deque()
+        self.done: List[Completion] = []
+
+        self._decode = jax.jit(model.decode_step)
+        self._prefill = jax.jit(
+            lambda p, t, e: model.prefill(p, t, e, max_seq=max_seq)
+        )
+        self._insert = jax.jit(_insert_slot, static_argnames=("slot",))
+
+    # ------------------------------------------------------------------
+    def submit(self, req: Request) -> None:
+        self.queue.append(req)
+
+    def _admit(self) -> None:
+        while self.queue and not self.active.all():
+            slot = int(np.argmax(~self.active))
+            req = self.queue.popleft()
+            tokens = jnp.asarray(req.prompt, jnp.int32)[None]
+            extra = (
+                {k: jnp.asarray(v)[None] for k, v in req.extra.items()}
+                if req.extra else None
+            )
+            logits, cache1 = self._prefill(self.params, tokens, extra)
+            self.cache = _insert_slot(self.cache, cache1, slot)
+            first = self._sample(logits[0], req.temperature)
+            self.active[slot] = True
+            self.req[slot] = req
+            self.emitted[slot] = [int(first)]
+            self.last_token[slot, 0] = int(first)
+
+    def _sample(self, logits: jax.Array, temperature: float) -> int:
+        if temperature <= 0:
+            return int(jnp.argmax(logits))
+        self.rng, sub = jax.random.split(self.rng)
+        return int(jax.random.categorical(sub, logits / temperature))
+
+    def _retire(self, slot: int, reason: str) -> None:
+        req = self.req[slot]
+        self.done.append(
+            Completion(req.uid, list(self.emitted[slot]), len(req.prompt), reason)
+        )
+        self.active[slot] = False
+        self.req[slot] = None
+        self.emitted[slot] = []
+
+    # ------------------------------------------------------------------
+    def step(self) -> None:
+        """One engine iteration: admit new work, decode one token for every
+        active slot, retire finished slots."""
+        self._admit()
+        if not self.active.any():
+            return
+        logits, self.cache = self._decode(
+            self.params, self.cache, jnp.asarray(self.last_token)
+        )
+        logits = np.asarray(logits, np.float32)  # (B, V)
+        for slot in range(self.max_batch):
+            if not self.active[slot]:
+                continue
+            req = self.req[slot]
+            tok = self._sample(jnp.asarray(logits[slot]), req.temperature)
+            self.emitted[slot].append(int(tok))
+            self.last_token[slot, 0] = int(tok)
+            if tok == self.eos_id:
+                self._retire(slot, "eos")
+            elif len(self.emitted[slot]) >= req.max_new_tokens:
+                self._retire(slot, "length")
+
+    def run(self, max_steps: int = 10_000) -> List[Completion]:
+        steps = 0
+        while (self.queue or self.active.any()) and steps < max_steps:
+            self.step()
+            steps += 1
+        return self.done
+
+    # ------------------------------------------------------------------
+    @property
+    def utilization(self) -> float:
+        return float(self.active.mean())

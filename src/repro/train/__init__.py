@@ -1,0 +1,13 @@
+from repro.train.optimizer import OptimizerConfig, adamw_init, adamw_update, lr_at
+from repro.train.step import TrainArtifacts, init_train_state, make_train_artifacts, make_train_step
+
+__all__ = [
+    "OptimizerConfig",
+    "adamw_init",
+    "adamw_update",
+    "lr_at",
+    "TrainArtifacts",
+    "init_train_state",
+    "make_train_artifacts",
+    "make_train_step",
+]

@@ -1,0 +1,30 @@
+import os
+
+# smoke tests and benches must see the single real device — the dry-run
+# (and only the dry-run) forces 512 host devices in its own process.
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import jax
+import numpy as np
+import pytest
+
+
+@pytest.fixture(autouse=True)
+def _clean_hints():
+    """Sharding hints are process-global; never leak across tests."""
+    yield
+    from repro.parallel import hints
+    from repro.models import moe
+
+    hints.clear()
+    moe.set_moe_sharding_hint(None)
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)
+
+
+@pytest.fixture
+def key():
+    return jax.random.PRNGKey(0)

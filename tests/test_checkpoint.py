@@ -1,0 +1,74 @@
+"""Checkpointer: roundtrip, async, atomic commit, rotation, mismatch."""
+import os
+import shutil
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import Checkpointer
+
+
+def _state(seed=0):
+    rng = np.random.default_rng(seed)
+    return {
+        "params": {"w": jnp.asarray(rng.normal(size=(4, 8)), jnp.float32),
+                   "b": jnp.asarray(rng.normal(size=8), jnp.bfloat16)},
+        "opt": {"m": {"w": jnp.zeros((4, 8))}, "count": jnp.asarray(3)},
+        "step": jnp.asarray(7),
+    }
+
+
+def test_roundtrip(tmp_path):
+    ck = Checkpointer(str(tmp_path), keep=2)
+    state = _state()
+    ck.save(7, state, blocking=True)
+    like = jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), state)
+    restored, step = ck.restore(like)
+    assert step == 7
+    for a, b in zip(jax.tree.leaves(state), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+
+
+def test_async_save_then_wait(tmp_path):
+    ck = Checkpointer(str(tmp_path))
+    ck.save(1, _state(1), blocking=False)
+    ck.wait()
+    assert ck.latest_step() == 1
+
+
+def test_rotation_keeps_last_n(tmp_path):
+    ck = Checkpointer(str(tmp_path), keep=2)
+    for s in (1, 2, 3, 4):
+        ck.save(s, _state(s), blocking=True)
+    steps = ck._steps()
+    assert steps == [3, 4]
+
+
+def test_atomic_commit_ignores_partial_tmp(tmp_path):
+    ck = Checkpointer(str(tmp_path), keep=3)
+    ck.save(5, _state(), blocking=True)
+    # simulate a crash mid-save: stray .tmp dir must be invisible
+    os.makedirs(tmp_path / "step_00000009.tmp")
+    assert ck.latest_step() == 5
+    restored, step = ck.restore(_state())
+    assert step == 5
+
+
+def test_restore_shape_mismatch_raises(tmp_path):
+    ck = Checkpointer(str(tmp_path))
+    ck.save(1, _state(), blocking=True)
+    bad = _state()
+    bad["params"]["w"] = jnp.zeros((2, 2))
+    with pytest.raises(ValueError, match="shape mismatch"):
+        ck.restore(bad)
+
+
+def test_restore_latest_of_many(tmp_path):
+    ck = Checkpointer(str(tmp_path), keep=5)
+    for s in (2, 9, 4):
+        ck.save(s, _state(s), blocking=True)
+    _, step = ck.restore(_state())
+    assert step == 9

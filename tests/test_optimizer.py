@@ -1,0 +1,102 @@
+"""Optimizer + schedules + compression numerics."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.train import OptimizerConfig, adamw_init, adamw_update, lr_at
+from repro.train.compression import (
+    compress_residual,
+    dequantize_int8,
+    quantize_int8,
+    reduce_stacked,
+)
+
+
+def test_adamw_minimizes_quadratic():
+    cfg = OptimizerConfig(lr=0.1, warmup_steps=1, total_steps=200,
+                          weight_decay=0.0, schedule="constant")
+    params = {"w": jnp.asarray([3.0, -2.0, 5.0])}
+    state = adamw_init(params, cfg)
+    for _ in range(150):
+        grads = {"w": 2 * params["w"]}
+        params, state, _ = adamw_update(grads, state, params, cfg)
+    assert float(jnp.max(jnp.abs(params["w"]))) < 0.05
+
+
+def test_grad_clipping_bounds_update():
+    cfg = OptimizerConfig(lr=1.0, clip_norm=1.0, warmup_steps=1,
+                          total_steps=10, schedule="constant", weight_decay=0.0)
+    params = {"w": jnp.zeros(4)}
+    state = adamw_init(params, cfg)
+    _, _, m = adamw_update({"w": jnp.full(4, 1e6)}, state, params, cfg)
+    assert m["grad_norm"] > 1e5  # reported pre-clip
+
+
+def test_schedule_shapes():
+    cfg = OptimizerConfig(lr=1.0, warmup_steps=10, total_steps=100,
+                          schedule="cosine")
+    assert float(lr_at(cfg, jnp.asarray(0))) == 0.0
+    assert abs(float(lr_at(cfg, jnp.asarray(10))) - 1.0) < 1e-6
+    assert float(lr_at(cfg, jnp.asarray(100))) < 1e-6
+    lin = OptimizerConfig(lr=1.0, warmup_steps=0, total_steps=100,
+                          schedule="linear")
+    assert abs(float(lr_at(lin, jnp.asarray(50))) - 0.5) < 0.02
+
+
+def test_moment_dtype_bf16():
+    cfg = OptimizerConfig(moment_dtype="bfloat16")
+    state = adamw_init({"w": jnp.zeros(8)}, cfg)
+    assert state["m"]["w"].dtype == jnp.bfloat16
+
+
+# ===========================================================================
+# compression
+# ===========================================================================
+@given(st.integers(1, 4000), st.floats(0.01, 100.0))
+@settings(max_examples=20, deadline=None)
+def test_quantize_roundtrip_error_bound(n, scale):
+    rng = np.random.default_rng(n)
+    x = jnp.asarray(rng.normal(size=n) * scale, jnp.float32)
+    q, s = quantize_int8(x)
+    back = dequantize_int8(q, s, x.shape, jnp.float32)
+    # blockwise max error is scale/127 per block
+    blocks = np.asarray(jnp.pad(x, (0, (-n) % 256))).reshape(-1, 256)
+    bound = np.abs(blocks).max(-1) / 127.0 + 1e-7
+    err = np.abs(np.asarray(back - x))
+    err_blocks = np.pad(err, (0, (-n) % 256)).reshape(-1, 256)
+    assert (err_blocks.max(-1) <= bound * 1.01).all()
+
+
+def test_error_feedback_is_exact_decomposition():
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=512), jnp.float32)
+    (q, s), resid = compress_residual(x)
+    back = dequantize_int8(q, s, x.shape, jnp.float32)
+    np.testing.assert_allclose(np.asarray(back + resid), np.asarray(x),
+                               atol=1e-6)
+
+
+def test_error_feedback_converges_over_steps():
+    """Repeatedly sending the same gradient with error feedback: the
+    accumulated transmitted sum approaches the true sum."""
+    rng = np.random.default_rng(0)
+    g = jnp.asarray(rng.normal(size=256), jnp.float32)
+    err = jnp.zeros_like(g)
+    sent = jnp.zeros_like(g)
+    for step in range(20):
+        (q, s), err = compress_residual(g + err)
+        sent = sent + dequantize_int8(q, s, g.shape, jnp.float32)
+    rel = float(jnp.linalg.norm(sent / 20 - g) / jnp.linalg.norm(g))
+    assert rel < 0.01
+
+
+def test_reduce_stacked_matches_sum():
+    rng = np.random.default_rng(0)
+    g = jnp.asarray(rng.normal(size=(4, 64)), jnp.float32)  # 4 workers
+    err = jnp.zeros((4, 64), jnp.float32)
+    red, new_err = reduce_stacked({"g": g}, {"g": err})
+    want = np.asarray(g).sum(0)
+    got = np.asarray(red["g"])
+    assert np.abs(got - want).max() < np.abs(np.asarray(g)).max() * 4 / 127 + 1e-6

@@ -1,0 +1,128 @@
+"""Planner invariants (hypothesis): constraints respected, rankings
+consistent, intent overrides honored."""
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import ResourceIntent, enumerate_plans, plan, rank
+from repro.core.catalog import CATALOG, CHIPS
+from repro.core.costmodel import PlanGeometry, estimate
+from repro.configs import get_config, get_shape
+
+ARCH_NAMES = ["qwen2-1.5b", "glm4-9b", "internlm2-20b", "phi3.5-moe-42b-a6.6b",
+              "xlstm-125m", "hymba-1.5b"]
+SHAPE_NAMES = ["train_4k", "prefill_32k", "decode_32k"]
+
+
+@given(
+    arch=st.sampled_from(ARCH_NAMES),
+    shape=st.sampled_from(SHAPE_NAMES),
+    goal=st.sampled_from(["production", "quick_test", "exploration"]),
+    budget=st.one_of(st.none(), st.floats(50, 50000)),
+    max_chips=st.one_of(st.none(), st.sampled_from([16, 64, 256, 1024])),
+    chip=st.one_of(st.none(), st.sampled_from(list(CHIPS))),
+)
+@settings(max_examples=25, deadline=None)
+def test_planner_respects_constraints(arch, shape, goal, budget, max_chips, chip):
+    intent = ResourceIntent(arch=arch, shape=shape, goal=goal,
+                            budget_usd_per_hour=budget, max_chips=max_chips,
+                            chip_generation=chip)
+    for c in plan(intent, top_k=10):
+        assert c.est.feasible
+        assert c.est.hbm_frac <= 0.92
+        if budget is not None:
+            assert c.slice.price_per_hour <= budget
+        if max_chips is not None:
+            assert c.slice.total_chips <= max_chips
+        if chip is not None:
+            assert c.slice.chip.name == chip
+        assert c.est.step_s > 0
+        assert c.est.cost_per_step > 0
+
+
+def test_ranking_goal_semantics():
+    intent = ResourceIntent(arch="glm4-9b", shape="train_4k", goal="exploration")
+    ranked = plan(intent, top_k=8)
+    assert ranked, "no feasible plans"
+    steps = [c.est.step_s for c in ranked]
+    assert steps == sorted(steps)
+
+    intent_p = ResourceIntent(arch="glm4-9b", shape="train_4k", goal="production")
+    ranked_p = plan(intent_p, top_k=8)
+    costs = [round(c.est.cost_per_mtok, 4) for c in ranked_p]
+    assert costs == sorted(costs)
+
+
+def test_expert_overrides():
+    intent = ResourceIntent(arch="qwen2-1.5b", shape="train_4k",
+                            slice_name="v5e-256", mesh_shape=(16, 16))
+    choices = plan(intent, top_k=3)
+    assert choices
+    for c in choices:
+        assert c.slice.name == "v5e-256"
+        assert c.mesh_shape == (16, 16)
+
+
+def test_multi_pod_excluded_when_disallowed():
+    intent = ResourceIntent(arch="internlm2-20b", shape="train_4k",
+                            allow_multi_pod=False)
+    for c in plan(intent, top_k=10):
+        assert not c.slice.multi_pod
+
+
+def test_big_moe_needs_many_chips():
+    """qwen3-moe-235b train state (~2.8 TB) cannot fit tiny slices."""
+    intent = ResourceIntent(arch="qwen3-moe-235b-a22b", shape="train_4k",
+                            max_chips=16)
+    assert plan(intent) == []
+
+
+def test_cost_model_scaling_sanity():
+    cfg = get_config("glm4-9b")
+    shape = get_shape("train_4k")
+    sl = next(s for s in CATALOG if s.name == "v5e-256")
+    small = estimate(cfg, shape, sl, PlanGeometry(data=16, model=16))
+    sl2 = next(s for s in CATALOG if s.name == "2xv5e-256")
+    big = estimate(cfg, shape, sl2, PlanGeometry(data=16, model=16, pods=2))
+    # doubling chips must cut the compute term ~in half
+    assert big.compute_s < small.compute_s * 0.6
+    # multi-pod adds cross-pod traffic
+    assert big.detail["pod_gradreduce"] > 0
+
+
+def test_optimized_profile_is_arch_aware():
+    """§Perf findings become planner defaults (the Adviser thesis):
+    triangular attention everywhere; context parallelism only when heads
+    don't divide the model axis; shard_map MoE for expert archs; chunked
+    scan for ssm/hybrid.  Baseline profile remains paper-faithful."""
+    from repro.core import to_runtime_plan
+    from repro.configs import get_config
+
+    def plan_for(arch, slice_name, mesh):
+        cfg = get_config(arch)
+        cs = plan(ResourceIntent(arch=arch, shape="train_4k",
+                                 slice_name=slice_name, mesh_shape=mesh), top_k=1)
+        assert cs, arch
+        return to_runtime_plan(cs[0], cfg=cfg)
+
+    p = plan_for("qwen2-1.5b", "v5e-256", (16, 16))  # 12 heads % 16 != 0
+    assert p.attn_impl == "tri" and p.seq_shard_attn
+    p = plan_for("glm4-9b", "v5e-256", (16, 16))  # 32 heads divide
+    assert p.attn_impl == "tri" and not p.seq_shard_attn
+    p = plan_for("hymba-1.5b", "v5e-256", (16, 16))
+    assert p.ssm_chunk == 16 and p.seq_shard_attn
+    p = plan_for("qwen3-moe-235b-a22b", "2xv5e-256", (2, 16, 16))
+    assert p.moe_impl == "shard_map"
+
+    cfg = get_config("qwen2-1.5b")
+    cs = plan(ResourceIntent(arch="qwen2-1.5b", shape="train_4k",
+                             slice_name="v5e-256", mesh_shape=(16, 16)), top_k=1)
+    base = to_runtime_plan(cs[0], cfg=cfg, profile="baseline")
+    assert base.attn_impl == "xla" and not base.seq_shard_attn
+
+
+def test_planner_rejects_qwen3_on_single_pod():
+    """qwen3-moe-235b training state cannot fit 256 x 16GB (verified by the
+    dry-run: 30 GB/dev temp floor) — the cost model encodes it."""
+    cs = plan(ResourceIntent(arch="qwen3-moe-235b-a22b", shape="train_4k",
+                             slice_name="v5e-256"))
+    assert cs == []

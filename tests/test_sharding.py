@@ -1,0 +1,97 @@
+"""Property tests for the sharding rules (hypothesis): every emitted
+PartitionSpec must be divisibility-correct and never reuse a mesh axis."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import assume, given, settings, strategies as st
+
+from repro.parallel.sharding import Plan, param_spec
+
+pytestmark = pytest.mark.filterwarnings("ignore::DeprecationWarning")
+
+
+def _mesh_2d():
+    # single CPU device: use an abstract mesh for spec computation
+    from jax.sharding import AbstractMesh
+
+    return AbstractMesh((4, 2), ("data", "model"))
+
+
+LOGICAL = ["embed", "heads", "kv_heads", "head_dim", "mlp", "vocab",
+           "experts", "layers", None]
+
+
+@given(
+    ndim=st.integers(1, 4),
+    dims=st.lists(st.sampled_from([1, 2, 3, 4, 6, 8, 12, 16, 20, 25, 64, 151]),
+                  min_size=4, max_size=4),
+    names=st.lists(st.sampled_from(LOGICAL), min_size=4, max_size=4),
+    fsdp=st.booleans(),
+)
+@settings(max_examples=200, deadline=None)
+def test_param_spec_always_valid(ndim, dims, names, fsdp):
+    mesh = _mesh_2d()
+    shape = tuple(dims[:ndim])
+    axes = tuple(names[:ndim])
+    plan = Plan(fsdp=fsdp)
+    spec = param_spec(axes, shape, mesh, plan)
+    used = []
+    for entry, dim in zip(spec, shape):
+        if entry is None:
+            continue
+        ax = entry if isinstance(entry, tuple) else (entry,)
+        size = int(np.prod([mesh.shape[a] for a in ax]))
+        assert dim % size == 0, (shape, axes, spec)
+        used.extend(ax)
+    assert len(used) == len(set(used)), f"mesh axis reused: {spec}"
+
+
+def _norm(entry):
+    if entry is None:
+        return ()
+    return (entry,) if isinstance(entry, str) else tuple(entry)
+
+
+def test_known_cases():
+    mesh = _mesh_2d()
+    plan = Plan()
+    # vocab divisible -> model on vocab, fsdp(data) on embed
+    spec = param_spec(("vocab", "embed"), (32064, 4096), mesh, plan)
+    assert _norm(spec[0]) == ("model",)
+    # embedding tables never shard their feature dim (gather operand rule)
+    assert spec[1] is None
+    # indivisible vocab -> fully replicated table
+    spec = param_spec(("vocab", "embed"), (32001, 4096), mesh, plan)
+    assert all(e is None for e in spec)
+    # heads indivisible (25 over model=2... 25%2!=0) -> falls to embed
+    spec = param_spec(("embed", "heads", "head_dim"), (1600, 25, 64), mesh, plan)
+    assert spec[1] is None
+    # embed got model (fallback) and/or data (fsdp)
+    assert spec[0] is not None
+
+
+def test_batch_and_cache_sharding_divisibility():
+    from jax.sharding import AbstractMesh
+    from repro.parallel.sharding import batch_specs, cache_specs_sharding
+
+    mesh = AbstractMesh((4, 2), ("data", "model"))
+    plan = Plan()
+    specs = {
+        "tokens": jax.ShapeDtypeStruct((8, 128), jnp.int32),
+        "odd": jax.ShapeDtypeStruct((3, 7), jnp.float32),
+    }
+    out = batch_specs(specs, mesh, plan)
+    assert _norm(out["tokens"].spec[0]) == ("data",)
+    assert out["odd"].spec[0] is None  # 3 % 4 != 0 -> replicated
+
+    cache = {
+        "k": jax.ShapeDtypeStruct((4, 8, 2048, 2, 64), jnp.bfloat16),
+        "pos": jax.ShapeDtypeStruct((8,), jnp.int32),
+        "state": jax.ShapeDtypeStruct((4, 1, 384, 16), jnp.float32),
+    }
+    sh = cache_specs_sharding(cache, mesh, plan, batch=8, max_seq=2048)
+    assert _norm(sh["k"].spec[1]) == ("data",)   # batch dim
+    assert _norm(sh["k"].spec[2]) == ("model",)  # seq dim
+    # state (B=1): largest divisible dim over model
+    assert any(_norm(e) == ("model",) for e in sh["state"].spec)
