@@ -1,19 +1,53 @@
 """The paper's primary contribution: the Adviser platform core —
-workflow templates, intent-based planning over a resource catalog,
-roofline cost model, provenance, budgets and the execution envelope."""
+workflow stage graphs and templates, intent-based planning over a
+resource catalog, roofline cost model, provenance, budgets and the
+execution envelope."""
 from repro.core.budget import BudgetExceeded, BudgetLedger, PermissionDenied, Workspace
 from repro.core.catalog import CATALOG, CHIPS, SliceType, build_catalog, catalog_summary, find_slice
 from repro.core.costmodel import CostEstimate, PlanGeometry, estimate
 from repro.core.envelope import ExecutionEnvelope
+from repro.core.graph import (
+    CycleError,
+    FnStage,
+    GraphError,
+    MissingInputError,
+    Stage,
+    StageContext,
+    StageGraph,
+    StageResult,
+)
 from repro.core.intent import ResourceIntent
-from repro.core.planner import PlanChoice, enumerate_plans, plan, rank, to_runtime_plan
-from repro.core.provenance import ProvenanceStore, RunRecord, capture_environment, stable_hash
-from repro.core.workflow import (
+from repro.core.planner import (
+    PlanChoice,
+    enumerate_plans,
+    plan,
+    plan_stages,
+    rank,
+    to_runtime_plan,
+)
+from repro.core.provenance import (
+    ProvenanceStore,
+    RunRecord,
+    StageRecordView,
+    capture_environment,
+    stable_hash,
+)
+from repro.core.stages import (
     CHECKS,
+    DataStage,
+    EvalStage,
+    PlanStage,
+    ServeStage,
+    TrainStage,
+    ValidateStage,
+    VisualizeStage,
+)
+from repro.core.workflow import (
     REGISTRY,
     WorkflowRegistry,
     WorkflowResult,
     WorkflowTemplate,
+    compile_template,
     run_workflow,
 )
 
@@ -22,8 +56,13 @@ __all__ = [
     "CATALOG", "CHIPS", "SliceType", "build_catalog", "catalog_summary", "find_slice",
     "CostEstimate", "PlanGeometry", "estimate",
     "ExecutionEnvelope", "ResourceIntent",
-    "PlanChoice", "enumerate_plans", "plan", "rank", "to_runtime_plan",
-    "ProvenanceStore", "RunRecord", "capture_environment", "stable_hash",
-    "CHECKS", "REGISTRY", "WorkflowRegistry", "WorkflowResult",
-    "WorkflowTemplate", "run_workflow",
+    "CycleError", "FnStage", "GraphError", "MissingInputError",
+    "Stage", "StageContext", "StageGraph", "StageResult",
+    "PlanChoice", "enumerate_plans", "plan", "plan_stages", "rank", "to_runtime_plan",
+    "ProvenanceStore", "RunRecord", "StageRecordView",
+    "capture_environment", "stable_hash",
+    "CHECKS", "DataStage", "EvalStage", "PlanStage", "ServeStage",
+    "TrainStage", "ValidateStage", "VisualizeStage",
+    "REGISTRY", "WorkflowRegistry", "WorkflowResult",
+    "WorkflowTemplate", "compile_template", "run_workflow",
 ]

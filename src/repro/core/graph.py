@@ -1,0 +1,384 @@
+"""Stage graph: the composable workflow DAG (paper §4.2 generalized).
+
+A workflow is a directed acyclic graph of :class:`Stage` objects.  Each
+stage declares the context keys it consumes (``inputs``) and produces
+(``outputs``), an optional per-stage :class:`ResourceIntent` the planner
+resolves independently (a cheap data-prep stage and an expensive train
+stage can land on different slices), and a ``run(ctx)`` body.  The graph
+executes stages in deterministic topological order, running independent
+stages concurrently on a thread pool, and emits per-stage provenance
+events (``stage_start`` / ``stage_end`` with timing and an outputs hash)
+into the run's :class:`RunRecord`.
+
+Graphs nest: ``inner.as_stage("prep")`` wraps a whole graph as a single
+stage of an outer graph; nested stage events are name-prefixed
+(``prep/tokenize``).
+
+Authoring a custom stage::
+
+    class MyStage(Stage):
+        inputs = ("cfg",)
+        outputs = ("thing",)
+        def run(self, ctx):
+            return {"thing": make_thing(ctx.get("cfg"))}
+
+    g = StageGraph("demo")
+    g.add(DataStage())
+    g.add(MyStage("mine"), depends_on=("data",))
+    g.execute(StageContext(template=t, record=rec))
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+from concurrent.futures import FIRST_COMPLETED, ThreadPoolExecutor, wait
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+from repro.core.intent import ResourceIntent
+from repro.core.provenance import RunRecord, stable_hash
+
+
+class GraphError(ValueError):
+    """Structural problem in a stage graph (duplicate, unknown dep, cycle)."""
+
+
+def _describe_outputs(out: Dict[str, Any]) -> Dict[str, Any]:
+    """A *structural* summary of stage outputs for the stage_end hash:
+    arrays hash by dtype/shape (their repr would truncate content and
+    force a device sync on multi-GB states), primitives by value,
+    everything else by type name.  The hash detects wiring changes —
+    different keys, shapes or scalar values — not bitwise array equality."""
+    def describe(v):
+        if v is None or isinstance(v, (bool, int, float, str)):
+            return v
+        shape = getattr(v, "shape", None)
+        dtype = getattr(v, "dtype", None)
+        if shape is not None and dtype is not None:
+            return f"{dtype}{tuple(shape)}"
+        if isinstance(v, dict):
+            return {str(k): describe(x) for k, x in sorted(v.items(), key=lambda kv: str(kv[0]))}
+        if isinstance(v, (list, tuple)):
+            return [describe(x) for x in v]
+        return type(v).__name__
+
+    return {k: describe(out[k]) for k in sorted(out)}
+
+
+class CycleError(GraphError):
+    pass
+
+
+class MissingInputError(KeyError):
+    """A stage asked the context for a key no upstream stage produced."""
+
+
+# ===========================================================================
+# Stage & context
+# ===========================================================================
+class Stage:
+    """One node of a workflow graph.
+
+    Subclasses set ``name`` (unique within a graph), optionally declare
+    ``inputs`` / ``outputs`` (context keys, used for validation and the
+    CLI's DAG rendering), an ``intent`` (per-stage resource request the
+    planner resolves via :func:`repro.core.planner.plan_stages`) and
+    ``checks`` (names into the workflow CHECKS table), and implement
+    ``run(ctx) -> dict`` returning the produced outputs.
+    """
+
+    name: str = "stage"
+    inputs: Tuple[str, ...] = ()
+    outputs: Tuple[str, ...] = ()
+    intent: Optional[ResourceIntent] = None
+    checks: Tuple[str, ...] = ()
+
+    def __init__(self, name: Optional[str] = None):
+        if name is not None:
+            self.name = name
+
+    def run(self, ctx: "StageContext") -> Dict[str, Any]:
+        raise NotImplementedError
+
+    def __repr__(self):
+        return f"<{type(self).__name__} {self.name!r}>"
+
+
+class FnStage(Stage):
+    """Wrap a plain callable ``fn(ctx) -> dict`` as a stage."""
+
+    def __init__(self, name: str, fn: Callable[["StageContext"], Optional[Dict]],
+                 inputs: Sequence[str] = (), outputs: Sequence[str] = (),
+                 intent: Optional[ResourceIntent] = None):
+        super().__init__(name)
+        self.fn = fn
+        self.inputs = tuple(inputs)
+        self.outputs = tuple(outputs)
+        self.intent = intent
+
+    def run(self, ctx: "StageContext") -> Dict[str, Any]:
+        return self.fn(ctx) or {}
+
+
+@dataclasses.dataclass
+class StageContext:
+    """Shared state threaded through a graph execution.
+
+    ``outputs`` is the blackboard stages read/write through ``get``/``put``
+    (lock-guarded — stages may run concurrently); ``params`` carries
+    run-scoped knobs (steps_override, smoke_batch, failures, intent).
+    """
+
+    template: Any = None
+    record: Optional[RunRecord] = None
+    store: Any = None
+    ledger: Any = None
+    user: str = "anonymous"
+    workspace: str = "default"
+    params: Dict[str, Any] = dataclasses.field(default_factory=dict)
+    outputs: Dict[str, Any] = dataclasses.field(default_factory=dict)
+
+    def __post_init__(self):
+        self._lock = threading.Lock()
+
+    def get(self, key: str, default: Any = dataclasses.MISSING) -> Any:
+        with self._lock:
+            if key in self.outputs:
+                return self.outputs[key]
+        if default is not dataclasses.MISSING:
+            return default
+        raise MissingInputError(
+            f"context key {key!r} not produced by any completed stage "
+            f"(have: {sorted(self.outputs)})"
+        )
+
+    def put(self, **kw: Any) -> None:
+        with self._lock:
+            self.outputs.update(kw)
+
+
+@dataclasses.dataclass
+class StageResult:
+    name: str
+    ok: bool
+    started_at: float
+    duration_s: float
+    output_keys: Tuple[str, ...] = ()
+    error: Optional[str] = None
+
+
+# ===========================================================================
+# The graph
+# ===========================================================================
+class StageGraph:
+    """DAG of stages with deterministic, concurrency-aware scheduling."""
+
+    def __init__(self, name: str = "workflow"):
+        self.name = name
+        self._stages: Dict[str, Stage] = {}
+        self._deps: Dict[str, Tuple[str, ...]] = {}
+
+    # -- construction ---------------------------------------------------
+    def add(self, stage: Stage, depends_on: Sequence[str] = ()) -> Stage:
+        if stage.name in self._stages:
+            raise GraphError(f"stage {stage.name!r} already in graph {self.name!r}")
+        self._stages[stage.name] = stage
+        self._deps[stage.name] = tuple(dict.fromkeys(depends_on))
+        return stage
+
+    def add_fn(self, name: str, fn: Callable, depends_on: Sequence[str] = (),
+               **kw) -> Stage:
+        return self.add(FnStage(name, fn, **kw), depends_on=depends_on)
+
+    @property
+    def stages(self) -> Dict[str, Stage]:
+        return dict(self._stages)
+
+    def deps(self, name: str) -> Tuple[str, ...]:
+        return self._deps[name]
+
+    # -- validation -----------------------------------------------------
+    def validate(self) -> None:
+        for name, deps in self._deps.items():
+            for d in deps:
+                if d not in self._stages:
+                    raise GraphError(
+                        f"stage {name!r} depends on unknown stage {d!r}"
+                    )
+                if d == name:
+                    raise CycleError(f"stage {name!r} depends on itself")
+        self.topo_order()  # raises CycleError on cycles
+
+    def topo_order(self) -> List[str]:
+        """Kahn's algorithm; ready stages drain in insertion order, so the
+        result is deterministic for a given construction sequence."""
+        indeg = {n: 0 for n in self._stages}
+        for n, deps in self._deps.items():
+            for d in deps:
+                if d in indeg:
+                    indeg[n] += 1
+        order: List[str] = []
+        ready = [n for n in self._stages if indeg[n] == 0]
+        while ready:
+            n = ready.pop(0)
+            order.append(n)
+            for m in self._stages:
+                if n in self._deps[m]:
+                    indeg[m] -= 1
+                    if indeg[m] == 0:
+                        ready.append(m)
+        if len(order) != len(self._stages):
+            stuck = sorted(set(self._stages) - set(order))
+            raise CycleError(f"cycle among stages {stuck} in graph {self.name!r}")
+        return order
+
+    # -- composition ----------------------------------------------------
+    def subgraph(self, targets: Sequence[str]) -> "StageGraph":
+        """The induced graph of ``targets`` plus all their ancestors —
+        what `cli run --stage X` executes."""
+        for t in targets:
+            if t not in self._stages:
+                raise GraphError(
+                    f"unknown stage {t!r}; graph has {sorted(self._stages)}"
+                )
+        keep = set()
+        frontier = list(targets)
+        while frontier:
+            n = frontier.pop()
+            if n in keep:
+                continue
+            keep.add(n)
+            frontier.extend(self._deps[n])
+        g = StageGraph(f"{self.name}[{','.join(targets)}]")
+        for n in self._stages:  # preserve insertion order
+            if n in keep:
+                g.add(self._stages[n],
+                      depends_on=tuple(d for d in self._deps[n] if d in keep))
+        return g
+
+    def as_stage(self, name: Optional[str] = None,
+                 max_workers: int = 4) -> Stage:
+        """Wrap this whole graph as one stage of an outer graph
+        (recursive subworkflow nesting)."""
+        return _SubworkflowStage(name or self.name, self, max_workers)
+
+    # -- rendering ------------------------------------------------------
+    def render(self) -> str:
+        """ASCII DAG in topological order (the CLI `graph` subcommand)."""
+        lines = [f"graph {self.name} ({len(self._stages)} stages)"]
+        for n in self.topo_order():
+            s = self._stages[n]
+            deps = ", ".join(self._deps[n]) or "-"
+            extra = ""
+            if s.intent is not None:
+                extra = f"  intent(goal={s.intent.goal})"
+            io = ""
+            if s.inputs or s.outputs:
+                io = f"  [{','.join(s.inputs)}] -> [{','.join(s.outputs)}]"
+            lines.append(f"  {n:<16s} <- {deps:<24s}{io}{extra}")
+        return "\n".join(lines)
+
+    # -- execution ------------------------------------------------------
+    def execute(self, ctx: StageContext, *, max_workers: int = 4,
+                prefix: str = "") -> Dict[str, StageResult]:
+        """Run every stage, respecting edges, independent stages in
+        parallel.  Stage exceptions propagate unchanged (after an
+        ``ok=False`` stage_end event) so callers see e.g. BudgetExceeded
+        exactly as the monolithic runner raised it."""
+        self.validate()
+        indeg = {n: sum(1 for d in self._deps[n]) for n in self._stages}
+        ready = [n for n in self.topo_order() if indeg[n] == 0]
+        results: Dict[str, StageResult] = {}
+        pending: Dict[Any, str] = {}
+
+        def _launch(pool, name):
+            stage = self._stages[name]
+            if ctx.record is not None:
+                ctx.record.log_event("stage_start", {"stage": prefix + name})
+            fut = pool.submit(self._run_stage, stage, ctx, prefix)
+            pending[fut] = name
+
+        failure: Optional[BaseException] = None
+        with ThreadPoolExecutor(max_workers=max(1, max_workers)) as pool:
+            for n in ready:
+                _launch(pool, n)
+            while pending:
+                done, _ = wait(list(pending), return_when=FIRST_COMPLETED)
+                for fut in done:
+                    name = pending.pop(fut)
+                    res, err = fut.result()
+                    results[name] = res
+                    if err is not None:
+                        failure = failure or err
+                        continue
+                    for m in self._stages:
+                        if name in self._deps[m]:
+                            indeg[m] -= 1
+                            if indeg[m] == 0 and failure is None:
+                                _launch(pool, m)
+        if failure is not None:
+            raise failure
+        return results
+
+    def _run_stage(self, stage: Stage, ctx: StageContext,
+                   prefix: str) -> Tuple[StageResult, Optional[BaseException]]:
+        t0 = time.perf_counter()
+        started = time.time()
+        try:
+            out = stage.run(ctx) or {}
+        except BaseException as e:  # noqa: BLE001 — re-raised by execute()
+            dt = time.perf_counter() - t0
+            res = StageResult(stage.name, False, started, dt, error=repr(e))
+            if ctx.record is not None:
+                ctx.record.log_event("stage_end", {
+                    "stage": prefix + stage.name, "ok": False,
+                    "duration_s": dt, "error": repr(e),
+                })
+            return res, e
+        dt = time.perf_counter() - t0
+        missing = [k for k in stage.outputs if k not in out]
+        if missing:
+            e = GraphError(
+                f"stage {stage.name!r} declared outputs {missing} but did "
+                f"not produce them (got {sorted(out)})"
+            )
+            if ctx.record is not None:
+                ctx.record.log_event("stage_end", {
+                    "stage": prefix + stage.name, "ok": False,
+                    "duration_s": dt, "error": repr(e),
+                })
+            return StageResult(stage.name, False, started, dt,
+                               error=repr(e)), e
+        ctx.put(**out)
+        res = StageResult(stage.name, True, started, dt,
+                          output_keys=tuple(sorted(out)))
+        if ctx.record is not None:
+            ctx.record.log_event("stage_end", {
+                "stage": prefix + stage.name, "ok": True, "duration_s": dt,
+                "outputs": sorted(out),
+                "outputs_hash": stable_hash(_describe_outputs(out)),
+            })
+        return res, None
+
+
+class _SubworkflowStage(Stage):
+    """A nested StageGraph executing as a single stage of an outer graph.
+
+    The inner graph shares the outer context (outputs blackboard, record,
+    params); its stage events are prefixed ``<name>/``.
+    """
+
+    def __init__(self, name: str, graph: StageGraph, max_workers: int = 4):
+        super().__init__(name)
+        self.graph = graph
+        self.max_workers = max_workers
+        order = graph.topo_order()
+        self.inputs = tuple(dict.fromkeys(
+            k for n in order for k in graph.stages[n].inputs))
+        self.outputs = tuple(dict.fromkeys(
+            k for n in order for k in graph.stages[n].outputs))
+
+    def run(self, ctx: StageContext) -> Dict[str, Any]:
+        self.graph.execute(ctx, max_workers=self.max_workers,
+                           prefix=self.name + "/")
+        return {k: ctx.get(k) for k in self.outputs if k in ctx.outputs}

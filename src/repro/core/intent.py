@@ -30,6 +30,20 @@ class ResourceIntent:
     mesh_shape: Optional[Tuple[int, ...]] = None
 
     def validate(self) -> None:
-        assert self.goal in ("production", "quick_test", "exploration"), self.goal
-        if self.min_chips and self.max_chips:
-            assert self.min_chips <= self.max_chips
+        if self.goal not in ("production", "quick_test", "exploration"):
+            raise ValueError(
+                f"unknown goal {self.goal!r}; expected production, "
+                f"quick_test or exploration"
+            )
+        if self.min_chips and self.max_chips and self.min_chips > self.max_chips:
+            raise ValueError(
+                f"min_chips ({self.min_chips}) exceeds max_chips "
+                f"({self.max_chips})"
+            )
+
+    def with_goal(self, goal: str) -> "ResourceIntent":
+        """A copy re-aimed at another goal — how a workflow gives its
+        cheap stages (data prep) a different target than its train stage."""
+        out = dataclasses.replace(self, goal=goal)
+        out.validate()
+        return out

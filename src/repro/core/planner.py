@@ -123,6 +123,32 @@ def plan(intent: ResourceIntent, top_k: int = 5) -> List[PlanChoice]:
     return rank(enumerate_plans(intent), intent.goal)[:top_k]
 
 
+def plan_stages(
+    intents: "dict[str, ResourceIntent]",
+) -> "dict[str, Optional[PlanChoice]]":
+    """Resolve one PlanChoice per stage of a workflow graph.
+
+    Each stage declares its own ResourceIntent (typically the workflow's
+    main intent re-aimed at a stage-appropriate goal), and the planner
+    runs an independent enumeration per *distinct* intent — a cheap
+    data-prep stage planning ``quick_test`` lands on the smallest
+    feasible slice while the train stage's ``production`` intent picks
+    the throughput-efficient one.  Identical intents share one
+    enumeration; stages with no feasible plan map to None.
+    """
+    cache: dict = {}
+    out: "dict[str, Optional[PlanChoice]]" = {}
+    for name in sorted(intents):
+        intent = intents[name]
+        if intent in cache:
+            out[name] = cache[intent]
+            continue
+        ranked = plan(intent, top_k=1)
+        cache[intent] = ranked[0] if ranked else None
+        out[name] = cache[intent]
+    return out
+
+
 def to_runtime_plan(choice: PlanChoice, cfg=None, profile: str = "optimized"):
     """Convert a PlanChoice into the runtime Plan consumed by the
     sharding/step layer.

@@ -73,6 +73,13 @@ class RunRecord:
             f.write(json.dumps({"kind": kind, "t": time.time(), **payload},
                                default=str) + "\n")
 
+    def update_manifest(self, **patch: Any) -> None:
+        """Merge keys into the manifest and rewrite manifest.json — used by
+        stages that learn facts after run creation (e.g. the resolved plan)."""
+        self.manifest.update(patch)
+        with open(os.path.join(self.dir, "manifest.json"), "w") as f:
+            json.dump(self.manifest, f, indent=1, default=str)
+
     @property
     def artifacts_dir(self) -> str:
         return os.path.join(self.dir, "artifacts")
@@ -82,6 +89,53 @@ class RunRecord:
             return []
         with open(self._metrics_path) as f:
             return [json.loads(line) for line in f if line.strip()]
+
+    def events(self) -> List[Dict[str, Any]]:
+        path = os.path.join(self.dir, "events.jsonl")
+        if not os.path.exists(path):
+            return []
+        with open(path) as f:
+            return [json.loads(line) for line in f if line.strip()]
+
+    def stage_events(self) -> List[Dict[str, Any]]:
+        """The per-stage provenance trail (stage_start / stage_end rows
+        with timing and outputs hash) emitted by StageGraph.execute."""
+        return [e for e in self.events()
+                if e.get("kind") in ("stage_start", "stage_end")]
+
+    def stage_view(self, stage: str) -> "StageRecordView":
+        return StageRecordView(self, stage)
+
+
+class StageRecordView:
+    """A RunRecord facade scoped to one stage: metric rows gain a
+    ``stage`` column and events a ``stage`` field, so concurrent stages
+    (e.g. a fan-out sweep's train stages) can share one run record while
+    staying separable; ``metrics()`` reads back only this stage's rows."""
+
+    def __init__(self, record: RunRecord, stage: str):
+        self._record = record
+        self.stage = stage
+        self.run_id = record.run_id
+        self.dir = record.dir
+
+    @property
+    def artifacts_dir(self) -> str:
+        return self._record.artifacts_dir
+
+    @property
+    def manifest(self) -> Dict[str, Any]:
+        return self._record.manifest
+
+    def log(self, step: int, metrics: Dict[str, Any]) -> None:
+        self._record.log(step, {**metrics, "stage": self.stage})
+
+    def log_event(self, kind: str, payload: Dict[str, Any]) -> None:
+        self._record.log_event(kind, {"stage": self.stage, **payload})
+
+    def metrics(self) -> List[Dict[str, Any]]:
+        return [r for r in self._record.metrics()
+                if r.get("stage") == self.stage]
 
 
 class ProvenanceStore:

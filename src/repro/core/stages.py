@@ -1,0 +1,435 @@
+"""Built-in stage library: the monolithic run_workflow decomposed.
+
+Each stage is one phase of the paper's workflow lifecycle (environment
+setup, data processing, simulation/training, result capture,
+visualization), reusable in any :class:`~repro.core.graph.StageGraph`:
+
+  * :class:`PlanStage`      — resolve per-stage ResourceIntents into
+                              PlanChoices, authorize budget, record plan
+  * :class:`DataStage`      — model config + shape + synthetic stream
+  * :class:`TrainStage`     — envelope-run training (per-stage overrides
+                              enable fan-out sweeps over one shared record)
+  * :class:`ServeStage`     — batched serving smoke via ServeEngine
+  * :class:`EvalStage`      — held-out loss of a trained state
+  * :class:`ValidateStage`  — template checks over the metric history
+  * :class:`VisualizeStage` — loss-curve artifact
+
+The check functions themselves live here too (re-exported by
+``repro.core.workflow`` for compatibility).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.graph import Stage, StageContext
+from repro.core.intent import ResourceIntent
+from repro.core.planner import plan_stages, to_runtime_plan
+
+
+# ===========================================================================
+# Validation checks — the early-failure nets templates carry
+# ===========================================================================
+def _check_loss_finite(history: List[Dict]) -> Tuple[bool, str]:
+    bad = [h["step"] for h in history if not np.isfinite(h.get("loss", np.nan))]
+    return (not bad, f"non-finite loss at steps {bad[:5]}" if bad else "all losses finite")
+
+
+def _check_loss_decreased(history: List[Dict]) -> Tuple[bool, str]:
+    losses = [h["loss"] for h in history if "loss" in h]
+    if len(losses) < 4:
+        return False, "too few steps to judge"
+    k = max(2, len(losses) // 4)
+    first, last = float(np.mean(losses[:k])), float(np.mean(losses[-k:]))
+    return (last < first, f"loss {first:.4f} -> {last:.4f}")
+
+
+def _check_grad_norm(history: List[Dict]) -> Tuple[bool, str]:
+    gs = [h.get("grad_norm") for h in history if h.get("grad_norm") is not None]
+    if not gs:
+        return True, "no grad norms recorded"
+    mx = max(gs)
+    return (np.isfinite(mx) and mx < 1e4, f"max grad norm {mx:.2f}")
+
+
+def _check_throughput(history: List[Dict]) -> Tuple[bool, str]:
+    ts = [h.get("step_time_s", 0) for h in (history[1:] if len(history) > 1 else history)]
+    return (bool(ts) and all(t > 0 for t in ts), f"median step {np.median(ts):.4f}s" if ts else "no steps")
+
+
+CHECKS: Dict[str, Callable[[List[Dict]], Tuple[bool, str]]] = {
+    "loss_finite": _check_loss_finite,
+    "loss_decreased": _check_loss_decreased,
+    "grad_norm_bounded": _check_grad_norm,
+    "throughput_positive": _check_throughput,
+}
+
+
+def _reduced_workload(t, smoke_batch: int = 4,
+                      smoke_seq: int = 32) -> Tuple[Any, Any, Any]:
+    """(full_cfg, cfg, shape) for a template, honoring its scale."""
+    from repro.configs import get_config, get_shape, reduced
+    from repro.configs.base import ShapeConfig
+
+    full_cfg = get_config(t.arch)
+    cfg = reduced(full_cfg) if t.scale == "reduced" else full_cfg
+    shape_full = get_shape(t.shape)
+    if t.scale == "reduced":
+        shape = ShapeConfig(shape_full.name, smoke_seq, smoke_batch,
+                            shape_full.kind)
+    else:
+        shape = shape_full
+    return full_cfg, cfg, shape
+
+
+def _require_record(ctx: StageContext, stage: Stage, why: str) -> None:
+    if ctx.record is None:
+        raise ValueError(
+            f"{type(stage).__name__} {stage.name!r} needs a StageContext "
+            f"with a record ({why})"
+        )
+
+
+def _device_batch(raw: Dict[str, Any]) -> Dict[str, Any]:
+    """Host batch -> device arrays, with the modality-specific bf16 casts
+    shared by the train and eval stages."""
+    import jax.numpy as jnp
+
+    batch = {k: jnp.asarray(v) for k, v in raw.items()}
+    if "frames" in batch:
+        batch["frames"] = batch["frames"].astype(jnp.bfloat16)
+    if "image_embeds" in batch:
+        batch["image_embeds"] = batch["image_embeds"].astype(jnp.bfloat16)
+    return batch
+
+
+# ===========================================================================
+# Plan
+# ===========================================================================
+class PlanStage(Stage):
+    """Resolve one PlanChoice per stage and authorize the budget.
+
+    ``stage_goals`` maps stage names to intent goals; each listed stage
+    gets the main intent re-aimed at that goal and its own planner pass,
+    so e.g. a data stage plans ``quick_test`` (smallest feasible slice)
+    while train plans ``production``.  Outputs:
+
+      * ``plan_choice``    — the main (train/serve) stage's winner
+      * ``stage_plans``    — {stage_name: PlanChoice | None}
+      * ``rt_plan``        — runtime sharding Plan for the main workload
+      * ``projected_cost`` — $ projection used for the budget gate
+
+    Budget protocol: this stage *authorizes* the projected spend (raising
+    BudgetExceeded/PermissionDenied before any workload runs) but does
+    not charge it — the runner charges ``projected_cost`` after the
+    workload completes, as ``run_workflow`` does.  Custom runners that
+    pass a ledger in the context must do the same.
+    """
+
+    outputs = ("plan_choice", "stage_plans", "rt_plan", "projected_cost")
+
+    def __init__(self, name: str = "plan",
+                 stage_goals: Optional[Dict[str, str]] = None):
+        super().__init__(name)
+        self.stage_goals = dict(stage_goals or {})
+
+    def _main_intent(self, ctx: StageContext) -> ResourceIntent:
+        t = ctx.template
+        intent = ctx.params.get("intent")
+        if intent is None:
+            intent = ResourceIntent(
+                arch=t.arch, shape=t.shape,
+                goal=t.intent_defaults.get("goal", "production"),
+                **{k: v for k, v in t.intent_defaults.items() if k != "goal"},
+            )
+        return intent
+
+    def run(self, ctx: StageContext) -> Dict[str, Any]:
+        t = ctx.template
+        intent = self._main_intent(ctx)
+        intents = {"__main__": intent}
+        for stage_name, goal in self.stage_goals.items():
+            intents[stage_name] = intent.with_goal(goal)
+        stage_plans = plan_stages(intents)
+        choice = stage_plans.pop("__main__")
+
+        projected = 0.0
+        if choice is not None:
+            steps = ctx.params.get("steps_override") or t.num_steps
+            projected = choice.est.cost_per_step * steps
+        if ctx.ledger is not None:
+            ctx.ledger.authorize(ctx.workspace, ctx.user, t.name, projected)
+
+        plan_doc = {
+            "slice": choice.slice.name if choice else "local",
+            "mesh_shape": choice.mesh_shape if choice else (1,),
+            "est_step_s": choice.est.step_s if choice else None,
+            "est_cost_per_step": choice.est.cost_per_step if choice else None,
+            "bottleneck": choice.est.bottleneck if choice else None,
+        }
+        if ctx.record is not None:
+            ctx.record.update_manifest(plan=plan_doc)
+            if choice is not None:
+                ctx.record.log_event("plan", {"summary": choice.summary})
+            for stage_name, c in sorted(stage_plans.items()):
+                if c is not None:
+                    ctx.record.log_event("plan", {"stage": stage_name,
+                                                  "summary": c.summary})
+
+        from repro.configs import get_config
+        from repro.parallel.sharding import Plan as RuntimePlan
+
+        rt_plan = (to_runtime_plan(choice, cfg=get_config(t.arch))
+                   if choice else RuntimePlan())
+        if t.scale == "reduced":
+            rt_plan = rt_plan.with_(microbatch=1)
+        return {"plan_choice": choice, "stage_plans": stage_plans,
+                "rt_plan": rt_plan, "projected_cost": projected}
+
+
+# ===========================================================================
+# Data
+# ===========================================================================
+class DataStage(Stage):
+    """Build the (possibly reduced) model config, shape and data stream."""
+
+    outputs = ("full_cfg", "cfg", "shape", "stream")
+
+    def __init__(self, name: str = "data", build_stream: bool = True):
+        super().__init__(name)
+        self.build_stream = build_stream
+
+    def run(self, ctx: StageContext) -> Dict[str, Any]:
+        from repro.data import make_stream
+
+        t = ctx.template
+        full_cfg, cfg, shape = _reduced_workload(
+            t, smoke_batch=ctx.params.get("smoke_batch", 4),
+            smoke_seq=ctx.params.get("smoke_seq", 32))
+        stream = make_stream(cfg, shape, t.data) if self.build_stream else None
+        return {"full_cfg": full_cfg, "cfg": cfg, "shape": shape,
+                "stream": stream}
+
+
+# ===========================================================================
+# Train
+# ===========================================================================
+class TrainStage(Stage):
+    """Envelope-run training.
+
+    ``overrides`` applies template parameter injection for this stage
+    only (a sweep's fan-out knob); ``state_key`` renames the produced
+    state so several TrainStages can coexist in one graph.  Metrics and
+    checkpoints are scoped per stage (stage column in metrics.jsonl,
+    ``ckpt-<name>`` artifact dir), so concurrent trains stay separable.
+    """
+
+    inputs = ("cfg", "shape", "stream", "rt_plan")
+
+    def __init__(self, name: str = "train",
+                 overrides: Optional[Dict[str, Any]] = None,
+                 state_key: str = "final_state"):
+        super().__init__(name)
+        self.overrides = dict(overrides or {})
+        self.state_key = state_key
+        self.outputs = (state_key,)
+
+    def run(self, ctx: StageContext) -> Dict[str, Any]:
+        import jax
+
+        from repro.checkpoint import Checkpointer
+        from repro.core.envelope import ExecutionEnvelope
+        from repro.models import build_model
+        from repro.train import init_train_state, make_train_step
+
+        _require_record(ctx, self,
+                        "the envelope logs metrics/checkpoints through it")
+        t = ctx.template
+        if self.overrides:
+            t = t.with_overrides(**self.overrides)
+        cfg = ctx.get("cfg")
+        shape = ctx.get("shape")
+        stream = ctx.get("stream")
+        rt_plan = ctx.get("rt_plan")
+        model = build_model(cfg)
+        num_steps = ctx.params.get("steps_override") or t.num_steps
+
+        step_raw = jax.jit(make_train_step(model, t.optimizer, rt_plan))
+
+        def init_fn():
+            return init_train_state(model, jax.random.PRNGKey(t.data.seed),
+                                    t.optimizer, rt_plan)
+
+        def step_fn(state, step):
+            return step_raw(state, _device_batch(stream.batch_at(step)))
+
+        record = ctx.record.stage_view(self.name)
+        ckpt = Checkpointer(f"{ctx.record.artifacts_dir}/ckpt-{self.name}",
+                            keep=2)
+        env = ExecutionEnvelope(
+            record, checkpointer=ckpt, checkpoint_every=t.checkpoint_every,
+            failures=ctx.params.get("failures"),
+        )
+        state = env.run(init_state=init_fn, step_fn=step_fn,
+                        num_steps=num_steps)
+        return {self.state_key: state}
+
+
+# ===========================================================================
+# Serve
+# ===========================================================================
+class ServeStage(Stage):
+    """Batched-serving smoke through the ServeEngine."""
+
+    inputs = ("cfg",)
+    outputs = ("final_state", "completions")
+
+    def __init__(self, name: str = "serve"):
+        super().__init__(name)
+
+    def run(self, ctx: StageContext) -> Dict[str, Any]:
+        import jax
+
+        from repro.models import build_model
+        from repro.serve.engine import smoke_serve
+
+        t = ctx.template
+        cfg = ctx.get("cfg")
+        smoke_batch = ctx.params.get("smoke_batch", 4)
+        smoke_seq = ctx.params.get("smoke_seq", 32)
+        model = build_model(cfg)
+        params, _ = model.init(jax.random.PRNGKey(t.data.seed))
+        completions, stats = smoke_serve(
+            model, params, num_requests=smoke_batch * 2,
+            max_batch=smoke_batch, max_seq=smoke_seq + 64,
+            vocab_size=cfg.vocab_size, seed=t.data.seed,
+        )
+        if ctx.record is not None:
+            ctx.record.stage_view(self.name).log(0, stats)
+        return {"final_state": completions, "completions": completions}
+
+
+# ===========================================================================
+# Eval
+# ===========================================================================
+class EvalStage(Stage):
+    """Held-out loss of a trained state on freshly-seeded batches."""
+
+    inputs = ("cfg", "shape")
+
+    def __init__(self, name: str = "eval", state_key: str = "final_state",
+                 num_batches: int = 2, seed_offset: int = 10_000,
+                 loss_key: Optional[str] = None):
+        super().__init__(name)
+        self.state_key = state_key
+        self.num_batches = num_batches
+        self.seed_offset = seed_offset
+        self.loss_key = loss_key or f"eval_loss.{name}"
+        self.outputs = (self.loss_key,)
+
+    def run(self, ctx: StageContext) -> Dict[str, Any]:
+        from repro.data import make_stream
+        from repro.models import build_model
+
+        t = ctx.template
+        cfg = ctx.get("cfg")
+        shape = ctx.get("shape")
+        state = ctx.get(self.state_key)
+        model = build_model(cfg)
+        dcfg = dataclasses.replace(t.data, seed=t.data.seed + self.seed_offset)
+        stream = make_stream(cfg, shape, dcfg)
+        losses = []
+        for i in range(self.num_batches):
+            loss, _ = model.loss(state["params"],
+                                 _device_batch(stream.batch_at(i)))
+            losses.append(float(loss))
+        mean = float(np.mean(losses)) if losses else float("nan")
+        if ctx.record is not None:
+            ctx.record.log_event("eval", {"stage": self.name,
+                                          "loss": mean,
+                                          "num_batches": self.num_batches})
+        return {self.loss_key: mean}
+
+
+# ===========================================================================
+# Validate & visualize
+# ===========================================================================
+class ValidateStage(Stage):
+    """Run the template's checks over the metric history.
+
+    ``source`` limits the history to one stage's rows (for sweeps);
+    by default all metric rows count, matching the monolithic runner.
+    """
+
+    outputs = ("checks",)
+
+    def __init__(self, name: str = "validate",
+                 source: Optional[str] = None,
+                 checks: Optional[Tuple[str, ...]] = None):
+        super().__init__(name)
+        self.source = source
+        self.checks = checks
+
+    def run(self, ctx: StageContext) -> Dict[str, Any]:
+        _require_record(ctx, self, "checks read the metric history back")
+        t = ctx.template
+        history = ctx.record.metrics()
+        if self.source is not None:
+            history = [h for h in history if h.get("stage") == self.source]
+        names = self.checks if self.checks is not None else t.checks
+        checks: Dict[str, Tuple[bool, str]] = {}
+        for name in names:
+            checks[name] = CHECKS[name](history)
+            ctx.record.log_event("check", {
+                "name": name, "ok": checks[name][0],
+                "detail": checks[name][1],
+            })
+        return {"checks": checks}
+
+
+class VisualizeStage(Stage):
+    """Loss-curve artifact (one line per stage when several trained)."""
+
+    def __init__(self, name: str = "visualize", filename: str = "loss.png"):
+        super().__init__(name)
+        self.filename = filename
+
+    def run(self, ctx: StageContext) -> Dict[str, Any]:
+        _require_record(ctx, self, "plots read metrics and write artifacts")
+        record = ctx.record
+        history = record.metrics()
+        if not history:
+            return {}
+        try:
+            import matplotlib
+            matplotlib.use("Agg")
+            import matplotlib.pyplot as plt
+        except ImportError:  # pragma: no cover
+            return {}
+        by_stage: Dict[str, Tuple[List, List]] = {}
+        for h in history:
+            if "loss" not in h:
+                continue
+            key = str(h.get("stage", "train"))
+            xs, ys = by_stage.setdefault(key, ([], []))
+            xs.append(h["step"])
+            ys.append(h["loss"])
+        if not by_stage:
+            return {}
+        fig, ax = plt.subplots(figsize=(6, 3.5))
+        for key, (xs, ys) in sorted(by_stage.items()):
+            ax.plot(xs, ys, lw=1.5,
+                    label=key if len(by_stage) > 1 else None)
+        ax.set_xlabel("step")
+        ax.set_ylabel("loss")
+        ax.set_title(record.manifest.get("template", "run"))
+        if len(by_stage) > 1:
+            ax.legend(fontsize=8)
+        ax.grid(alpha=0.3)
+        fig.tight_layout()
+        path = f"{record.artifacts_dir}/{self.filename}"
+        fig.savefig(path, dpi=110)
+        plt.close(fig)
+        return {"loss_plot": path}

@@ -1,77 +1,76 @@
 """The Workflow Engine (paper §4.2): parameterized, versioned, expert-
-crafted templates that non-experts run with one command.
+crafted templates compiled into composable stage graphs.
 
-A template bundles everything the paper says scattered expertise consists
-of: the model/arch choice and validated defaults (domain expertise), the
-resource intent defaults (cloud fluency), and the execution envelope
-settings (distributed-systems practice) — plus validation checks that
-catch the "small mistakes" §1 warns about, and a visualization stage.
+Overview
+--------
+A workflow is a DAG of stages (``repro.core.graph``), each one phase of
+the paper's lifecycle — environment/plan, data processing, simulation or
+training, result capture/validation, visualization.  The built-in stage
+library (``repro.core.stages``) decomposes what used to be a 130-line
+monolithic runner; :func:`compile_template` lowers a
+:class:`WorkflowTemplate` into the canonical graph::
 
-``run_workflow`` is the single-command entry (`adviser run` analogue):
-    plan → authorize budget → provision mesh → envelope-run → validate
-    → visualize → provenance record.
+    plan ─────┐
+              ├─> train ──> validate ──> visualize     (kind="train")
+    data ─────┘
+
+``plan`` and ``data`` have no edge between them, so they run
+concurrently; each stage emits ``stage_start``/``stage_end`` provenance
+events with timing and an outputs hash into the RunRecord.  The planner
+resolves a separate PlanChoice per stage that declares an intent goal
+(`plan_stages`), so a cheap data-prep stage and an expensive train stage
+can land on different slices.
+
+Authoring custom workflows
+--------------------------
+Build a graph directly for anything the canonical shape doesn't cover —
+e.g. a fan-out sweep (``examples/pipeline_sweep.py``)::
+
+    g = StageGraph("sweep")
+    g.add(PlanStage(stage_goals={"data": "quick_test"}))
+    g.add(DataStage())
+    for i, lr in enumerate(lrs):
+        g.add(TrainStage(f"train-{i}", overrides={"optimizer.lr": lr},
+                         state_key=f"state.{i}"),
+              depends_on=("plan", "data"))
+    g.add_fn("compare", compare_fn, depends_on=[f"train-{i}" ...])
+    g.execute(StageContext(template=t, record=rec, params={...}))
+
+Custom stages subclass :class:`~repro.core.graph.Stage` (declare
+``inputs``/``outputs``, implement ``run(ctx) -> dict``); graphs nest via
+``g.as_stage("name")``.
+
+Compatibility
+-------------
+``run_workflow(template, store, ...)`` survives as a thin wrapper:
+compile, execute, wrap the results — same checks, same provenance keys,
+same exceptions (e.g. BudgetExceeded) as the monolith.  ``stages=``
+restricts execution to a subgraph (the CLI's ``run --stage``).
 """
 from __future__ import annotations
 
 import dataclasses
-import time
-from typing import Any, Callable, Dict, List, Optional, Tuple
+import shutil
+from typing import Any, Dict, List, Optional, Sequence, Tuple
 
-import jax
-import jax.numpy as jnp
-import numpy as np
-
-from repro.configs import get_config, get_shape, reduced
-from repro.configs.base import ShapeConfig
-from repro.core.budget import BudgetLedger
-from repro.core.envelope import ExecutionEnvelope
+from repro.core.budget import BudgetExceeded, BudgetLedger, PermissionDenied
+from repro.core.graph import StageContext, StageGraph, StageResult
 from repro.core.intent import ResourceIntent
-from repro.core.planner import PlanChoice, plan as plan_intent, to_runtime_plan
+from repro.core.planner import PlanChoice
 from repro.core.provenance import ProvenanceStore, RunRecord
-from repro.data import DataConfig, make_stream
-from repro.ft.failures import FailureSchedule, RestartPolicy, StragglerWatch
-from repro.models import build_model
-from repro.train import OptimizerConfig, init_train_state, make_train_step
-
-Pytree = Any
-
-
-# ===========================================================================
-# Validation checks — the early-failure nets templates carry
-# ===========================================================================
-def _check_loss_finite(history: List[Dict]) -> Tuple[bool, str]:
-    bad = [h["step"] for h in history if not np.isfinite(h.get("loss", np.nan))]
-    return (not bad, f"non-finite loss at steps {bad[:5]}" if bad else "all losses finite")
-
-
-def _check_loss_decreased(history: List[Dict]) -> Tuple[bool, str]:
-    losses = [h["loss"] for h in history if "loss" in h]
-    if len(losses) < 4:
-        return False, "too few steps to judge"
-    k = max(2, len(losses) // 4)
-    first, last = float(np.mean(losses[:k])), float(np.mean(losses[-k:]))
-    return (last < first, f"loss {first:.4f} -> {last:.4f}")
-
-
-def _check_grad_norm(history: List[Dict]) -> Tuple[bool, str]:
-    gs = [h.get("grad_norm") for h in history if h.get("grad_norm") is not None]
-    if not gs:
-        return True, "no grad norms recorded"
-    mx = max(gs)
-    return (np.isfinite(mx) and mx < 1e4, f"max grad norm {mx:.2f}")
-
-
-def _check_throughput(history: List[Dict]) -> Tuple[bool, str]:
-    ts = [h.get("step_time_s", 0) for h in (history[1:] if len(history) > 1 else history)]
-    return (bool(ts) and all(t > 0 for t in ts), f"median step {np.median(ts):.4f}s" if ts else "no steps")
-
-
-CHECKS: Dict[str, Callable[[List[Dict]], Tuple[bool, str]]] = {
-    "loss_finite": _check_loss_finite,
-    "loss_decreased": _check_loss_decreased,
-    "grad_norm_bounded": _check_grad_norm,
-    "throughput_positive": _check_throughput,
-}
+from repro.core.stages import (
+    CHECKS,
+    DataStage,
+    EvalStage,
+    PlanStage,
+    ServeStage,
+    TrainStage,
+    ValidateStage,
+    VisualizeStage,
+)
+from repro.data import DataConfig
+from repro.ft.failures import FailureSchedule
+from repro.train import OptimizerConfig
 
 
 # ===========================================================================
@@ -179,7 +178,42 @@ _default_templates()
 
 
 # ===========================================================================
-# The single-command runner (adviser run analogue)
+# Template -> canonical stage graph
+# ===========================================================================
+def compile_template(t: WorkflowTemplate, *, with_eval: bool = False) -> StageGraph:
+    """Lower a template into its canonical stage graph.
+
+    Train templates become the 5-stage graph
+    ``{plan, data} -> train -> validate -> visualize`` (plan and data are
+    independent and run concurrently); serve templates become
+    ``{plan, data} -> serve -> validate``.  ``with_eval=True`` inserts an
+    EvalStage between train and validate.
+    """
+    g = StageGraph(t.name)
+    if t.kind == "train":
+        g.add(PlanStage(stage_goals={"data": "quick_test"}))
+        g.add(DataStage())
+        g.add(TrainStage(), depends_on=("plan", "data"))
+        tail = "train"
+        if with_eval:
+            g.add(EvalStage(), depends_on=("train",))
+            tail = "eval"
+        g.add(ValidateStage(), depends_on=(tail,))
+        if t.visualize:
+            g.add(VisualizeStage(), depends_on=("validate",))
+    elif t.kind == "serve":
+        g.add(PlanStage(stage_goals={"data": "quick_test"}))
+        g.add(DataStage(build_stream=False))
+        g.add(ServeStage(), depends_on=("plan", "data"))
+        g.add(ValidateStage(), depends_on=("serve",))
+    else:
+        raise ValueError(f"unknown workflow kind {t.kind!r}")
+    g.validate()
+    return g
+
+
+# ===========================================================================
+# The single-command runner (adviser run analogue) — compat wrapper
 # ===========================================================================
 @dataclasses.dataclass
 class WorkflowResult:
@@ -188,6 +222,7 @@ class WorkflowResult:
     checks: Dict[str, Tuple[bool, str]]
     final_state: Any
     ok: bool
+    stage_results: Dict[str, StageResult] = dataclasses.field(default_factory=dict)
 
 
 def run_workflow(
@@ -202,146 +237,74 @@ def run_workflow(
     steps_override: Optional[int] = None,
     smoke_batch: int = 4,
     smoke_seq: int = 32,
+    stages: Optional[Sequence[str]] = None,
+    with_eval: bool = False,
+    max_workers: int = 4,
 ) -> WorkflowResult:
     """Execute a workflow end-to-end on the local backend.
 
-    ``scale="reduced"`` runs the family-faithful reduced config (CPU
-    container); ``scale="full"`` is reserved for real fleets and the
-    dry-run path.  The plan is still computed for the *full* config — the
-    user sees real resource/cost projections either way (that is the
-    Adviser UX: intent in, projection + run out).
+    Thin wrapper over the stage graph: compiles the template
+    (:func:`compile_template`), executes it, and repackages the context
+    into the legacy WorkflowResult.  ``scale="reduced"`` runs the
+    family-faithful reduced config (CPU container); ``scale="full"`` is
+    reserved for real fleets and the dry-run path.  The plan is still
+    computed for the *full* config — the user sees real resource/cost
+    projections either way (that is the Adviser UX: intent in,
+    projection + run out).
+
+    ``stages`` limits execution to those stages plus their ancestors
+    (the CLI's ``run --stage``); checks that did not run report ok=True
+    vacuously only if ValidateStage was included.
     """
     t = template
+    graph = compile_template(t, with_eval=with_eval)
+    if stages:
+        graph = graph.subgraph(stages)
+
+    # resolve the intent up-front so run_id/config_hash cover it (same
+    # hashing the monolith did) and PlanStage plans exactly this intent
     intent = intent or ResourceIntent(
         arch=t.arch, shape=t.shape,
         goal=t.intent_defaults.get("goal", "production"),
         **{k: v for k, v in t.intent_defaults.items() if k != "goal"},
     )
-    choices = plan_intent(intent, top_k=1)
-    choice = choices[0] if choices else None
-
-    # --- budget gate ----------------------------------------------------
-    projected = 0.0
-    if choice is not None:
-        steps = steps_override or t.num_steps
-        projected = choice.est.cost_per_step * steps
-    if ledger is not None:
-        ledger.authorize(workspace, user, t.name, projected)
-
     record = store.create_run(
         template=t.name, template_version=t.version,
         config={**t.config_dict(), "intent": dataclasses.asdict(intent)},
-        plan={
-            "slice": choice.slice.name if choice else "local",
-            "mesh_shape": choice.mesh_shape if choice else (1,),
-            "est_step_s": choice.est.step_s if choice else None,
-            "est_cost_per_step": choice.est.cost_per_step if choice else None,
-            "bottleneck": choice.est.bottleneck if choice else None,
-        },
+        plan={"slice": None, "status": "pending"},
         workspace=workspace,
     )
-    if choice is not None:
-        record.log_event("plan", {"summary": choice.summary})
-
-    # --- build the (reduced) workload ------------------------------------
-    full_cfg = get_config(t.arch)
-    cfg = reduced(full_cfg) if t.scale == "reduced" else full_cfg
-    model = build_model(cfg)
-    shape_full = get_shape(t.shape)
-    shape = (
-        ShapeConfig(shape_full.name, smoke_seq, smoke_batch, shape_full.kind)
-        if t.scale == "reduced" else shape_full
+    ctx = StageContext(
+        template=t, record=record, store=store, ledger=ledger,
+        user=user, workspace=workspace,
+        params={
+            "intent": intent, "failures": failures,
+            "steps_override": steps_override,
+            "smoke_batch": smoke_batch, "smoke_seq": smoke_seq,
+        },
     )
+    try:
+        stage_results = graph.execute(ctx, max_workers=max_workers)
+    except (BudgetExceeded, PermissionDenied):
+        # the monolith authorized before creating the run record; keep
+        # denied attempts from leaving phantom runs in the store
+        shutil.rmtree(record.dir, ignore_errors=True)
+        raise
 
-    num_steps = steps_override or t.num_steps
-    from repro.parallel.sharding import Plan as RuntimePlan
-
-    rt_plan = to_runtime_plan(choice, cfg=full_cfg) if choice else RuntimePlan()
-    if t.scale == "reduced":
-        rt_plan = rt_plan.with_(microbatch=1)
-
-    result_state = None
-    checks: Dict[str, Tuple[bool, str]] = {}
-
-    if t.kind == "train":
-        stream = make_stream(cfg, shape, t.data)
-        step_raw = jax.jit(make_train_step(model, t.optimizer, rt_plan))
-
-        def init_fn():
-            return init_train_state(model, jax.random.PRNGKey(t.data.seed),
-                                    t.optimizer, rt_plan)
-
-        def step_fn(state, step):
-            batch = {k: jnp.asarray(v) for k, v in stream.batch_at(step).items()}
-            if "frames" in batch:
-                batch["frames"] = batch["frames"].astype(jnp.bfloat16)
-            if "image_embeds" in batch:
-                batch["image_embeds"] = batch["image_embeds"].astype(jnp.bfloat16)
-            return step_raw(state, batch)
-
-        from repro.checkpoint import Checkpointer
-        ckpt = Checkpointer(f"{record.artifacts_dir}/ckpt", keep=2)
-        env = ExecutionEnvelope(
-            record, checkpointer=ckpt, checkpoint_every=t.checkpoint_every,
-            failures=failures,
-        )
-        result_state = env.run(init_state=init_fn, step_fn=step_fn,
-                               num_steps=num_steps)
-    else:  # serve
-        from repro.serve import Request, ServeEngine
-        params, _ = model.init(jax.random.PRNGKey(t.data.seed))
-        engine = ServeEngine(model, params, max_batch=smoke_batch,
-                             max_seq=smoke_seq + 64)
-        rng = np.random.default_rng(t.data.seed)
-        t0 = time.perf_counter()
-        for i in range(smoke_batch * 2):
-            engine.submit(Request(uid=i,
-                                  prompt=rng.integers(1, cfg.vocab_size, 8),
-                                  max_new_tokens=8))
-        completions = engine.run()
-        dt = time.perf_counter() - t0
-        toks = sum(len(c.tokens) for c in completions)
-        record.log(0, {"requests": len(completions), "tokens": toks,
-                       "step_time_s": dt, "tok_per_s": toks / max(dt, 1e-9)})
-        result_state = completions
-
-    # --- validation checks ------------------------------------------------
-    history = record.metrics()
-    for name in t.checks:
-        checks[name] = CHECKS[name](history)
-        record.log_event("check", {"name": name, "ok": checks[name][0],
-                                   "detail": checks[name][1]})
-
-    # --- visualization ----------------------------------------------------
-    if t.visualize and t.kind == "train" and history:
-        _plot_history(record, history)
-
-    # --- budget charge ----------------------------------------------------
-    if ledger is not None and projected:
-        ledger.charge(workspace, user, projected, note=record.run_id)
-
+    checks = ctx.get("checks", {})
     ok = all(v[0] for v in checks.values())
     record.log_event("done", {"ok": ok})
-    return WorkflowResult(record, choice, checks, result_state, ok)
-
-
-def _plot_history(record: RunRecord, history: List[Dict]) -> None:
-    try:
-        import matplotlib
-        matplotlib.use("Agg")
-        import matplotlib.pyplot as plt
-    except ImportError:  # pragma: no cover
-        return
-    steps = [h["step"] for h in history if "loss" in h]
-    losses = [h["loss"] for h in history if "loss" in h]
-    if not steps:
-        return
-    fig, ax = plt.subplots(figsize=(6, 3.5))
-    ax.plot(steps, losses, lw=1.5)
-    ax.set_xlabel("step")
-    ax.set_ylabel("loss")
-    ax.set_title(record.manifest.get("template", "run"))
-    ax.grid(alpha=0.3)
-    fig.tight_layout()
-    fig.savefig(f"{record.artifacts_dir}/loss.png", dpi=110)
-    plt.close(fig)
+    # charge only when the main workload stage actually ran (a --stage
+    # subgraph that stops at plan/data consumed nothing billable)
+    ran_workload = any(s in stage_results for s in ("train", "serve"))
+    if ledger is not None and ran_workload and ctx.get("projected_cost", 0.0):
+        ledger.charge(workspace, user, ctx.get("projected_cost"),
+                      note=record.run_id)
+    return WorkflowResult(
+        record=record,
+        plan_choice=ctx.get("plan_choice", None),
+        checks=checks,
+        final_state=ctx.get("final_state", None),
+        ok=ok,
+        stage_results=stage_results,
+    )

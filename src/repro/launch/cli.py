@@ -3,6 +3,16 @@
     # run a curated workflow by name (non-expert path)
     python -m repro.launch.cli run train-qwen2-1.5b --steps 20
 
+    # run only part of the workflow DAG: the named stage(s) + ancestors
+    python -m repro.launch.cli run train-qwen2-1.5b --stage data --stage plan
+
+    # include the held-out eval stage between train and validate
+    python -m repro.launch.cli run train-qwen2-1.5b --with-eval --steps 20
+
+    # render a template's stage graph (topological order, deps, stage
+    # inputs/outputs and per-stage intents)
+    python -m repro.launch.cli graph train-qwen2-1.5b
+
     # intent-based resource selection (no hardware names)
     python -m repro.launch.cli plan --arch glm4-9b --shape train_4k \
         --goal production --budget 400
@@ -63,12 +73,27 @@ def cmd_run(args) -> None:
         t = t.with_overrides(**overrides)
     store = ProvenanceStore(args.runs_dir)
     res = run_workflow(t, store, user=args.user, workspace=args.workspace,
-                       steps_override=args.steps)
+                       steps_override=args.steps,
+                       stages=args.stage or None,
+                       with_eval=args.with_eval)
     print(f"run {res.record.run_id}: ok={res.ok}")
+    for name, sr in res.stage_results.items():
+        print(f"  stage {name:16s} {'ok' if sr.ok else 'FAIL':4s} "
+              f"{sr.duration_s:7.2f}s")
     for name, (ok, detail) in res.checks.items():
         print(f"  check {name:20s} {'PASS' if ok else 'FAIL'}  {detail}")
     if res.plan_choice:
         print(f"  plan: {res.plan_choice.summary}")
+
+
+def cmd_graph(args) -> None:
+    from repro.core import REGISTRY, compile_template
+
+    t = REGISTRY.get(args.template, args.version)
+    g = compile_template(t, with_eval=args.with_eval)
+    if args.stage:
+        g = g.subgraph(args.stage)
+    print(g.render())
 
 
 def cmd_catalog(args) -> None:
@@ -117,7 +142,7 @@ def main() -> None:
     p.add_argument("--goal", default="production",
                    choices=["production", "quick_test", "exploration"])
     p.add_argument("--budget", type=float, default=None, help="$ per hour cap")
-    p.add_argument("--chip", default=None, choices=[None, "v4", "v5e", "v5p"])
+    p.add_argument("--chip", default=None, choices=["v4", "v5e", "v5p"])
     p.add_argument("--min-chips", type=int, default=None)
     p.add_argument("--max-chips", type=int, default=None)
     p.add_argument("--no-multi-pod", action="store_true")
@@ -135,7 +160,20 @@ def main() -> None:
     p.add_argument("--user", default="anonymous")
     p.add_argument("--workspace", default="default")
     p.add_argument("--runs-dir", default="runs")
+    p.add_argument("--stage", action="append", default=[],
+                   help="run only this stage (+ its ancestors); repeatable")
+    p.add_argument("--with-eval", action="store_true",
+                   help="include the held-out EvalStage in the graph")
     p.set_defaults(fn=cmd_run)
+
+    p = sub.add_parser("graph", help="render a template's stage DAG")
+    p.add_argument("template")
+    p.add_argument("--version", default=None)
+    p.add_argument("--with-eval", action="store_true",
+                   help="include the held-out EvalStage in the graph")
+    p.add_argument("--stage", action="append", default=[],
+                   help="restrict to this stage (+ ancestors); repeatable")
+    p.set_defaults(fn=cmd_graph)
 
     p = sub.add_parser("catalog", help="list slice types")
     p.set_defaults(fn=cmd_catalog)

@@ -1,3 +1,3 @@
-from repro.serve.engine import Completion, Request, ServeEngine
+from repro.serve.engine import Completion, Request, ServeEngine, smoke_serve
 
-__all__ = ["Completion", "Request", "ServeEngine"]
+__all__ = ["Completion", "Request", "ServeEngine", "smoke_serve"]

@@ -151,3 +151,29 @@ class ServeEngine:
     @property
     def utilization(self) -> float:
         return float(self.active.mean())
+
+
+def smoke_serve(model: Model, params: Pytree, *, num_requests: int,
+                vocab_size: int, max_batch: int = 8, max_seq: int = 96,
+                prompt_len: int = 8, max_new_tokens: int = 8,
+                seed: int = 0) -> Tuple[List[Completion], Dict[str, float]]:
+    """Drive one engine through a synthetic request burst and report
+    throughput stats — the serving smoke used by ServeStage and quick
+    engine checks.  Returns (completions, stats) where stats carries
+    request/token counts and tokens/s for the metric log."""
+    import time
+
+    engine = ServeEngine(model, params, max_batch=max_batch, max_seq=max_seq,
+                         seed=seed)
+    rng = np.random.default_rng(seed)
+    t0 = time.perf_counter()
+    for i in range(num_requests):
+        engine.submit(Request(uid=i,
+                              prompt=rng.integers(1, vocab_size, prompt_len),
+                              max_new_tokens=max_new_tokens))
+    completions = engine.run()
+    dt = time.perf_counter() - t0
+    toks = sum(len(c.tokens) for c in completions)
+    stats = {"requests": len(completions), "tokens": toks,
+             "step_time_s": dt, "tok_per_s": toks / max(dt, 1e-9)}
+    return completions, stats

@@ -1,7 +1,9 @@
 """Planner invariants (hypothesis): constraints respected, rankings
 consistent, intent overrides honored."""
 import pytest
-from hypothesis import given, settings, strategies as st
+
+pytest.importorskip("hypothesis", reason="property tests need hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import ResourceIntent, enumerate_plans, plan, rank
 from repro.core.catalog import CATALOG, CHIPS

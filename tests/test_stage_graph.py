@@ -1,0 +1,293 @@
+"""Stage-graph workflow API: graph construction (cycle rejection,
+missing-dependency errors), deterministic + concurrent scheduling,
+subworkflow nesting, per-stage planning, and run_workflow backward-compat
+parity with the seed monolith (same checks, same provenance keys)."""
+import json
+import os
+import threading
+
+import pytest
+
+from repro.core import (
+    REGISTRY,
+    CycleError,
+    FnStage,
+    GraphError,
+    MissingInputError,
+    ProvenanceStore,
+    ResourceIntent,
+    StageContext,
+    StageGraph,
+    compile_template,
+    plan_stages,
+    run_workflow,
+)
+
+
+def _noop(name, **kw):
+    return FnStage(name, lambda ctx: {}, **kw)
+
+
+# ===========================================================================
+# Construction & validation
+# ===========================================================================
+def test_duplicate_stage_rejected():
+    g = StageGraph()
+    g.add(_noop("a"))
+    with pytest.raises(GraphError, match="already"):
+        g.add(_noop("a"))
+
+
+def test_unknown_dependency_rejected():
+    g = StageGraph()
+    g.add(_noop("a"), depends_on=("ghost",))
+    with pytest.raises(GraphError, match="unknown stage 'ghost'"):
+        g.validate()
+
+
+def test_cycle_rejected():
+    g = StageGraph()
+    g.add(_noop("a"), depends_on=("c",))
+    g.add(_noop("b"), depends_on=("a",))
+    g.add(_noop("c"), depends_on=("b",))
+    with pytest.raises(CycleError):
+        g.validate()
+    g2 = StageGraph()
+    g2.add(_noop("x"), depends_on=("x",))
+    with pytest.raises(CycleError, match="itself"):
+        g2.validate()
+
+
+def test_duplicate_dependency_deduplicated():
+    g = StageGraph()
+    g.add(_noop("a"))
+    g.add(_noop("b"), depends_on=("a", "a"))
+    assert g.deps("b") == ("a",)
+    assert g.topo_order() == ["a", "b"]  # not a false CycleError
+    ctx = StageContext()
+    results = g.execute(ctx)
+    assert results["b"].ok
+
+
+def test_topo_order_deterministic():
+    def build():
+        g = StageGraph()
+        g.add(_noop("a"))
+        g.add(_noop("b"))
+        g.add(_noop("c"), depends_on=("a", "b"))
+        g.add(_noop("d"), depends_on=("b",))
+        return g
+
+    orders = {tuple(build().topo_order()) for _ in range(5)}
+    assert orders == {("a", "b", "c", "d")}
+
+
+def test_subgraph_keeps_ancestors_only():
+    g = StageGraph()
+    g.add(_noop("plan"))
+    g.add(_noop("data"))
+    g.add(_noop("train"), depends_on=("plan", "data"))
+    g.add(_noop("validate"), depends_on=("train",))
+    sub = g.subgraph(["train"])
+    assert set(sub.stages) == {"plan", "data", "train"}
+    with pytest.raises(GraphError, match="unknown stage"):
+        g.subgraph(["nope"])
+
+
+# ===========================================================================
+# Execution semantics
+# ===========================================================================
+def test_outputs_flow_downstream_and_missing_input_raises():
+    g = StageGraph()
+    g.add(FnStage("produce", lambda ctx: {"x": 41}, outputs=("x",)))
+    g.add(FnStage("consume", lambda ctx: {"y": ctx.get("x") + 1},
+                  outputs=("y",)), depends_on=("produce",))
+    ctx = StageContext()
+    g.execute(ctx, max_workers=2)
+    assert ctx.get("y") == 42
+    with pytest.raises(MissingInputError):
+        ctx.get("never_made")
+
+
+def test_declared_output_enforced():
+    g = StageGraph()
+    g.add(FnStage("liar", lambda ctx: {}, outputs=("promised",)))
+    with pytest.raises(GraphError, match="did not produce"):
+        g.execute(StageContext())
+
+
+def test_stage_exception_propagates_unchanged():
+    class Boom(RuntimeError):
+        pass
+
+    def explode(ctx):
+        raise Boom("kaput")
+
+    g = StageGraph()
+    g.add(FnStage("bad", explode))
+    g.add(_noop("after"), depends_on=("bad",))
+    with pytest.raises(Boom, match="kaput"):
+        g.execute(StageContext())
+
+
+def test_independent_stages_run_concurrently():
+    """Two independent stages meet at a barrier — impossible if the
+    scheduler ran them serially (the barrier would time out)."""
+    barrier = threading.Barrier(2, timeout=10)
+
+    def meet(ctx):
+        barrier.wait()
+        return {}
+
+    g = StageGraph()
+    g.add(FnStage("left", meet))
+    g.add(FnStage("right", meet))
+    g.add(_noop("join"), depends_on=("left", "right"))
+    results = g.execute(StageContext(), max_workers=2)
+    assert all(r.ok for r in results.values())
+    assert results["join"].started_at >= results["left"].started_at
+
+
+def test_dependent_stage_waits_for_all_parents():
+    seen = []
+    lock = threading.Lock()
+
+    def mark(name):
+        def fn(ctx):
+            with lock:
+                seen.append(name)
+            return {}
+        return fn
+
+    g = StageGraph()
+    g.add(FnStage("p1", mark("p1")))
+    g.add(FnStage("p2", mark("p2")))
+    g.add(FnStage("child", mark("child")), depends_on=("p1", "p2"))
+    g.execute(StageContext(), max_workers=4)
+    assert seen.index("child") > max(seen.index("p1"), seen.index("p2"))
+
+
+def test_subworkflow_nesting(tmp_path):
+    inner = StageGraph("inner")
+    inner.add(FnStage("make", lambda ctx: {"inner_out": 7},
+                      outputs=("inner_out",)))
+    outer = StageGraph("outer")
+    outer.add(inner.as_stage("prep"))
+    outer.add(FnStage("use", lambda ctx: {"total": ctx.get("inner_out") * 6},
+                      outputs=("total",)), depends_on=("prep",))
+
+    store = ProvenanceStore(str(tmp_path / "runs"))
+    rec = store.create_run(template="nest", template_version="0",
+                           config={}, plan={})
+    ctx = StageContext(record=rec)
+    outer.execute(ctx)
+    assert ctx.get("total") == 42
+    stages = [e["stage"] for e in rec.stage_events()]
+    assert "prep/make" in stages and "prep" in stages and "use" in stages
+
+
+# ===========================================================================
+# Per-stage planning & intent validation
+# ===========================================================================
+def test_plan_stages_resolves_each_intent():
+    base = ResourceIntent(arch="qwen2-1.5b", shape="train_4k")
+    out = plan_stages({"train": base, "data": base.with_goal("quick_test")})
+    assert set(out) == {"train", "data"}
+    assert out["train"] is not None and out["data"] is not None
+    # quick_test ranks by absolute $/h, so data's slice is no pricier
+    assert (out["data"].slice.price_per_hour
+            <= out["train"].slice.price_per_hour)
+
+
+def test_intent_validate_raises_value_error():
+    with pytest.raises(ValueError, match="unknown goal"):
+        ResourceIntent(arch="a", shape="s", goal="warp_speed").validate()
+    with pytest.raises(ValueError, match="min_chips"):
+        ResourceIntent(arch="a", shape="s", min_chips=64,
+                       max_chips=8).validate()
+
+
+# ===========================================================================
+# Template compilation & backward-compat parity
+# ===========================================================================
+def test_compile_template_canonical_shape():
+    t = REGISTRY.get("train-qwen2-1.5b")
+    g = compile_template(t)
+    assert g.topo_order() == ["plan", "data", "train", "validate", "visualize"]
+    assert g.deps("train") == ("plan", "data")
+    s = REGISTRY.get("serve-qwen2-1.5b")
+    gs = compile_template(s)
+    assert gs.topo_order() == ["plan", "data", "serve", "validate"]
+    assert "eval" in compile_template(t, with_eval=True).stages
+
+
+def test_run_workflow_compat_parity(tmp_path):
+    """Same checks and provenance keys as the seed monolith."""
+    store = ProvenanceStore(str(tmp_path / "runs"))
+    t = REGISTRY.get("train-xlstm-125m")
+    res = run_workflow(t, store, steps_override=8)
+    assert res.ok, res.checks
+    assert set(res.checks) == set(t.checks)
+    assert os.path.exists(f"{res.record.artifacts_dir}/loss.png")
+    man = json.load(open(f"{res.record.dir}/manifest.json"))
+    assert man["template"] == t.name
+    assert man["environment"]["jax_version"]
+    assert man["plan"]["slice"]
+    assert man["config"]["intent"]["goal"] == "production"
+    # per-stage provenance: every stage has a timed stage_end event
+    ends = {e["stage"]: e for e in res.record.stage_events()
+            if e["kind"] == "stage_end"}
+    assert set(ends) == {"plan", "data", "train", "validate", "visualize"}
+    assert all(e["duration_s"] >= 0 and e["ok"] for e in ends.values())
+    assert ends["train"]["outputs_hash"]
+    # plan and data were scheduled concurrently (no edge between them)
+    events = res.record.stage_events()
+    starts = [e["stage"] for e in events if e["kind"] == "stage_start"]
+    assert starts.index("data") < len(starts)  # both started
+    assert {"plan", "data"} <= set(starts[:2])
+
+
+def test_run_workflow_stage_subgraph(tmp_path):
+    store = ProvenanceStore(str(tmp_path / "runs"))
+    t = REGISTRY.get("train-xlstm-125m")
+    res = run_workflow(t, store, stages=["data"])
+    assert set(res.stage_results) == {"data"}
+    assert res.checks == {}
+    assert res.final_state is None
+
+
+def test_budget_denied_leaves_no_phantom_run(tmp_path):
+    from repro.core import BudgetExceeded, BudgetLedger
+
+    store = ProvenanceStore(str(tmp_path / "runs"))
+    ledger = BudgetLedger(str(tmp_path / "ledger.json"))
+    ledger.create_workspace("poor", admins=["pi"], budget_usd=1e-9)
+    t = REGISTRY.get("train-xlstm-125m")
+    with pytest.raises(BudgetExceeded):
+        run_workflow(t, store, user="pi", workspace="poor", ledger=ledger,
+                     steps_override=5)
+    assert store.list_runs() == []
+
+
+def test_config_hash_covers_resolved_intent(tmp_path):
+    from repro.core import stable_hash
+
+    store = ProvenanceStore(str(tmp_path / "runs"))
+    t = REGISTRY.get("train-xlstm-125m")
+    res = run_workflow(t, store, stages=["plan"])
+    man = json.load(open(f"{res.record.dir}/manifest.json"))
+    assert man["config"]["intent"]["goal"] == "production"
+    assert stable_hash(man["config"]) == man["config_hash"]
+
+
+def test_subgraph_without_workload_charges_nothing(tmp_path):
+    from repro.core import BudgetLedger
+
+    store = ProvenanceStore(str(tmp_path / "runs"))
+    ledger = BudgetLedger(str(tmp_path / "ledger.json"))
+    ledger.create_workspace("lab", admins=["pi"], budget_usd=1e9)
+    t = REGISTRY.get("train-xlstm-125m")
+    res = run_workflow(t, store, user="pi", workspace="lab", ledger=ledger,
+                       stages=["plan"])
+    assert "train" not in res.stage_results
+    assert ledger.get("lab").spent_usd == 0.0
