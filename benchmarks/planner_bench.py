@@ -1,0 +1,137 @@
+"""Planner hot path + stage cache — the perf-trajectory bench.
+
+Measures the two costs this platform's interactivity rests on:
+
+  * **planner µs/intent** — scalar oracle vs the vectorized pipeline
+    (cold: first intent pays the candidate-table + batch-scoring build;
+    warm: later intents over the same workload reuse them; memoized:
+    repeated intents hit the ranked-order cache), over a Fig.-4-style
+    sweep of distinct intents;
+  * **stage-cache wall time** — a DataStage executed cold (miss +
+    persist) vs restored from the content-addressed cache (hit).
+
+Besides CSV rows, writes machine-readable ``BENCH_planner.json`` so the
+perf trajectory has data points across PRs.  Raises (failing the bench
+suite loudly) if the vectorized planner drops below 2× the scalar
+baseline — a regression floor far under the ≥5× it achieves, so noisy
+CI machines don't flake.
+"""
+from __future__ import annotations
+
+import json
+import tempfile
+import time
+
+OUT_PATH = "BENCH_planner.json"
+SPEEDUP_FLOOR = 2.0
+
+
+def _intents():
+    from repro.core import ResourceIntent
+
+    return [
+        ResourceIntent(arch="glm4-9b", shape="train_4k", goal="production"),
+        ResourceIntent(arch="glm4-9b", shape="train_4k", goal="exploration"),
+        ResourceIntent(arch="glm4-9b", shape="train_4k",
+                       budget_usd_per_hour=400.0),
+        ResourceIntent(arch="qwen2-1.5b", shape="train_4k", goal="production"),
+        ResourceIntent(arch="qwen2-1.5b", shape="decode_32k",
+                       goal="quick_test"),
+    ]
+
+
+def bench_planner() -> dict:
+    from repro.core import plan
+    from repro.core.catalog import candidate_table
+    from repro.core.planner import clear_planner_cache
+
+    intents = _intents()
+
+    t0 = time.perf_counter()
+    scalar_plans = [plan(i, engine="scalar") for i in intents]
+    scalar_us = (time.perf_counter() - t0) * 1e6 / len(intents)
+
+    candidate_table.cache_clear()
+    clear_planner_cache()
+    t0 = time.perf_counter()
+    vector_plans = [plan(i) for i in intents]
+    cold_us = (time.perf_counter() - t0) * 1e6 / len(intents)
+
+    reps = 20
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        for i in intents:
+            plan(i)
+    memo_us = (time.perf_counter() - t0) * 1e6 / (reps * len(intents))
+
+    rank_parity = all(
+        [(c.slice.name, c.mesh_shape, c.geometry) for c in v]
+        == [(c.slice.name, c.mesh_shape, c.geometry) for c in s]
+        for v, s in zip(vector_plans, scalar_plans)
+    )
+    return {
+        "num_intents": len(intents),
+        "scalar_us_per_intent": scalar_us,
+        "vectorized_cold_us_per_intent": cold_us,
+        "vectorized_memoized_us_per_intent": memo_us,
+        "speedup_cold": scalar_us / cold_us,
+        "speedup_memoized": scalar_us / memo_us,
+        "rank_parity": rank_parity,
+    }
+
+
+def bench_stage_cache() -> dict:
+    from repro.core import REGISTRY, DataStage, StageCache, StageContext, StageGraph
+
+    t = REGISTRY.get("train-xlstm-125m")
+
+    def run_once(cache):
+        g = StageGraph("cache-bench")
+        g.add(DataStage())
+        ctx = StageContext(template=t, cache=cache)
+        return g.execute(ctx, max_workers=1)["data"]
+
+    with tempfile.TemporaryDirectory() as tmp:
+        cache = StageCache(tmp)
+        miss = run_once(cache)
+        hit = run_once(cache)
+    assert not miss.cached and hit.cached, "stage cache did not hit"
+    return {
+        "data_stage_miss_s": miss.duration_s,
+        "data_stage_hit_s": hit.duration_s,
+        "speedup": miss.duration_s / max(hit.duration_s, 1e-9),
+    }
+
+
+def main() -> None:
+    planner = bench_planner()
+    cache = bench_stage_cache()
+    doc = {"generated_at": time.time(), "planner": planner,
+           "stage_cache": cache}
+    with open(OUT_PATH, "w") as f:
+        json.dump(doc, f, indent=1)
+
+    p = planner
+    print(f"planner/scalar_us_per_intent,{p['scalar_us_per_intent']:.1f},"
+          f"num_intents={p['num_intents']}")
+    print(f"planner/vectorized_cold,{p['vectorized_cold_us_per_intent']:.1f},"
+          f"speedup={p['speedup_cold']:.1f}x")
+    print(f"planner/vectorized_memoized,"
+          f"{p['vectorized_memoized_us_per_intent']:.1f},"
+          f"speedup={p['speedup_memoized']:.1f}x")
+    print(f"planner/rank_parity,0.0,ok={p['rank_parity']}")
+    print(f"stagecache/data_miss,{cache['data_stage_miss_s']*1e6:.1f},"
+          f"hit_us={cache['data_stage_hit_s']*1e6:.1f}"
+          f";speedup={cache['speedup']:.1f}x")
+
+    if not p["rank_parity"]:
+        raise RuntimeError("vectorized ranking diverged from scalar oracle")
+    if p["speedup_cold"] < SPEEDUP_FLOOR:
+        raise RuntimeError(
+            f"vectorized planner regressed: {p['speedup_cold']:.1f}x < "
+            f"{SPEEDUP_FLOOR}x floor over scalar"
+        )
+
+
+if __name__ == "__main__":
+    main()

@@ -2,16 +2,25 @@
 
 Prints ``name,us_per_call,derived`` CSV rows:
   * catalog_stats   — Fig. 1 analogue (choice explosion, planner search)
+  * planner_bench   — planner µs/intent scalar vs vectorized + stage
+                      cache hit/miss wall time (writes BENCH_planner.json)
   * instance_sweep  — Fig. 4 analogue (time & $ across chip generations)
   * scaling         — Table 2 analogue (scale-up vs scale-out efficiency)
   * kernels_bench   — kernel micro latencies (oracle + interpret spot)
   * throughput      — measured train/serve throughput (reduced, CPU host)
   * roofline        — deliverable (g): terms from the dry-run artifact
+
+``--sections a,b`` runs a fast subset (the CI bench smoke runs
+``catalog_stats,planner_bench`` so planner perf regressions fail loudly).
 """
 from __future__ import annotations
 
+import argparse
+import os
 import sys
 import traceback
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
 
 
 def main() -> None:
@@ -19,6 +28,7 @@ def main() -> None:
         catalog_stats,
         instance_sweep,
         kernels_bench,
+        planner_bench,
         roofline,
         scaling,
         throughput,
@@ -26,12 +36,26 @@ def main() -> None:
 
     sections = [
         ("catalog_stats", catalog_stats.main),
+        ("planner_bench", planner_bench.main),
         ("instance_sweep", instance_sweep.main),
         ("scaling", scaling.main),
         ("kernels_bench", kernels_bench.main),
         ("throughput", throughput.main),
         ("roofline", roofline.main),
     ]
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--sections", default=None,
+                    help="comma-separated subset to run "
+                         f"(default all: {','.join(n for n, _ in sections)})")
+    args = ap.parse_args()
+    if args.sections:
+        wanted = [s.strip() for s in args.sections.split(",") if s.strip()]
+        known = {n for n, _ in sections}
+        unknown = [w for w in wanted if w not in known]
+        if unknown:
+            ap.error(f"unknown sections {unknown}; have {sorted(known)}")
+        sections = [(n, fn) for n, fn in sections if n in wanted]
+
     print("name,us_per_call,derived")
     failed = 0
     for name, fn in sections:

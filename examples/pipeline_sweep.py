@@ -14,6 +14,10 @@ Each train stage gets its own learning rate via parameter injection
 shared run record, and checkpoints under its own artifact dir.  The
 compare stage reads every train's history back from provenance and ranks
 the sweep; stage_start/stage_end events prove the trains overlapped.
+
+A cross-run StageCache is attached: the first run executes the data
+stage and persists its outputs under a content-addressed input hash;
+re-running the sweep skips it with a `stage_cached` provenance event.
 """
 import os
 import sys
@@ -25,6 +29,7 @@ from repro.core import (  # noqa: E402
     DataStage,
     PlanStage,
     ProvenanceStore,
+    StageCache,
     StageContext,
     StageGraph,
     TrainStage,
@@ -67,14 +72,24 @@ def main():
     g.add(VisualizeStage(filename="sweep.png"), depends_on=("compare",))
 
     print(g.render())
-    ctx = StageContext(template=t, record=record,
+    cache = StageCache()
+    ctx = StageContext(template=t, record=record, cache=cache,
                        params={"steps_override": STEPS})
     results = g.execute(ctx, max_workers=4)
 
     print("\nstage timings:")
     for name, r in results.items():
+        note = "  (cache hit)" if r.cached else ""
         print(f"  {name:12s} ok={r.ok}  start=+{r.started_at % 1000:7.3f}s "
-              f"dur={r.duration_s:6.2f}s")
+              f"dur={r.duration_s:6.2f}s{note}")
+    cached_events = [e for e in record.stage_events()
+                     if e["kind"] == "stage_cached"]
+    if cached_events:
+        print(f"\nstages skipped via cross-run cache: "
+              f"{[e['stage'] for e in cached_events]}")
+    else:
+        print("\ncold cache: data stage executed and persisted "
+              "(re-run to see the stage_cached hit)")
 
     # demonstrate concurrency: at least two train stages overlapped
     spans = [(results[f"train-{i}"].started_at,

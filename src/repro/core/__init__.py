@@ -3,8 +3,23 @@ workflow stage graphs and templates, intent-based planning over a
 resource catalog, roofline cost model, provenance, budgets and the
 execution envelope."""
 from repro.core.budget import BudgetExceeded, BudgetLedger, PermissionDenied, Workspace
-from repro.core.catalog import CATALOG, CHIPS, SliceType, build_catalog, catalog_summary, find_slice
-from repro.core.costmodel import CostEstimate, PlanGeometry, estimate
+from repro.core.catalog import (
+    CATALOG,
+    CHIPS,
+    CandidateTable,
+    SliceType,
+    build_catalog,
+    candidate_table,
+    catalog_summary,
+    find_slice,
+)
+from repro.core.costmodel import (
+    BatchEstimate,
+    CostEstimate,
+    PlanGeometry,
+    estimate,
+    estimate_batch,
+)
 from repro.core.envelope import ExecutionEnvelope
 from repro.core.graph import (
     CycleError,
@@ -19,12 +34,16 @@ from repro.core.graph import (
 from repro.core.intent import ResourceIntent
 from repro.core.planner import (
     PlanChoice,
+    clear_planner_cache,
     enumerate_plans,
+    intent_hash,
     plan,
     plan_stages,
+    prune_dominated,
     rank,
     to_runtime_plan,
 )
+from repro.core.stagecache import StageCache
 from repro.core.provenance import (
     ProvenanceStore,
     RunRecord,
@@ -53,12 +72,14 @@ from repro.core.workflow import (
 
 __all__ = [
     "BudgetExceeded", "BudgetLedger", "PermissionDenied", "Workspace",
-    "CATALOG", "CHIPS", "SliceType", "build_catalog", "catalog_summary", "find_slice",
-    "CostEstimate", "PlanGeometry", "estimate",
+    "CATALOG", "CHIPS", "CandidateTable", "SliceType", "build_catalog",
+    "candidate_table", "catalog_summary", "find_slice",
+    "BatchEstimate", "CostEstimate", "PlanGeometry", "estimate", "estimate_batch",
     "ExecutionEnvelope", "ResourceIntent",
     "CycleError", "FnStage", "GraphError", "MissingInputError",
-    "Stage", "StageContext", "StageGraph", "StageResult",
-    "PlanChoice", "enumerate_plans", "plan", "plan_stages", "rank", "to_runtime_plan",
+    "Stage", "StageCache", "StageContext", "StageGraph", "StageResult",
+    "PlanChoice", "clear_planner_cache", "enumerate_plans", "intent_hash",
+    "plan", "plan_stages", "prune_dominated", "rank", "to_runtime_plan",
     "ProvenanceStore", "RunRecord", "StageRecordView",
     "capture_environment", "stable_hash",
     "CHECKS", "DataStage", "EvalStage", "PlanStage", "ServeStage",

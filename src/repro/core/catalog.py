@@ -12,8 +12,11 @@ Chip generations play the role of the paper's m6a → m7a → m8a sweep.
 from __future__ import annotations
 
 import dataclasses
+import functools
 import itertools
 from typing import Dict, List, Optional, Tuple
+
+import numpy as np
 
 
 @dataclasses.dataclass(frozen=True)
@@ -110,3 +113,141 @@ def catalog_summary() -> Dict[str, int]:
         "chip_generations": len(CHIPS),
         "multi_pod_options": sum(1 for s in CATALOG if s.multi_pod),
     }
+
+
+# ===========================================================================
+# Vectorized candidate table — the planner hot path's search space,
+# materialized once as structure-of-arrays
+# ===========================================================================
+REMAT_CODES = {"none": 0, "dots": 1, "full": 2}
+
+
+def geometries_for(mesh_shape: Tuple[int, ...], mesh_axes: Tuple[str, ...],
+                   kind: str, global_batch: int) -> list:
+    """Candidate PlanGeometry list for one mesh: the (remat × microbatch)
+    grid the planner scores.  Single source of truth for both the scalar
+    enumeration loop and the vectorized candidate table, so the two
+    engines visit identical rows in identical order (stable sorts then
+    agree bit-for-bit on ranking)."""
+    from repro.core.costmodel import PlanGeometry
+
+    dims = dict(zip(mesh_axes, mesh_shape))
+    pods = dims.get("pod", 1)
+    data = dims.get("data", 1)
+    model = dims.get("model", 1)
+    out = []
+    remats = ("dots", "full", "none") if kind == "train" else ("none",)
+    ubatches = (1, 2, 4) if kind == "train" else (1,)
+    for remat in remats:
+        for ub in ubatches:
+            if global_batch % max(data * pods * ub, 1) != 0:
+                continue
+            out.append(PlanGeometry(
+                data=data, model=model, pods=pods,
+                fsdp=True, remat=remat, microbatch=ub,
+            ))
+    return out or [PlanGeometry(data=data, model=model, pods=pods)]
+
+
+@dataclasses.dataclass(frozen=True)
+class CandidateTable:
+    """Structure-of-arrays view of every (slice × mesh × geometry) cell.
+
+    One row per candidate the planner scores.  Object columns (``slices``,
+    ``mesh_shapes``, ``mesh_axes``, ``geometries``) carry each row's
+    identity for materializing PlanChoices; the numeric columns are
+    parallel NumPy arrays consumed by :func:`costmodel.estimate_batch`.
+    Row order matches the scalar enumeration loop (CATALOG order ×
+    ``mesh_shapes_for`` order × ``geometries_for`` order).
+    """
+
+    slices: tuple            # row -> SliceType
+    mesh_shapes: tuple       # row -> Tuple[int, ...]
+    mesh_axes: tuple         # row -> Tuple[str, ...]
+    geometries: tuple        # row -> PlanGeometry
+    slice_idx: "np.ndarray"  # row -> index into CATALOG
+    chips: "np.ndarray"
+    data: "np.ndarray"
+    model: "np.ndarray"
+    pods: "np.ndarray"
+    microbatch: "np.ndarray"
+    remat_code: "np.ndarray"
+    fsdp: "np.ndarray"
+    compress: "np.ndarray"
+    peak_flops: "np.ndarray"
+    hbm_bytes: "np.ndarray"
+    hbm_bw: "np.ndarray"
+    ici_bw: "np.ndarray"
+    dci_bw: "np.ndarray"
+    chip_price: "np.ndarray"   # $/chip-hour
+    slice_price: "np.ndarray"  # $/slice-hour
+    multi_pod: "np.ndarray"
+
+    def __len__(self) -> int:
+        return len(self.slices)
+
+
+@functools.lru_cache(maxsize=64)
+def candidate_table(kind: str, global_batch: int) -> CandidateTable:
+    """Materialize all (slice, mesh_shape, geometry) cells as arrays.
+
+    The candidate grid depends on the workload only through
+    ``(kind, global_batch)`` — remat/microbatch options come from the
+    kind, microbatch divisibility from the global batch — so one table
+    serves every (config, shape) with that signature and is built exactly
+    once per process (lru-cached).
+    """
+    sl_rows: List[SliceType] = []
+    mesh_rows: List[Tuple[int, ...]] = []
+    axes_rows: List[Tuple[str, ...]] = []
+    geom_rows: List = []
+    # per-slice numeric columns, expanded to rows with np.repeat below
+    counts: List[int] = []
+    slice_num: List[Tuple] = []
+    # per-geometry numeric columns (one 7-tuple per row)
+    geom_num: List[Tuple] = []
+    for si, sl in enumerate(CATALOG):
+        n_before = len(geom_rows)
+        for mesh_shape, mesh_axes in mesh_shapes_for(sl):
+            mesh_shape, mesh_axes = tuple(mesh_shape), tuple(mesh_axes)
+            for geom in geometries_for(mesh_shape, mesh_axes,
+                                       kind, global_batch):
+                sl_rows.append(sl)
+                mesh_rows.append(mesh_shape)
+                axes_rows.append(mesh_axes)
+                geom_rows.append(geom)
+                geom_num.append((geom.total, geom.data, geom.model,
+                                 geom.pods, geom.microbatch,
+                                 REMAT_CODES[geom.remat], geom.fsdp,
+                                 geom.compress_grads))
+        counts.append(len(geom_rows) - n_before)
+        c = sl.chip
+        slice_num.append((si, c.peak_bf16_flops, c.hbm_bytes, c.hbm_bw,
+                          c.ici_bw, c.dci_bw, c.price_per_hour,
+                          sl.price_per_hour, sl.multi_pod))
+    gcols = np.asarray(geom_num, dtype=np.int64).T
+    scols = np.repeat(np.asarray(slice_num, dtype=np.float64),
+                      counts, axis=0).T
+    return CandidateTable(
+        slices=tuple(sl_rows),
+        mesh_shapes=tuple(mesh_rows),
+        mesh_axes=tuple(axes_rows),
+        geometries=tuple(geom_rows),
+        slice_idx=scols[0].astype(np.int64),
+        chips=gcols[0],
+        data=gcols[1],
+        model=gcols[2],
+        pods=gcols[3],
+        microbatch=gcols[4],
+        remat_code=gcols[5],
+        fsdp=gcols[6].astype(bool),
+        compress=gcols[7].astype(bool),
+        peak_flops=scols[1],
+        hbm_bytes=scols[2],
+        hbm_bw=scols[3],
+        ici_bw=scols[4],
+        dci_bw=scols[5],
+        chip_price=scols[6],
+        slice_price=scols[7],
+        multi_pod=scols[8].astype(bool),
+    )

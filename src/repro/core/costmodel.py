@@ -19,8 +19,10 @@ import dataclasses
 import math
 from typing import Dict, Optional, Tuple
 
+import numpy as np
+
 from repro.configs.base import ModelConfig, ShapeConfig
-from repro.core.catalog import SliceType
+from repro.core.catalog import CandidateTable, SliceType
 
 
 @dataclasses.dataclass(frozen=True)
@@ -276,4 +278,187 @@ def estimate(cfg: ModelConfig, shape: ShapeConfig, slice_: SliceType,
         bottleneck=bottleneck,
         feasible=feasible,
         detail={**terms, **colls, "flops": flops, "hbm_bytes": hbm},
+    )
+
+
+# ===========================================================================
+# Batched estimation over a CandidateTable — the vectorized planner hot
+# path.  The scalar `estimate()` above stays the parity oracle: every
+# formula here mirrors it operation-for-operation on whole float64
+# columns, so the two agree bit-for-bit per cell.
+# ===========================================================================
+BOTTLENECK_NAMES = ("compute", "memory", "collective")
+
+
+@dataclasses.dataclass(frozen=True)
+class BatchEstimate:
+    """Columnar CostEstimate: one float64 entry per CandidateTable row."""
+
+    compute_s: np.ndarray
+    memory_s: np.ndarray
+    collective_s: np.ndarray
+    step_s: np.ndarray
+    bytes_per_device: np.ndarray
+    hbm_frac: np.ndarray
+    cost_per_step: np.ndarray
+    cost_per_mtok: np.ndarray
+    bottleneck_code: np.ndarray  # index into BOTTLENECK_NAMES
+    feasible: np.ndarray         # bool
+    colls: Dict[str, np.ndarray]
+    flops: float
+    hbm: np.ndarray
+
+    def __len__(self) -> int:
+        return len(self.step_s)
+
+    def estimate_at(self, i: int) -> CostEstimate:
+        """Materialize one row as the scalar CostEstimate `estimate()`
+        would have returned for the same cell."""
+        terms = {
+            "compute": float(self.compute_s[i]),
+            "memory": float(self.memory_s[i]),
+            "collective": float(self.collective_s[i]),
+        }
+        return CostEstimate(
+            compute_s=terms["compute"],
+            memory_s=terms["memory"],
+            collective_s=terms["collective"],
+            step_s=float(self.step_s[i]),
+            bytes_per_device=float(self.bytes_per_device[i]),
+            hbm_frac=float(self.hbm_frac[i]),
+            cost_per_step=float(self.cost_per_step[i]),
+            cost_per_mtok=float(self.cost_per_mtok[i]),
+            bottleneck=BOTTLENECK_NAMES[int(self.bottleneck_code[i])],
+            feasible=bool(self.feasible[i]),
+            detail={**terms,
+                    **{k: float(v[i]) for k, v in self.colls.items()},
+                    "flops": self.flops, "hbm_bytes": float(self.hbm[i])},
+        )
+
+
+def _activation_bytes_batch(cfg: ModelConfig, shape: ShapeConfig,
+                            table: CandidateTable) -> np.ndarray:
+    if shape.kind != "train":
+        B, S = shape.global_batch, shape.seq_len
+        if shape.kind == "decode":
+            S = 1
+        return B * S * cfg.d_model * BYTES[cfg.dtype] * 8 / table.chips
+    dp_total = np.maximum(table.data * table.pods, 1)
+    B = shape.global_batch / dp_total / np.maximum(table.microbatch, 1)
+    S = shape.seq_len
+    bt = BYTES[cfg.dtype]
+    d = cfg.d_model
+    model = np.maximum(table.model, 1)
+    live_full = cfg.num_layers * (B * S * d * bt) + 4 * B * S * d * bt
+    live_dots = cfg.num_layers * (3 * B * S * d * bt) + 4 * B * S * d * bt
+    ff = max(cfg.d_ff, d * 2)
+    live_none = cfg.num_layers * ((6 * d + 2 * ff) * B * S * bt / model * 1.0)
+    live = np.where(table.remat_code == 2, live_full,
+                    np.where(table.remat_code == 1, live_dots, live_none))
+    logits = B * S * cfg.vocab_size * 4.0 / model
+    return live / model + logits
+
+
+def _collective_bytes_batch(cfg: ModelConfig, shape: ShapeConfig,
+                            table: CandidateTable,
+                            kind: str) -> Dict[str, np.ndarray]:
+    bt = BYTES[cfg.dtype]
+    n = cfg.param_count()
+    z = np.zeros(len(table))
+    out = {"tp_allreduce": z, "dp_gradreduce": z, "fsdp_gather": z,
+           "ep_alltoall": z, "pod_gradreduce": z}
+    tokens = shape.tokens_per_step
+    act = tokens * cfg.d_model * bt
+    nblocks = cfg.num_layers + (cfg.encoder_layers if cfg.is_encoder_decoder else 0)
+    mult = 3.0 if kind == "train" else 1.0
+    out["tp_allreduce"] = np.where(table.model > 1,
+                                   2.0 * act * 2 * nblocks * mult, 0.0)
+    if kind == "train":
+        grad_bytes = n * BYTES["float32"]
+        out["fsdp_gather"] = np.where(table.fsdp, 2 * n * bt + grad_bytes, 0.0)
+        out["dp_gradreduce"] = np.where(
+            (table.data * table.pods > 1) & ~table.fsdp, 2 * grad_bytes, 0.0)
+        pod_bytes = 2 * grad_bytes / np.maximum(table.data * table.model, 1)
+        pod_bytes = np.where(table.compress, pod_bytes / 4.0, pod_bytes)
+        out["pod_gradreduce"] = np.where(table.pods > 1, pod_bytes, 0.0)
+    if cfg.num_experts > 0:
+        disp = tokens * cfg.top_k * cfg.moe_capacity_factor * cfg.d_model * bt
+        out["ep_alltoall"] = np.full(
+            len(table), 2.0 * disp * cfg.num_layers * mult / max(1, 1))
+    return out
+
+
+def estimate_batch(cfg: ModelConfig, shape: ShapeConfig,
+                   table: CandidateTable,
+                   moment_dtype: str = "float32") -> BatchEstimate:
+    """`estimate()` over every row of a CandidateTable at once."""
+    kind = shape.kind
+    if kind == "train":
+        flops = _train_flops(cfg, shape)
+    elif kind == "prefill":
+        flops = _prefill_flops(cfg, shape)
+    else:
+        flops = _decode_flops(cfg, shape)
+    compute_s = flops / (table.chips * table.peak_flops)
+
+    sbytes = state_bytes(cfg, PlanGeometry(), kind, moment_dtype)
+    act = _activation_bytes_batch(cfg, shape, table)
+    if kind == "train":
+        hbm = sbytes * 3.0 * table.microbatch + act * table.chips
+    elif kind == "prefill":
+        hbm = cfg.param_count() * BYTES[cfg.dtype] + act * table.chips
+    else:
+        hbm = np.broadcast_to(np.float64(
+            cfg.param_count() * BYTES[cfg.dtype] + kv_cache_bytes(cfg, shape)
+        ), (len(table),))
+    memory_s = hbm / (table.chips * table.hbm_bw)
+
+    colls = _collective_bytes_batch(cfg, shape, table, kind)
+    intra = (colls["tp_allreduce"] + colls["dp_gradreduce"]
+             + colls["fsdp_gather"] + colls["ep_alltoall"])
+    inter = colls["pod_gradreduce"]
+    collective_s = intra / (table.chips * table.ici_bw) + np.where(
+        inter != 0, inter / (table.chips * table.dci_bw), 0.0)
+    HOP_ICI, HOP_DCI = 1e-6, 10e-6
+    nblocks = cfg.num_layers + (cfg.encoder_layers if cfg.is_encoder_decoder else 0)
+    kmult = 3.0 if kind == "train" else 1.0
+    n_ops = np.zeros(len(table))
+    n_ops = n_ops + np.where(table.model > 1, 4.0 * nblocks * kmult, 0.0)
+    if kind == "train":
+        n_ops = n_ops + np.where(table.fsdp | (table.data * table.pods > 1),
+                                 2.0 * nblocks, 0.0)
+    if cfg.num_experts > 0:
+        n_ops = n_ops + 2.0 * cfg.num_layers * kmult
+    ring = np.maximum(table.data * table.model, 2)
+    collective_s = collective_s + n_ops * 2 * (ring - 1) * HOP_ICI
+    if kind == "train":
+        collective_s = collective_s + np.where(
+            table.pods > 1, 2 * (table.pods - 1) * HOP_DCI * 2 * nblocks, 0.0)
+
+    dev_state = sbytes / table.chips
+    dev_cache = (kv_cache_bytes(cfg, shape) / table.chips
+                 if kind != "train" else 0.0)
+    dev_grads = (cfg.param_count() * 4.0 / table.chips
+                 if kind == "train" else 0.0)
+    bytes_per_device = dev_state + dev_cache + dev_grads + act
+    hbm_frac = bytes_per_device / table.hbm_bytes
+
+    peak = np.maximum(np.maximum(compute_s, memory_s), collective_s)
+    step_s = peak + 0.15 * (compute_s + memory_s + collective_s - peak)
+    bottleneck_code = np.argmax(
+        np.stack([compute_s, memory_s, collective_s]), axis=0)
+    price_s = table.chip_price * table.chips / 3600.0
+    cost_per_step = price_s * step_s
+    tokens = shape.tokens_per_step
+    cost_per_mtok = cost_per_step / max(tokens, 1) * 1e6
+    # chips == slice.total_chips holds by construction (mesh shapes always
+    # multiply out to the slice size), so feasibility is the HBM gate alone
+    feasible = hbm_frac <= 0.92
+
+    return BatchEstimate(
+        compute_s=compute_s, memory_s=memory_s, collective_s=collective_s,
+        step_s=step_s, bytes_per_device=bytes_per_device, hbm_frac=hbm_frac,
+        cost_per_step=cost_per_step, cost_per_mtok=cost_per_mtok,
+        bottleneck_code=bottleneck_code, feasible=feasible,
+        colls=colls, flops=flops, hbm=np.asarray(hbm, dtype=np.float64),
     )

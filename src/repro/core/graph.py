@@ -43,26 +43,33 @@ class GraphError(ValueError):
     """Structural problem in a stage graph (duplicate, unknown dep, cycle)."""
 
 
-def _describe_outputs(out: Dict[str, Any]) -> Dict[str, Any]:
-    """A *structural* summary of stage outputs for the stage_end hash:
-    arrays hash by dtype/shape (their repr would truncate content and
-    force a device sync on multi-GB states), primitives by value,
-    everything else by type name.  The hash detects wiring changes —
-    different keys, shapes or scalar values — not bitwise array equality."""
-    def describe(v):
-        if v is None or isinstance(v, (bool, int, float, str)):
-            return v
-        shape = getattr(v, "shape", None)
-        dtype = getattr(v, "dtype", None)
-        if shape is not None and dtype is not None:
-            return f"{dtype}{tuple(shape)}"
-        if isinstance(v, dict):
-            return {str(k): describe(x) for k, x in sorted(v.items(), key=lambda kv: str(kv[0]))}
-        if isinstance(v, (list, tuple)):
-            return [describe(x) for x in v]
-        return type(v).__name__
+def _describe(v):
+    """A *structural* summary of a value for hashing: arrays describe by
+    dtype/shape (their repr would truncate content and force a device
+    sync on multi-GB states), primitives by value, dataclasses by full
+    field content, everything else by type name.  Hashes built from this
+    detect wiring changes — different keys, shapes, scalar or config
+    values — not bitwise array equality."""
+    if v is None or isinstance(v, (bool, int, float, str)):
+        return v
+    shape = getattr(v, "shape", None)
+    dtype = getattr(v, "dtype", None)
+    if shape is not None and dtype is not None:
+        return f"{dtype}{tuple(shape)}"
+    if dataclasses.is_dataclass(v) and not isinstance(v, type):
+        return {"__dataclass__": type(v).__name__,
+                **{f.name: _describe(getattr(v, f.name))
+                   for f in dataclasses.fields(v)}}
+    if isinstance(v, dict):
+        return {str(k): _describe(x)
+                for k, x in sorted(v.items(), key=lambda kv: str(kv[0]))}
+    if isinstance(v, (list, tuple)):
+        return [_describe(x) for x in v]
+    return type(v).__name__
 
-    return {k: describe(out[k]) for k in sorted(out)}
+
+def _describe_outputs(out: Dict[str, Any]) -> Dict[str, Any]:
+    return {k: _describe(out[k]) for k in sorted(out)}
 
 
 class CycleError(GraphError):
@@ -92,6 +99,19 @@ class Stage:
     outputs: Tuple[str, ...] = ()
     intent: Optional[ResourceIntent] = None
     checks: Tuple[str, ...] = ()
+    # -- cross-run caching (see repro.core.stagecache) ------------------
+    # Only stages whose outputs are a pure function of the hashed inputs
+    # should opt in; side-effectful stages (budget authorization, metric
+    # logging, checkpoint writes) must stay uncacheable.
+    cacheable: bool = False
+    # ctx.params keys folded into the input hash (the knobs this stage
+    # actually reads — keeps unrelated param changes from invalidating)
+    cache_params: Tuple[str, ...] = ()
+    # template fields folded into the input hash; None = whole template
+    cache_template_fields: Optional[Tuple[str, ...]] = None
+    # code-version salt: bump when the stage's implementation (or code it
+    # calls into) changes output semantics, so stale entries can't hit
+    cache_version: str = "1"
 
     def __init__(self, name: Optional[str] = None):
         if name is not None:
@@ -99,6 +119,18 @@ class Stage:
 
     def run(self, ctx: "StageContext") -> Dict[str, Any]:
         raise NotImplementedError
+
+    def signature(self) -> Dict[str, Any]:
+        """JSON-able identity of this stage for the cache key: type,
+        name, declared I/O, and its primitive constructor config."""
+        cfg = {k: v for k, v in sorted(vars(self).items())
+               if not k.startswith("_")
+               and isinstance(v, (bool, int, float, str, tuple, list,
+                                  dict, type(None)))}
+        return {"type": type(self).__name__, "name": self.name,
+                "version": self.cache_version,
+                "inputs": list(self.inputs), "outputs": list(self.outputs),
+                "config": _describe(cfg)}
 
     def __repr__(self):
         return f"<{type(self).__name__} {self.name!r}>"
@@ -126,7 +158,9 @@ class StageContext:
 
     ``outputs`` is the blackboard stages read/write through ``get``/``put``
     (lock-guarded — stages may run concurrently); ``params`` carries
-    run-scoped knobs (steps_override, smoke_batch, failures, intent).
+    run-scoped knobs (steps_override, smoke_batch, failures, intent);
+    ``cache`` is an optional :class:`repro.core.stagecache.StageCache`
+    the scheduler consults to skip cacheable stages across runs.
     """
 
     template: Any = None
@@ -135,6 +169,7 @@ class StageContext:
     ledger: Any = None
     user: str = "anonymous"
     workspace: str = "default"
+    cache: Any = None
     params: Dict[str, Any] = dataclasses.field(default_factory=dict)
     outputs: Dict[str, Any] = dataclasses.field(default_factory=dict)
 
@@ -165,6 +200,8 @@ class StageResult:
     duration_s: float
     output_keys: Tuple[str, ...] = ()
     error: Optional[str] = None
+    cached: bool = False                 # outputs restored from StageCache
+    outputs_hash: Optional[str] = None   # structural hash of the outputs
 
 
 # ===========================================================================
@@ -295,7 +332,8 @@ class StageGraph:
             stage = self._stages[name]
             if ctx.record is not None:
                 ctx.record.log_event("stage_start", {"stage": prefix + name})
-            fut = pool.submit(self._run_stage, stage, ctx, prefix)
+            input_hash = self._input_hash(name, ctx, results)
+            fut = pool.submit(self._run_stage, stage, ctx, prefix, input_hash)
             pending[fut] = name
 
         failure: Optional[BaseException] = None
@@ -320,10 +358,62 @@ class StageGraph:
             raise failure
         return results
 
-    def _run_stage(self, stage: Stage, ctx: StageContext,
-                   prefix: str) -> Tuple[StageResult, Optional[BaseException]]:
+    def _input_hash(self, name: str, ctx: StageContext,
+                    results: Dict[str, StageResult]) -> Optional[str]:
+        """The stage's content-addressed cache key: stage signature +
+        declared input values + upstream output hashes + the template
+        fields and params the stage reads (see repro.core.stagecache).
+        None when the stage is uncacheable or no cache is attached."""
+        stage = self._stages[name]
+        if not stage.cacheable or ctx.cache is None:
+            return None
+        try:
+            inputs = {k: _describe(ctx.get(k)) for k in stage.inputs}
+        except MissingInputError:
+            return None
+        template = None
+        if ctx.template is not None:
+            fields = stage.cache_template_fields
+            if fields is None:
+                template = _describe(ctx.template)
+            else:
+                template = {f: _describe(getattr(ctx.template, f, None))
+                            for f in fields}
+        return stable_hash({
+            "stage": stage.signature(),
+            "inputs": inputs,
+            "upstream": {d: results[d].outputs_hash
+                         for d in sorted(self._deps[name]) if d in results},
+            "template": template,
+            "params": {k: _describe(ctx.params.get(k))
+                       for k in stage.cache_params},
+        })
+
+    def _run_stage(self, stage: Stage, ctx: StageContext, prefix: str,
+                   input_hash: Optional[str] = None,
+                   ) -> Tuple[StageResult, Optional[BaseException]]:
         t0 = time.perf_counter()
         started = time.time()
+        if input_hash is not None and ctx.cache is not None:
+            hit = ctx.cache.get(input_hash)
+            if hit is not None and all(k in hit for k in stage.outputs):
+                ctx.put(**hit)
+                dt = time.perf_counter() - t0
+                ohash = stable_hash(_describe_outputs(hit))
+                if ctx.record is not None:
+                    ctx.record.log_event("stage_cached", {
+                        "stage": prefix + stage.name,
+                        "input_hash": input_hash,
+                        "outputs": sorted(hit),
+                    })
+                    ctx.record.log_event("stage_end", {
+                        "stage": prefix + stage.name, "ok": True,
+                        "duration_s": dt, "cached": True,
+                        "outputs": sorted(hit), "outputs_hash": ohash,
+                    })
+                return StageResult(stage.name, True, started, dt,
+                                   output_keys=tuple(sorted(hit)),
+                                   cached=True, outputs_hash=ohash), None
         try:
             out = stage.run(ctx) or {}
         except BaseException as e:  # noqa: BLE001 — re-raised by execute()
@@ -350,13 +440,17 @@ class StageGraph:
             return StageResult(stage.name, False, started, dt,
                                error=repr(e)), e
         ctx.put(**out)
+        ohash = stable_hash(_describe_outputs(out))
         res = StageResult(stage.name, True, started, dt,
-                          output_keys=tuple(sorted(out)))
+                          output_keys=tuple(sorted(out)),
+                          outputs_hash=ohash)
+        if input_hash is not None and ctx.cache is not None:
+            ctx.cache.put(input_hash, prefix + stage.name, out, dt)
         if ctx.record is not None:
             ctx.record.log_event("stage_end", {
                 "stage": prefix + stage.name, "ok": True, "duration_s": dt,
                 "outputs": sorted(out),
-                "outputs_hash": stable_hash(_describe_outputs(out)),
+                "outputs_hash": ohash,
             })
         return res, None
 

@@ -1,0 +1,188 @@
+"""Content-addressed cross-run stage cache.
+
+Workflow runtime is dominated by redundant recomputation across runs
+(Juve et al., arXiv:1005.2718): a sweep's fan-out re-executes the same
+data-prep stage per run, and re-running a workflow after an unrelated
+edit re-executes every stage.  This cache lets the scheduler skip a
+stage whose inputs are provably identical to a prior execution.
+
+The hash key
+------------
+A stage's **input hash** is ``stable_hash`` of four components, computed
+by :meth:`repro.core.graph.StageGraph` right before the stage would run:
+
+  1. **stage signature** — the stage's type, name, ``cache_version``
+     salt (bump it when the stage's implementation — or code it calls
+     into — changes output semantics, so stale entries can't hit),
+     declared inputs and outputs, and its JSON-able constructor
+     configuration (e.g. ``DataStage.build_stream``), so two
+     differently-configured instances of one class never collide;
+  2. **declared inputs** — a structural description of the context value
+     behind every key in ``stage.inputs`` (arrays describe as
+     dtype+shape, dataclasses by full field content, primitives by
+     value);
+  3. **upstream output hashes** — the ``outputs_hash`` of each
+     dependency's produced outputs, chaining provenance so an upstream
+     change invalidates every stage below it;
+  4. **scoped run knobs** — the template fields named by
+     ``stage.cache_template_fields`` (None means the whole template
+     config) and the context params named by ``stage.cache_params``,
+     which is how e.g. a data stage keys on (arch, shape, scale, data
+     config, smoke batch/seq) but not on an optimizer override.
+
+Because array values describe structurally (dtype+shape, not content),
+the key detects *wiring* changes, not bitwise array differences — only
+stages whose outputs are a pure function of the hashed components
+should set ``cacheable = True`` (the built-in DataStage qualifies: its
+stream is a pure function of seed + config).
+
+Storage is a plain directory — ``<root>/<hash>.pkl`` (pickled outputs)
+with a ``<hash>.json`` sidecar (stage name, creation time, original
+duration, sizes) — no services required, mirroring the provenance
+store's philosophy.  Writes are atomic (temp file + rename) so
+concurrent runs can share a cache root.  ``repro run --no-cache``
+bypasses it; ``repro cache stats`` / ``repro cache clear`` inspect and
+reset it.
+"""
+from __future__ import annotations
+
+import json
+import os
+import pickle
+import tempfile
+import time
+from typing import Any, Dict, Optional
+
+DEFAULT_CACHE_DIR = ".repro_cache/stages"
+
+
+def default_cache_dir() -> str:
+    return os.environ.get("REPRO_CACHE_DIR", DEFAULT_CACHE_DIR)
+
+
+class StageCache:
+    """Persistent stage-output store keyed by content-addressed input hash."""
+
+    def __init__(self, root: Optional[str] = None):
+        self.root = root or default_cache_dir()
+        os.makedirs(self.root, exist_ok=True)
+        # session counters (per-process; `stats()` also scans the disk)
+        self.hits = 0
+        self.misses = 0
+        self.puts = 0
+        self.unpicklable = 0
+
+    def _payload_path(self, key: str) -> str:
+        return os.path.join(self.root, f"{key}.pkl")
+
+    def _meta_path(self, key: str) -> str:
+        return os.path.join(self.root, f"{key}.json")
+
+    # ------------------------------------------------------------------
+    def get(self, key: str) -> Optional[Dict[str, Any]]:
+        """The cached outputs dict for an input hash, or None on miss.
+        A corrupt/unreadable entry counts as a miss (and is removed)."""
+        path = self._payload_path(key)
+        try:
+            with open(path, "rb") as f:
+                outputs = pickle.load(f)
+        except FileNotFoundError:
+            self.misses += 1
+            return None
+        except Exception:
+            self.misses += 1
+            for p in (path, self._meta_path(key)):
+                try:
+                    os.remove(p)
+                except OSError:
+                    pass
+            return None
+        self.hits += 1
+        return outputs
+
+    def put(self, key: str, stage: str, outputs: Dict[str, Any],
+            duration_s: float) -> bool:
+        """Persist a stage's outputs under its input hash.  Returns False
+        (without raising) when the outputs cannot be pickled — such
+        stages simply never hit."""
+        try:
+            payload = pickle.dumps(outputs)
+        except Exception:
+            self.unpicklable += 1
+            return False
+        fd, tmp = tempfile.mkstemp(dir=self.root, suffix=".tmp")
+        try:
+            with os.fdopen(fd, "wb") as f:
+                f.write(payload)
+            os.replace(tmp, self._payload_path(key))
+        except OSError:
+            try:
+                os.remove(tmp)
+            except OSError:
+                pass
+            return False
+        meta = {
+            "stage": stage,
+            "created": time.time(),
+            "duration_s": duration_s,
+            "outputs": sorted(outputs),
+            "bytes": len(payload),
+        }
+        fd, tmp = tempfile.mkstemp(dir=self.root, suffix=".tmp")
+        try:
+            with os.fdopen(fd, "w") as f:
+                json.dump(meta, f, indent=1)
+            os.replace(tmp, self._meta_path(key))
+        except OSError:
+            try:
+                os.remove(tmp)
+            except OSError:
+                pass
+        self.puts += 1
+        return True
+
+    # ------------------------------------------------------------------
+    def entries(self) -> Dict[str, Dict[str, Any]]:
+        out: Dict[str, Dict[str, Any]] = {}
+        for name in sorted(os.listdir(self.root)):
+            if not name.endswith(".json"):
+                continue
+            key = name[:-5]
+            try:
+                with open(os.path.join(self.root, name)) as f:
+                    out[key] = json.load(f)
+            except (OSError, json.JSONDecodeError):
+                continue
+        return out
+
+    def stats(self) -> Dict[str, Any]:
+        entries = self.entries()
+        by_stage: Dict[str, int] = {}
+        saved = 0.0
+        total = 0
+        for meta in entries.values():
+            by_stage[meta.get("stage", "?")] = by_stage.get(meta.get("stage", "?"), 0) + 1
+            saved += float(meta.get("duration_s", 0.0))
+            total += int(meta.get("bytes", 0))
+        return {
+            "root": self.root,
+            "entries": len(entries),
+            "bytes": total,
+            "cached_wall_s": saved,   # wall time a full re-run would skip
+            "by_stage": by_stage,
+            "session": {"hits": self.hits, "misses": self.misses,
+                        "puts": self.puts, "unpicklable": self.unpicklable},
+        }
+
+    def clear(self) -> int:
+        """Delete every entry; returns the number of entries removed."""
+        n = 0
+        for name in os.listdir(self.root):
+            if name.endswith(".pkl"):
+                n += 1
+            if name.endswith((".pkl", ".json", ".tmp")):
+                try:
+                    os.remove(os.path.join(self.root, name))
+                except OSError:
+                    pass
+        return n

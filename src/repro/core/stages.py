@@ -193,9 +193,17 @@ class PlanStage(Stage):
 # Data
 # ===========================================================================
 class DataStage(Stage):
-    """Build the (possibly reduced) model config, shape and data stream."""
+    """Build the (possibly reduced) model config, shape and data stream.
+
+    Cacheable across runs: the outputs are a pure function of the
+    template's (arch, shape, scale, data) fields and the smoke knobs,
+    so a sweep's fan-out or a re-run skips this stage on a cache hit.
+    """
 
     outputs = ("full_cfg", "cfg", "shape", "stream")
+    cacheable = True
+    cache_params = ("smoke_batch", "smoke_seq")
+    cache_template_fields = ("arch", "shape", "scale", "data")
 
     def __init__(self, name: str = "data", build_stream: bool = True):
         super().__init__(name)

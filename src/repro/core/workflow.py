@@ -58,6 +58,7 @@ from repro.core.graph import StageContext, StageGraph, StageResult
 from repro.core.intent import ResourceIntent
 from repro.core.planner import PlanChoice
 from repro.core.provenance import ProvenanceStore, RunRecord
+from repro.core.stagecache import StageCache
 from repro.core.stages import (
     CHECKS,
     DataStage,
@@ -240,6 +241,7 @@ def run_workflow(
     stages: Optional[Sequence[str]] = None,
     with_eval: bool = False,
     max_workers: int = 4,
+    cache: Optional["StageCache"] = None,
 ) -> WorkflowResult:
     """Execute a workflow end-to-end on the local backend.
 
@@ -255,6 +257,12 @@ def run_workflow(
     ``stages`` limits execution to those stages plus their ancestors
     (the CLI's ``run --stage``); checks that did not run report ok=True
     vacuously only if ValidateStage was included.
+
+    ``cache`` attaches a cross-run :class:`StageCache`: cacheable stages
+    (e.g. data prep) whose content-addressed input hash matches a prior
+    run are skipped, restoring their outputs and emitting a
+    ``stage_cached`` provenance event (the CLI's ``run --no-cache``
+    turns this off).
     """
     t = template
     graph = compile_template(t, with_eval=with_eval)
@@ -276,7 +284,7 @@ def run_workflow(
     )
     ctx = StageContext(
         template=t, record=record, store=store, ledger=ledger,
-        user=user, workspace=workspace,
+        user=user, workspace=workspace, cache=cache,
         params={
             "intent": intent, "failures": failures,
             "steps_override": steps_override,

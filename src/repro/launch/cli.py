@@ -26,6 +26,12 @@
     python -m repro.launch.cli templates
     python -m repro.launch.cli runs --runs-dir runs
     python -m repro.launch.cli compare RUN_A RUN_B
+
+    # cross-run stage cache (on by default for `run`; data stages with an
+    # unchanged input hash are skipped with a stage_cached event)
+    python -m repro.launch.cli run train-qwen2-1.5b --no-cache
+    python -m repro.launch.cli cache stats
+    python -m repro.launch.cli cache clear
 """
 from __future__ import annotations
 
@@ -58,7 +64,7 @@ def cmd_plan(args) -> None:
 
 
 def cmd_run(args) -> None:
-    from repro.core import REGISTRY, ProvenanceStore, run_workflow
+    from repro.core import REGISTRY, ProvenanceStore, StageCache, run_workflow
 
     t = REGISTRY.get(args.template, args.version)
     if args.override:
@@ -72,13 +78,18 @@ def cmd_run(args) -> None:
             overrides[k] = v
         t = t.with_overrides(**overrides)
     store = ProvenanceStore(args.runs_dir)
+    cache = None if args.no_cache else StageCache(args.cache_dir)
     res = run_workflow(t, store, user=args.user, workspace=args.workspace,
                        steps_override=args.steps,
                        stages=args.stage or None,
-                       with_eval=args.with_eval)
+                       with_eval=args.with_eval,
+                       cache=cache)
     print(f"run {res.record.run_id}: ok={res.ok}")
     for name, sr in res.stage_results.items():
-        print(f"  stage {name:16s} {'ok' if sr.ok else 'FAIL':4s} "
+        status = "ok" if sr.ok else "FAIL"
+        if sr.cached:
+            status = "hit"
+        print(f"  stage {name:16s} {status:4s} "
               f"{sr.duration_s:7.2f}s")
     for name, (ok, detail) in res.checks.items():
         print(f"  check {name:20s} {'PASS' if ok else 'FAIL'}  {detail}")
@@ -131,6 +142,18 @@ def cmd_compare(args) -> None:
     print(json.dumps(store.compare(args.run_a, args.run_b), indent=1, default=str))
 
 
+def cmd_cache(args) -> None:
+    from repro.core import StageCache
+
+    cache = StageCache(args.cache_dir)
+    if args.action == "clear":
+        n = cache.clear()
+        print(f"cleared {n} cached stage outputs from {cache.root}")
+        return
+    stats = cache.stats()
+    print(json.dumps(stats, indent=1))
+
+
 def main() -> None:
     ap = argparse.ArgumentParser(prog="repro", description=__doc__,
                                  formatter_class=argparse.RawDescriptionHelpFormatter)
@@ -164,6 +187,11 @@ def main() -> None:
                    help="run only this stage (+ its ancestors); repeatable")
     p.add_argument("--with-eval", action="store_true",
                    help="include the held-out EvalStage in the graph")
+    p.add_argument("--no-cache", action="store_true",
+                   help="disable the cross-run stage cache")
+    p.add_argument("--cache-dir", default=None,
+                   help="stage-cache root (default $REPRO_CACHE_DIR "
+                        "or .repro_cache/stages)")
     p.set_defaults(fn=cmd_run)
 
     p = sub.add_parser("graph", help="render a template's stage DAG")
@@ -190,6 +218,13 @@ def main() -> None:
     p.add_argument("run_b")
     p.add_argument("--runs-dir", default="runs")
     p.set_defaults(fn=cmd_compare)
+
+    p = sub.add_parser("cache", help="inspect or clear the stage cache")
+    p.add_argument("action", choices=["stats", "clear"])
+    p.add_argument("--cache-dir", default=None,
+                   help="stage-cache root (default $REPRO_CACHE_DIR "
+                        "or .repro_cache/stages)")
+    p.set_defaults(fn=cmd_cache)
 
     args = ap.parse_args()
     args.fn(args)

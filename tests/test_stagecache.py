@@ -1,0 +1,201 @@
+"""Cross-run stage cache: hit/miss/invalidation semantics, provenance
+events, and the scheduler integration (cached stages skipped with their
+outputs restored)."""
+import pytest
+
+from repro.core import (
+    REGISTRY,
+    ProvenanceStore,
+    Stage,
+    StageCache,
+    StageContext,
+    StageGraph,
+    run_workflow,
+)
+
+
+class CountingStage(Stage):
+    """Cacheable stage whose run() count proves skips; `factor` is
+    constructor config (part of the signature), `knob` a cache_param."""
+
+    outputs = ("value",)
+    cacheable = True
+    cache_params = ("knob",)
+
+    def __init__(self, name: str = "count", factor: int = 2):
+        super().__init__(name)
+        self.factor = factor
+        self.calls = 0
+
+    def run(self, ctx):
+        self.calls += 1
+        return {"value": self.factor * ctx.params.get("knob", 1)}
+
+
+def _run(stage, cache, params=None, record=None):
+    g = StageGraph("t")
+    g.add(stage)
+    ctx = StageContext(record=record, cache=cache, params=dict(params or {}))
+    results = g.execute(ctx, max_workers=1)
+    return results[stage.name], ctx
+
+
+def test_hit_restores_outputs_without_running(tmp_path):
+    cache = StageCache(str(tmp_path))
+    s = CountingStage()
+    r1, ctx1 = _run(s, cache, {"knob": 3})
+    assert not r1.cached and s.calls == 1 and ctx1.get("value") == 6
+
+    s2 = CountingStage()  # fresh instance, same signature
+    r2, ctx2 = _run(s2, cache, {"knob": 3})
+    assert r2.cached and s2.calls == 0
+    assert ctx2.get("value") == 6
+    assert r2.outputs_hash == r1.outputs_hash
+    assert cache.hits == 1 and cache.puts == 1
+
+
+def test_param_change_invalidates(tmp_path):
+    cache = StageCache(str(tmp_path))
+    _run(CountingStage(), cache, {"knob": 3})
+    s = CountingStage()
+    r, ctx = _run(s, cache, {"knob": 4})
+    assert not r.cached and s.calls == 1 and ctx.get("value") == 8
+
+
+def test_stage_config_change_invalidates(tmp_path):
+    cache = StageCache(str(tmp_path))
+    _run(CountingStage(factor=2), cache, {"knob": 3})
+    s = CountingStage(factor=5)
+    r, ctx = _run(s, cache, {"knob": 3})
+    assert not r.cached and ctx.get("value") == 15
+
+
+def test_upstream_output_change_invalidates(tmp_path):
+    class Producer(Stage):
+        outputs = ("x",)
+
+        def __init__(self, value):
+            super().__init__("producer")
+            self.value = value
+
+        def run(self, ctx):
+            return {"x": self.value}
+
+    class Consumer(Stage):
+        inputs = ("x",)
+        outputs = ("y",)
+        cacheable = True
+
+        def __init__(self):
+            super().__init__("consumer")
+            self.calls = 0
+
+        def run(self, ctx):
+            self.calls += 1
+            return {"y": ctx.get("x") + 1}
+
+    cache = StageCache(str(tmp_path))
+
+    def run_chain(value):
+        g = StageGraph("chain")
+        g.add(Producer(value))
+        c = g.add(Consumer(), depends_on=("producer",))
+        ctx = StageContext(cache=cache)
+        results = g.execute(ctx, max_workers=1)
+        return results["consumer"], c, ctx
+
+    r1, c1, _ = run_chain(10)
+    assert not r1.cached and c1.calls == 1
+    r2, c2, ctx2 = run_chain(10)
+    assert r2.cached and c2.calls == 0 and ctx2.get("y") == 11
+    r3, c3, ctx3 = run_chain(99)  # upstream outputs hash changed
+    assert not r3.cached and c3.calls == 1 and ctx3.get("y") == 100
+
+
+def test_no_cache_attached_means_no_caching(tmp_path):
+    s1 = CountingStage()
+    _run(s1, None)
+    s2 = CountingStage()
+    r, _ = _run(s2, None)
+    assert not r.cached and s2.calls == 1
+
+
+def test_uncacheable_stage_never_cached(tmp_path):
+    class Plain(CountingStage):
+        cacheable = False
+
+    cache = StageCache(str(tmp_path))
+    _run(Plain(), cache)
+    s = Plain()
+    r, _ = _run(s, cache)
+    assert not r.cached and s.calls == 1 and cache.puts == 0
+
+
+def test_unpicklable_outputs_skip_persistence(tmp_path):
+    class Lambdas(Stage):
+        outputs = ("fn",)
+        cacheable = True
+
+        def __init__(self):
+            super().__init__("lambdas")
+            self.calls = 0
+
+        def run(self, ctx):
+            self.calls += 1
+            return {"fn": lambda: None}
+
+    cache = StageCache(str(tmp_path))
+    _run(Lambdas(), cache)
+    assert cache.unpicklable == 1 and cache.puts == 0
+    s = Lambdas()
+    r, _ = _run(s, cache)
+    assert not r.cached and s.calls == 1  # silently re-executes
+
+
+def test_stage_cached_provenance_event(tmp_path):
+    store = ProvenanceStore(str(tmp_path / "runs"))
+    cache = StageCache(str(tmp_path / "cache"))
+    rec1 = store.create_run(template="t", template_version="0",
+                            config={}, plan={})
+    _run(CountingStage(), cache, {"knob": 1}, record=rec1)
+    rec2 = store.create_run(template="t", template_version="0",
+                            config={}, plan={})
+    _run(CountingStage(), cache, {"knob": 1}, record=rec2)
+    kinds1 = [e["kind"] for e in rec1.stage_events()]
+    kinds2 = [e["kind"] for e in rec2.stage_events()]
+    assert "stage_cached" not in kinds1
+    assert kinds2 == ["stage_start", "stage_cached", "stage_end"]
+    cached = [e for e in rec2.stage_events() if e["kind"] == "stage_cached"][0]
+    assert cached["stage"] == "count" and cached["input_hash"]
+    end = [e for e in rec2.stage_events() if e["kind"] == "stage_end"][0]
+    assert end["ok"] and end.get("cached") is True
+
+
+def test_run_workflow_data_stage_cached_across_runs(tmp_path):
+    store = ProvenanceStore(str(tmp_path / "runs"))
+    cache = StageCache(str(tmp_path / "cache"))
+    t = REGISTRY.get("train-xlstm-125m")
+    res1 = run_workflow(t, store, stages=["data"], cache=cache)
+    assert not res1.stage_results["data"].cached
+    res2 = run_workflow(t, store, stages=["data"], cache=cache)
+    assert res2.stage_results["data"].cached
+    assert any(e["kind"] == "stage_cached"
+               for e in res2.record.stage_events())
+    # template data change invalidates (different seed -> different stream)
+    t2 = t.with_overrides(**{"data.seed": 123})
+    res3 = run_workflow(t2, store, stages=["data"], cache=cache)
+    assert not res3.stage_results["data"].cached
+
+
+def test_stats_and_clear(tmp_path):
+    cache = StageCache(str(tmp_path))
+    _run(CountingStage(), cache, {"knob": 1})
+    _run(CountingStage("other"), cache, {"knob": 1})
+    stats = cache.stats()
+    assert stats["entries"] == 2 and stats["bytes"] > 0
+    assert stats["by_stage"] == {"count": 1, "other": 1}
+    assert cache.clear() == 2
+    assert cache.stats()["entries"] == 0
+    s = CountingStage()
+    r, _ = _run(s, cache, {"knob": 1})
+    assert not r.cached and s.calls == 1
