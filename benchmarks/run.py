@@ -4,6 +4,9 @@ Prints ``name,us_per_call,derived`` CSV rows:
   * catalog_stats   — Fig. 1 analogue (choice explosion, planner search)
   * planner_bench   — planner µs/intent scalar vs vectorized + stage
                       cache hit/miss wall time (writes BENCH_planner.json)
+  * serve_bench     — serving decode tok/s legacy vs fused vs chunked,
+                      admission latency, train donation step time
+                      (writes BENCH_serve.json)
   * instance_sweep  — Fig. 4 analogue (time & $ across chip generations)
   * scaling         — Table 2 analogue (scale-up vs scale-out efficiency)
   * kernels_bench   — kernel micro latencies (oracle + interpret spot)
@@ -11,7 +14,8 @@ Prints ``name,us_per_call,derived`` CSV rows:
   * roofline        — deliverable (g): terms from the dry-run artifact
 
 ``--sections a,b`` runs a fast subset (the CI bench smoke runs
-``catalog_stats,planner_bench`` so planner perf regressions fail loudly).
+``catalog_stats,planner_bench,serve_bench`` so planner and serving perf
+regressions fail loudly).
 """
 from __future__ import annotations
 
@@ -31,12 +35,14 @@ def main() -> None:
         planner_bench,
         roofline,
         scaling,
+        serve_bench,
         throughput,
     )
 
     sections = [
         ("catalog_stats", catalog_stats.main),
         ("planner_bench", planner_bench.main),
+        ("serve_bench", serve_bench.main),
         ("instance_sweep", instance_sweep.main),
         ("scaling", scaling.main),
         ("kernels_bench", kernels_bench.main),

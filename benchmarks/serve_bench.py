@@ -1,0 +1,227 @@
+"""Serving + train hot-loop bench — the execution-layer perf trajectory.
+
+The serve-side analog of ``planner_bench``: measures the inner loops that
+PR 3 fused, on the smoke config, and writes machine-readable
+``BENCH_serve.json`` so regressions across PRs are visible:
+
+  * **decode tok/s** — the per-slot host-sampling baseline
+    (``engine="legacy"``) vs the fused on-device path vs chunked decode
+    (``decode_chunk=8``), steady-state (compile excluded by timing a
+    second burst on the same engine).  Greedy token parity between all
+    three paths is asserted, as is the fused fast path's host-transfer
+    contract (one ``(B,)`` token array per step — never ``(B, V)``
+    logits);
+  * **admission latency** — µs per admitted request: one-at-a-time
+    legacy prefill+insert vs batched grouped prefill with the jitted
+    slot scatter;
+  * **train step** — wall µs/step with and without state-buffer
+    donation (donation is a no-op on CPU; the loss trajectory must match
+    either way).
+
+Raises (failing the bench suite loudly) if the fused path drops below
+2x the legacy baseline — a floor far under the >=4x it achieves, so
+noisy CI machines don't flake.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import numpy as np
+
+OUT_PATH = "BENCH_serve.json"
+SPEEDUP_FLOOR = 2.0
+
+MAX_BATCH = 16
+REQUESTS = 32
+PROMPT_LEN = 8
+MAX_NEW = 32
+CHUNK = 8
+TRAIN_STEPS = 8
+
+
+def _setup():
+    import jax
+
+    from repro.configs import get_config, reduced
+    from repro.models import build_model
+
+    cfg = reduced(get_config("qwen2-1.5b"))
+    model = build_model(cfg)
+    params, _ = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+def _burst(engine, cfg, uid0: int) -> None:
+    from repro.serve import Request
+
+    rng = np.random.default_rng(0)
+    for i in range(REQUESTS):
+        engine.submit(Request(
+            uid=uid0 + i,
+            prompt=rng.integers(1, cfg.vocab_size, PROMPT_LEN),
+            max_new_tokens=MAX_NEW,
+        ))
+
+
+def _run_engine(cfg, model, params, engine: str, chunk: int):
+    """Steady-state tok/s + the timed burst's {uid: tokens} for parity."""
+    from repro.serve import ServeEngine
+
+    eng = ServeEngine(model, params, max_batch=MAX_BATCH,
+                      max_seq=PROMPT_LEN + MAX_NEW + 8, eos_id=-1,
+                      engine=engine, decode_chunk=chunk)
+    _burst(eng, cfg, 0)
+    eng.run()  # warmup: compiles prefill/decode/insert
+    n0 = len(eng.done)
+    d2h0 = (eng.d2h_transfers, eng.d2h_elems)
+    _burst(eng, cfg, 10_000)
+    t0 = time.perf_counter()
+    eng.run()
+    dt = time.perf_counter() - t0
+    done = eng.done[n0:]
+    toks = sum(len(c.tokens) for c in done)
+    transfers = eng.d2h_transfers - d2h0[0]
+    elems = eng.d2h_elems - d2h0[1]
+    tokens = {c.uid - 10_000: tuple(c.tokens) for c in done}
+    return {"tok_per_s": toks / dt, "wall_s": dt, "tokens": toks,
+            "d2h_transfers": transfers, "d2h_elems": elems}, tokens
+
+
+def bench_decode() -> dict:
+    cfg, model, params = _setup()
+    legacy, tok_l = _run_engine(cfg, model, params, "legacy", 1)
+    fused, tok_f = _run_engine(cfg, model, params, "fused", 1)
+    chunked, tok_c = _run_engine(cfg, model, params, "fused", CHUNK)
+    parity = tok_l == tok_f == tok_c
+    # fused step() contract: one (B,) transfer per decode step
+    per_step = fused["d2h_elems"] / max(fused["d2h_transfers"], 1)
+    return {
+        "max_batch": MAX_BATCH, "requests": REQUESTS,
+        "prompt_len": PROMPT_LEN, "max_new_tokens": MAX_NEW,
+        "chunk": CHUNK,
+        "legacy_tok_s": legacy["tok_per_s"],
+        "fused_tok_s": fused["tok_per_s"],
+        "chunked_tok_s": chunked["tok_per_s"],
+        "speedup_fused": fused["tok_per_s"] / legacy["tok_per_s"],
+        "speedup_chunked": chunked["tok_per_s"] / legacy["tok_per_s"],
+        "token_parity": parity,
+        "fused_d2h_elems_per_transfer": per_step,
+    }
+
+
+def bench_admission() -> dict:
+    from repro.serve import ServeEngine
+
+    cfg, model, params = _setup()
+
+    def admit_us(engine: str) -> float:
+        eng = ServeEngine(model, params, max_batch=MAX_BATCH,
+                          max_seq=PROMPT_LEN + MAX_NEW + 8, eos_id=-1,
+                          engine=engine)
+        _burst(eng, cfg, 0)
+        eng._admit()        # compile the prefill/insert path
+        eng.run()           # drain
+        _burst(eng, cfg, 10_000)
+        t0 = time.perf_counter()
+        eng._admit()
+        dt = time.perf_counter() - t0
+        admitted = int(eng.active.sum())
+        eng.run()
+        return dt * 1e6 / max(admitted, 1)
+
+    legacy_us = admit_us("legacy")
+    batched_us = admit_us("fused")
+    return {"legacy_us_per_request": legacy_us,
+            "batched_us_per_request": batched_us,
+            "speedup": legacy_us / max(batched_us, 1e-9)}
+
+
+def bench_train_donation() -> dict:
+    import jax
+    import jax.numpy as jnp
+
+    from repro.configs.base import ShapeConfig
+    from repro.data import DataConfig, make_stream
+    from repro.train import (OptimizerConfig, init_train_state,
+                             jit_train_step, make_train_step)
+    from repro.parallel import Plan
+
+    cfg, model, _ = _setup()
+    shape = ShapeConfig("bench", 32, 4, "train")
+    opt = OptimizerConfig(lr=1e-3, warmup_steps=1, total_steps=100)
+    plan = Plan(remat="none")
+    stream = make_stream(cfg, shape, DataConfig(seed=0, vocab_size=cfg.vocab_size))
+    batches = [{k: jnp.asarray(v) for k, v in stream.batch_at(s).items()}
+               for s in range(TRAIN_STEPS)]
+
+    def run(donate: bool):
+        step = jit_train_step(make_train_step(model, opt, plan), donate=donate)
+        state = init_train_state(model, jax.random.PRNGKey(0), opt, plan)
+        state, m = step(state, batches[0])  # compile
+        jax.block_until_ready(m["loss"])
+        losses = [float(m["loss"])]
+        t0 = time.perf_counter()
+        for b in batches[1:]:
+            state, m = step(state, b)
+            losses.append(float(m["loss"]))
+        jax.block_until_ready(m["loss"])
+        dt = (time.perf_counter() - t0) / (TRAIN_STEPS - 1)
+        return dt, losses
+
+    dt_d, loss_d = run(True)
+    dt_n, loss_n = run(False)
+    return {"step_us_donate": dt_d * 1e6, "step_us_no_donate": dt_n * 1e6,
+            "loss_parity": bool(np.allclose(loss_d, loss_n)),
+            "steps": TRAIN_STEPS}
+
+
+def main() -> None:
+    decode = bench_decode()
+    admission = bench_admission()
+    train = bench_train_donation()
+    doc = {"generated_at": time.time(), "decode": decode,
+           "admission": admission, "train": train}
+    tmp = OUT_PATH + ".tmp"  # atomic: a killed run never truncates the baseline
+    with open(tmp, "w") as f:
+        json.dump(doc, f, indent=1)
+    os.replace(tmp, OUT_PATH)
+
+    d = decode
+    print(f"serve/legacy_tok_s,{1e6/d['legacy_tok_s']:.1f},"
+          f"tok_per_s={d['legacy_tok_s']:,.0f}")
+    print(f"serve/fused_tok_s,{1e6/d['fused_tok_s']:.1f},"
+          f"tok_per_s={d['fused_tok_s']:,.0f};speedup={d['speedup_fused']:.1f}x")
+    print(f"serve/chunked_tok_s,{1e6/d['chunked_tok_s']:.1f},"
+          f"tok_per_s={d['chunked_tok_s']:,.0f};"
+          f"speedup={d['speedup_chunked']:.1f}x;chunk={d['chunk']}")
+    print(f"serve/token_parity,0.0,ok={d['token_parity']}")
+    print(f"serve/admission_legacy,{admission['legacy_us_per_request']:.1f},"
+          f"per_request")
+    print(f"serve/admission_batched,{admission['batched_us_per_request']:.1f},"
+          f"speedup={admission['speedup']:.1f}x")
+    print(f"train/step_donate,{train['step_us_donate']:.1f},"
+          f"no_donate_us={train['step_us_no_donate']:.1f};"
+          f"loss_parity={train['loss_parity']}")
+
+    if not d["token_parity"]:
+        raise RuntimeError("fused/chunked serving diverged from the "
+                           "legacy greedy baseline")
+    if d["fused_d2h_elems_per_transfer"] > MAX_BATCH:
+        raise RuntimeError(
+            f"fused step() transferred "
+            f"{d['fused_d2h_elems_per_transfer']:.0f} elements per "
+            f"dispatch — the (B,)-token contract is broken"
+        )
+    if not train["loss_parity"]:
+        raise RuntimeError("buffer donation changed the loss trajectory")
+    if d["speedup_fused"] < SPEEDUP_FLOOR:
+        raise RuntimeError(
+            f"fused serving regressed: {d['speedup_fused']:.1f}x < "
+            f"{SPEEDUP_FLOOR}x floor over the per-slot baseline"
+        )
+
+
+if __name__ == "__main__":
+    main()

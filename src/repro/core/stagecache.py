@@ -43,6 +43,13 @@ store's philosophy.  Writes are atomic (temp file + rename) so
 concurrent runs can share a cache root.  ``repro run --no-cache``
 bypasses it; ``repro cache stats`` / ``repro cache clear`` inspect and
 reset it.
+
+Size bound: ``max_bytes`` (or ``$REPRO_CACHE_MAX_BYTES``) turns on LRU
+eviction — every hit touches the payload's mtime, and each ``put``
+evicts least-recently-used entries until the payload total fits.  The
+bound is per-insert best-effort (concurrent writers may transiently
+overshoot); ``stats()`` reports the configured bound and session
+eviction count.
 """
 from __future__ import annotations
 
@@ -60,17 +67,35 @@ def default_cache_dir() -> str:
     return os.environ.get("REPRO_CACHE_DIR", DEFAULT_CACHE_DIR)
 
 
-class StageCache:
-    """Persistent stage-output store keyed by content-addressed input hash."""
+def default_max_bytes() -> Optional[int]:
+    raw = os.environ.get("REPRO_CACHE_MAX_BYTES")
+    if not raw:
+        return None
+    try:
+        return int(raw)
+    except ValueError:
+        raise ValueError(
+            f"REPRO_CACHE_MAX_BYTES must be an integer byte count, got {raw!r}"
+        ) from None
 
-    def __init__(self, root: Optional[str] = None):
+
+class StageCache:
+    """Persistent stage-output store keyed by content-addressed input hash.
+
+    ``max_bytes`` bounds the total payload size with LRU eviction on
+    insert (None/0 = unbounded; defaults to ``$REPRO_CACHE_MAX_BYTES``)."""
+
+    def __init__(self, root: Optional[str] = None,
+                 max_bytes: Optional[int] = None):
         self.root = root or default_cache_dir()
+        self.max_bytes = default_max_bytes() if max_bytes is None else max_bytes
         os.makedirs(self.root, exist_ok=True)
         # session counters (per-process; `stats()` also scans the disk)
         self.hits = 0
         self.misses = 0
         self.puts = 0
         self.unpicklable = 0
+        self.evictions = 0
 
     def _payload_path(self, key: str) -> str:
         return os.path.join(self.root, f"{key}.pkl")
@@ -98,6 +123,10 @@ class StageCache:
                     pass
             return None
         self.hits += 1
+        try:
+            os.utime(path)  # LRU touch: eviction keys off payload mtime
+        except OSError:
+            pass
         return outputs
 
     def put(self, key: str, stage: str, outputs: Dict[str, Any],
@@ -139,7 +168,38 @@ class StageCache:
             except OSError:
                 pass
         self.puts += 1
+        self._evict()
         return True
+
+    def _evict(self) -> None:
+        """Drop least-recently-used payloads until the total fits
+        ``max_bytes`` (mtime is the recency clock: refreshed on every
+        hit, so unread entries age out first)."""
+        if not self.max_bytes:
+            return
+        entries = []
+        total = 0
+        for name in os.listdir(self.root):
+            if not name.endswith(".pkl"):
+                continue
+            path = os.path.join(self.root, name)
+            try:
+                st = os.stat(path)
+            except OSError:
+                continue
+            entries.append((st.st_mtime, st.st_size, name[:-4]))
+            total += st.st_size
+        entries.sort()  # oldest first
+        for mtime, size, key in entries:
+            if total <= self.max_bytes:
+                break
+            for p in (self._payload_path(key), self._meta_path(key)):
+                try:
+                    os.remove(p)
+                except OSError:
+                    pass
+            total -= size
+            self.evictions += 1
 
     # ------------------------------------------------------------------
     def entries(self) -> Dict[str, Dict[str, Any]]:
@@ -168,10 +228,12 @@ class StageCache:
             "root": self.root,
             "entries": len(entries),
             "bytes": total,
+            "max_bytes": self.max_bytes,
             "cached_wall_s": saved,   # wall time a full re-run would skip
             "by_stage": by_stage,
             "session": {"hits": self.hits, "misses": self.misses,
-                        "puts": self.puts, "unpicklable": self.unpicklable},
+                        "puts": self.puts, "unpicklable": self.unpicklable,
+                        "evictions": self.evictions},
         }
 
     def clear(self) -> int:

@@ -232,16 +232,23 @@ class TrainStage(Stage):
     state so several TrainStages can coexist in one graph.  Metrics and
     checkpoints are scoped per stage (stage column in metrics.jsonl,
     ``ckpt-<name>`` artifact dir), so concurrent trains stay separable.
+
+    The train step is jitted with the state buffers donated
+    (``donate=False`` or ctx param ``donate=False`` opts out): the state
+    is updated in place instead of copied every step, which matters once
+    the optimizer state stops fitting twice in HBM.
     """
 
     inputs = ("cfg", "shape", "stream", "rt_plan")
 
     def __init__(self, name: str = "train",
                  overrides: Optional[Dict[str, Any]] = None,
-                 state_key: str = "final_state"):
+                 state_key: str = "final_state",
+                 donate: bool = True):
         super().__init__(name)
         self.overrides = dict(overrides or {})
         self.state_key = state_key
+        self.donate = donate
         self.outputs = (state_key,)
 
     def run(self, ctx: StageContext) -> Dict[str, Any]:
@@ -250,7 +257,7 @@ class TrainStage(Stage):
         from repro.checkpoint import Checkpointer
         from repro.core.envelope import ExecutionEnvelope
         from repro.models import build_model
-        from repro.train import init_train_state, make_train_step
+        from repro.train import init_train_state, jit_train_step, make_train_step
 
         _require_record(ctx, self,
                         "the envelope logs metrics/checkpoints through it")
@@ -264,7 +271,9 @@ class TrainStage(Stage):
         model = build_model(cfg)
         num_steps = ctx.params.get("steps_override") or t.num_steps
 
-        step_raw = jax.jit(make_train_step(model, t.optimizer, rt_plan))
+        donate = self.donate and ctx.params.get("donate", True)
+        step_raw = jit_train_step(make_train_step(model, t.optimizer, rt_plan),
+                                  donate=donate)
 
         def init_fn():
             return init_train_state(model, jax.random.PRNGKey(t.data.seed),
@@ -289,13 +298,22 @@ class TrainStage(Stage):
 # Serve
 # ===========================================================================
 class ServeStage(Stage):
-    """Batched-serving smoke through the ServeEngine."""
+    """Batched-serving smoke through the ServeEngine.
+
+    The engine mode and chunking are knobs: constructor args, overridable
+    per run via the ``serve_engine`` / ``serve_chunk`` context params
+    (the CLI's ``--serve-engine`` / ``--serve-chunk``).  ``fused`` is the
+    on-device batched-sampling fast path; ``legacy`` keeps the per-slot
+    host-sampling baseline around for A/B runs."""
 
     inputs = ("cfg",)
     outputs = ("final_state", "completions")
 
-    def __init__(self, name: str = "serve"):
+    def __init__(self, name: str = "serve", engine: str = "fused",
+                 decode_chunk: int = 1):
         super().__init__(name)
+        self.engine = engine
+        self.decode_chunk = decode_chunk
 
     def run(self, ctx: StageContext) -> Dict[str, Any]:
         import jax
@@ -307,12 +325,15 @@ class ServeStage(Stage):
         cfg = ctx.get("cfg")
         smoke_batch = ctx.params.get("smoke_batch", 4)
         smoke_seq = ctx.params.get("smoke_seq", 32)
+        engine = ctx.params.get("serve_engine", self.engine)
+        decode_chunk = ctx.params.get("serve_chunk", self.decode_chunk)
         model = build_model(cfg)
         params, _ = model.init(jax.random.PRNGKey(t.data.seed))
         completions, stats = smoke_serve(
             model, params, num_requests=smoke_batch * 2,
             max_batch=smoke_batch, max_seq=smoke_seq + 64,
             vocab_size=cfg.vocab_size, seed=t.data.seed,
+            engine=engine, decode_chunk=decode_chunk,
         )
         if ctx.record is not None:
             ctx.record.stage_view(self.name).log(0, stats)

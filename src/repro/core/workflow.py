@@ -242,6 +242,9 @@ def run_workflow(
     with_eval: bool = False,
     max_workers: int = 4,
     cache: Optional["StageCache"] = None,
+    serve_engine: str = "fused",
+    serve_chunk: int = 1,
+    donate: bool = True,
 ) -> WorkflowResult:
     """Execute a workflow end-to-end on the local backend.
 
@@ -289,6 +292,8 @@ def run_workflow(
             "intent": intent, "failures": failures,
             "steps_override": steps_override,
             "smoke_batch": smoke_batch, "smoke_seq": smoke_seq,
+            "serve_engine": serve_engine, "serve_chunk": serve_chunk,
+            "donate": donate,
         },
     )
     try:

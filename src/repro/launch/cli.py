@@ -30,8 +30,14 @@
     # cross-run stage cache (on by default for `run`; data stages with an
     # unchanged input hash are skipped with a stage_cached event)
     python -m repro.launch.cli run train-qwen2-1.5b --no-cache
+    python -m repro.launch.cli run train-qwen2-1.5b --cache-max-bytes 100000000
     python -m repro.launch.cli cache stats
     python -m repro.launch.cli cache clear
+
+    # serving hot-path knobs: fused on-device sampling (default), the
+    # legacy per-slot baseline, and chunked multi-token decode
+    python -m repro.launch.cli run serve-qwen2-1.5b --serve-chunk 8
+    python -m repro.launch.cli run serve-qwen2-1.5b --serve-engine legacy
 """
 from __future__ import annotations
 
@@ -78,12 +84,16 @@ def cmd_run(args) -> None:
             overrides[k] = v
         t = t.with_overrides(**overrides)
     store = ProvenanceStore(args.runs_dir)
-    cache = None if args.no_cache else StageCache(args.cache_dir)
+    cache = None if args.no_cache else StageCache(args.cache_dir,
+                                                  max_bytes=args.cache_max_bytes)
     res = run_workflow(t, store, user=args.user, workspace=args.workspace,
                        steps_override=args.steps,
                        stages=args.stage or None,
                        with_eval=args.with_eval,
-                       cache=cache)
+                       cache=cache,
+                       serve_engine=args.serve_engine,
+                       serve_chunk=args.serve_chunk,
+                       donate=not args.no_donate)
     print(f"run {res.record.run_id}: ok={res.ok}")
     for name, sr in res.stage_results.items():
         status = "ok" if sr.ok else "FAIL"
@@ -192,6 +202,18 @@ def main() -> None:
     p.add_argument("--cache-dir", default=None,
                    help="stage-cache root (default $REPRO_CACHE_DIR "
                         "or .repro_cache/stages)")
+    p.add_argument("--cache-max-bytes", type=int, default=None,
+                   help="LRU bound for the stage cache (default "
+                        "$REPRO_CACHE_MAX_BYTES or unbounded)")
+    p.add_argument("--serve-engine", default="fused",
+                   choices=["fused", "legacy"],
+                   help="serving path: fused on-device sampling or the "
+                        "per-slot legacy baseline")
+    p.add_argument("--serve-chunk", type=int, default=1,
+                   help="decode this many tokens per serving dispatch "
+                        "(lax.scan chunk; 1 = step-by-step)")
+    p.add_argument("--no-donate", action="store_true",
+                   help="disable train-state buffer donation")
     p.set_defaults(fn=cmd_run)
 
     p = sub.add_parser("graph", help="render a template's stage DAG")

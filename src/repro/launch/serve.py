@@ -2,6 +2,12 @@
 
     PYTHONPATH=src python -m repro.launch.serve --arch qwen2-1.5b \
         --requests 16 --max-new 24
+
+    # chunked decode: amortize dispatch over 8 tokens per engine step
+    PYTHONPATH=src python -m repro.launch.serve --chunk 8
+
+    # A/B the old per-slot host-sampling path
+    PYTHONPATH=src python -m repro.launch.serve --engine legacy
 """
 from __future__ import annotations
 
@@ -25,13 +31,18 @@ def main() -> None:
     ap.add_argument("--prompt-len", type=int, default=12)
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--engine", default="fused", choices=["fused", "legacy"],
+                    help="fused on-device sampling vs the per-slot baseline")
+    ap.add_argument("--chunk", type=int, default=1,
+                    help="tokens decoded per dispatch (lax.scan chunk)")
     args = ap.parse_args()
 
     cfg = reduced(get_config(args.arch))
     model = build_model(cfg)
     params, _ = model.init(jax.random.PRNGKey(args.seed))
     engine = ServeEngine(model, params, max_batch=args.max_batch,
-                         max_seq=args.prompt_len + args.max_new + 8)
+                         max_seq=args.prompt_len + args.max_new + 8,
+                         engine=args.engine, decode_chunk=args.chunk)
     rng = np.random.default_rng(args.seed)
     for i in range(args.requests):
         engine.submit(Request(
@@ -44,8 +55,10 @@ def main() -> None:
     done = engine.run()
     dt = time.time() - t0
     toks = sum(len(c.tokens) for c in done)
-    print(f"arch={args.arch} requests={len(done)} tokens={toks} "
-          f"wall={dt:.2f}s throughput={toks/dt:,.1f} tok/s")
+    print(f"arch={args.arch} engine={args.engine} chunk={args.chunk} "
+          f"requests={len(done)} tokens={toks} "
+          f"wall={dt:.2f}s throughput={toks/dt:,.1f} tok/s "
+          f"d2h_transfers={engine.d2h_transfers}")
     for c in done[:3]:
         print(f"  uid={c.uid} reason={c.finished_reason} tokens={c.tokens[:8]}...")
 

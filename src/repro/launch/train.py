@@ -26,7 +26,12 @@ from repro.data import DataConfig, make_stream
 from repro.ft.failures import FailureSchedule
 from repro.models import build_model
 from repro.parallel.sharding import Plan
-from repro.train import OptimizerConfig, init_train_state, make_train_step
+from repro.train import (
+    OptimizerConfig,
+    init_train_state,
+    jit_train_step,
+    make_train_step,
+)
 
 
 def main() -> None:
@@ -48,6 +53,9 @@ def main() -> None:
     ap.add_argument("--fail-at", type=int, nargs="*", default=[],
                     help="inject failures at these steps (FT drill)")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--no-donate", action="store_true",
+                    help="disable train-state buffer donation (donation "
+                         "updates the state in place; no-op on CPU)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -80,7 +88,8 @@ def main() -> None:
 
     stream = make_stream(cfg, shape, DataConfig(seed=args.seed,
                                                 vocab_size=min(4096, cfg.vocab_size)))
-    step_jit = jax.jit(make_train_step(model, opt, plan))
+    step_jit = jit_train_step(make_train_step(model, opt, plan),
+                              donate=not args.no_donate)
 
     def init_fn():
         state = init_train_state(model, jax.random.PRNGKey(args.seed), opt, plan)

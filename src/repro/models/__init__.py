@@ -1,3 +1,4 @@
 from repro.models.api import Model, build_model
+from repro.models.sampling import sample_tokens, slot_keys
 
-__all__ = ["Model", "build_model"]
+__all__ = ["Model", "build_model", "sample_tokens", "slot_keys"]

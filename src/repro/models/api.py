@@ -56,15 +56,54 @@ class Model:
     # ---- serve -----------------------------------------------------------
     def prefill(self, params: Pytree, tokens: jax.Array,
                 extra: Optional[Dict[str, jax.Array]] = None,
-                max_seq: Optional[int] = None):
+                max_seq: Optional[int] = None,
+                lens: Optional[jax.Array] = None):
+        """Full forward emitting the cache.  ``lens`` (B,) enables ragged
+        right-padded batches: each row's logits are taken at position
+        ``lens[b] - 1`` and the cache position is set to ``lens[b]`` so
+        decode masks the pad garbage.  Only attention-family models
+        support it (see :meth:`supports_padded_prefill`)."""
         if self.cfg.is_encoder_decoder:
+            if lens is not None:
+                raise ValueError("padded prefill (lens) is not supported "
+                                 "for encoder-decoder models")
             return encdec.prefill(params, self.cfg, tokens, extra or {}, max_seq)
-        return lm.prefill(params, self.cfg, tokens, extra, max_seq)
+        return lm.prefill(params, self.cfg, tokens, extra, max_seq, lens=lens)
+
+    def supports_padded_prefill(self) -> bool:
+        """Whether ragged (right-padded + lens) prefill is exact for this
+        model.  Recurrent families carry state contaminated by pad steps,
+        and MoE capacity depends on the padded length, so only pure
+        attention models qualify."""
+        return (not self.cfg.is_encoder_decoder
+                and self.cfg.family not in ("ssm", "hybrid")
+                and self.cfg.num_experts == 0)
 
     def decode_step(self, params: Pytree, cache: Pytree, tokens: jax.Array):
         if self.cfg.is_encoder_decoder:
             return encdec.decode_step(params, self.cfg, cache, tokens)
         return lm.decode_step(params, self.cfg, cache, tokens)
+
+    def decode_and_sample(self, params: Pytree, cache: Pytree,
+                          last_token: jax.Array, rng: jax.Array,
+                          temperatures: jax.Array,
+                          greedy_only: bool = False):
+        """Fused decode + on-device batched sampling: one decode step for
+        the whole batch followed by per-slot sampling (greedy where
+        ``temperatures[b] <= 0``), returning ``((B,) int32 tokens, new
+        cache)`` — the serving fast path's single small host transfer.
+        Per-slot PRNG keys are folded from ``(rng, slot, position)`` so a
+        slot's stream is reproducible and independent of its neighbors.
+        ``greedy_only`` (static under jit) skips the categorical draw
+        when the caller knows no slot needs it."""
+        from repro.models import sampling
+
+        pos = cache["pos"]
+        logits, new_cache = self.decode_step(params, cache, last_token)
+        keys = sampling.slot_keys(rng, jnp.arange(logits.shape[0]), pos)
+        toks = sampling.sample_tokens(logits, keys, temperatures,
+                                      greedy_only=greedy_only)
+        return toks, new_cache
 
     def init_cache(self, batch: int, max_seq: int) -> Pytree:
         if self.cfg.is_encoder_decoder:

@@ -309,10 +309,26 @@ def init_cache(cfg: ModelConfig, batch: int, max_seq: int) -> Pytree:
 
 def prefill(params: Pytree, cfg: ModelConfig, tokens: jax.Array,
             extra: Optional[Dict[str, jax.Array]] = None,
-            max_seq: Optional[int] = None) -> Tuple[jax.Array, Pytree]:
-    """Full forward emitting the cache. Returns (last-token logits, cache)."""
+            max_seq: Optional[int] = None,
+            lens: Optional[jax.Array] = None) -> Tuple[jax.Array, Pytree]:
+    """Full forward emitting the cache. Returns (last-token logits, cache).
+
+    ``lens`` (B,) int32 marks ragged rows in a right-padded batch: logits
+    come from position ``lens[b] - 1`` and the cache position is set to
+    ``lens[b]``, so decode's ``kv_len`` masking hides the pad-position
+    K/V garbage.  Attention-only models qualify (causality makes every
+    real position independent of the right padding); recurrent families
+    would carry pad steps in their state, so they reject ``lens``."""
     B, S = tokens.shape
     max_seq = max_seq or S
+    if lens is not None and cfg.family in ("ssm", "hybrid"):
+        raise ValueError(f"padded prefill (lens) unsupported for family "
+                         f"{cfg.family!r}: recurrent state would include "
+                         f"pad steps")
+    if lens is not None and cfg.num_experts > 0:
+        raise ValueError("padded prefill (lens) unsupported for MoE: "
+                         "expert capacity scales with the padded length "
+                         "and pad tokens would evict real ones")
     x = embed_tokens(params, cfg, tokens, extra)
     blocks = params["blocks"]
 
@@ -358,8 +374,15 @@ def prefill(params: Pytree, cfg: ModelConfig, tokens: jax.Array,
         return xx, (kc, vc)
 
     x, (kcache, vcache) = jax.lax.scan(body, x, (blocks, flags))
-    logits = lm_logits(params, cfg, x[:, -1:])
-    cache = {"k": kcache, "v": vcache, "pos": jnp.full((B,), S, jnp.int32)}
+    if lens is None:
+        x_last = x[:, -1:]
+        pos = jnp.full((B,), S, jnp.int32)
+    else:
+        lens = lens.astype(jnp.int32)
+        x_last = x[jnp.arange(B), lens - 1][:, None]
+        pos = lens
+    logits = lm_logits(params, cfg, x_last)
+    cache = {"k": kcache, "v": vcache, "pos": pos}
     return logits[:, 0], cache
 
 

@@ -1,0 +1,59 @@
+"""On-device batched token sampling for the serving hot path.
+
+The serving engine decodes a fixed batch of slots per step; sampling has
+to happen *inside* the jitted step so the engine transfers one ``(B,)``
+token array per step instead of the full ``(B, V)`` logits.  Two pieces
+make that deterministic per slot:
+
+  * :func:`slot_keys` — derives one PRNG key per slot by folding the
+    engine's base key with ``(slot_index, position)``.  A slot's random
+    stream is therefore a pure function of (engine seed, slot, token
+    position): independent of what the other slots are doing, stable
+    across step-by-step vs. chunked decode, and reproducible run-to-run;
+  * :func:`sample_tokens` — whole-batch sampling with a per-slot
+    temperature vector: slots with ``temperature <= 0`` take the greedy
+    argmax (computed in float32, matching the old host-side path
+    bit-for-bit), the rest draw from ``categorical(logits / T)`` under
+    their own key.
+
+Both are shape-polymorphic pure functions, usable under ``jit`` / ``scan``.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def slot_keys(base_key: jax.Array, slots: jax.Array, pos: jax.Array) -> jax.Array:
+    """One PRNG key per slot: ``fold_in(fold_in(base, slot), pos)``.
+
+    ``slots``/``pos`` are ``(B,)`` int arrays; returns ``(B,)`` keys (as a
+    ``(B, 2)`` uint32 array for raw keys)."""
+
+    def one(s, p):
+        return jax.random.fold_in(jax.random.fold_in(base_key, s), p)
+
+    return jax.vmap(one)(slots, pos)
+
+
+def sample_tokens(logits: jax.Array, keys: jax.Array,
+                  temperatures: jax.Array,
+                  greedy_only: bool = False) -> jax.Array:
+    """Sample one token per row of ``logits`` (B, V) -> (B,) int32.
+
+    Rows with ``temperatures <= 0`` are greedy (float32 argmax, lowest
+    index on ties); the rest are ``categorical(key, logits / T)`` with
+    that row's key.  The categorical is computed for every row (static
+    shapes) and masked out where greedy wins.  ``greedy_only`` is a
+    *static* escape hatch: when the caller knows every row is greedy it
+    skips the (B, V) Gumbel-noise draw entirely (the dominant sampling
+    cost at real vocab sizes) — outputs are identical either way."""
+    logits32 = logits.astype(jnp.float32)
+    greedy = jnp.argmax(logits32, axis=-1).astype(jnp.int32)
+    if greedy_only:
+        return greedy
+    temps = temperatures.astype(jnp.float32)
+    safe = jnp.where(temps > 0, temps, 1.0)
+    scaled = logits32 / safe[:, None]
+    sampled = jax.vmap(jax.random.categorical)(keys, scaled).astype(jnp.int32)
+    return jnp.where(temps > 0, sampled, greedy)

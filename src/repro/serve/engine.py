@@ -1,20 +1,55 @@
 """Serving engine: slot-based continuous batching over the model decode
-paths.
+paths, with a fused on-device hot loop.
 
 Design (vLLM-style, adapted to a static-shape JAX world):
   * the engine owns a fixed decode batch of ``max_batch`` slots and one
     jitted decode step for the whole batch — XLA-friendly static shapes;
-  * new requests are prefilled individually (B=1) and *inserted* into a
-    free slot of the batched cache (tree surgery on the batch axis);
+  * new requests are admitted in *batches*: up to ``free_slots`` queued
+    requests are prefilled in one jitted call (rows padded to a power-of
+    -two bucket so retraces stay bounded) and scattered into the batched
+    cache by a jitted slot writer — no per-request tree surgery;
   * finished sequences (EOS / max_tokens) free their slot immediately, so
     the decode batch continuously refills — no head-of-line blocking;
-  * sampling is greedy or temperature-based, per-slot rng.
+  * sampling is **fused into the jitted decode step**
+    (:meth:`repro.models.api.Model.decode_and_sample`): the whole batch
+    is argmaxed / categorical-sampled on device with a per-slot
+    temperature vector and per-slot PRNG fold-in, so each engine
+    ``step()`` transfers one ``(B,)`` int32 token array to the host —
+    never the ``(B, V)`` logits;
+  * ``decode_chunk > 1`` turns on chunked multi-token decode: a
+    ``jax.lax.scan`` emits ``chunk × (B,)`` tokens per dispatch,
+    active-masking slots that hit EOS / their token budget mid-chunk.
+    One Python dispatch and one host transfer amortize over ``chunk``
+    tokens — the mode to use when the queue is deep (slots freed
+    mid-chunk only refill at the chunk boundary, so keep chunks short
+    when requests are scarce).
+
+Admission grouping: requests are admitted together when their prompts
+share a shape bucket.  Attention-family models
+(``Model.supports_padded_prefill()``) prefill ragged prompts right-padded
+to a power-of-two length with exact per-row ``lens`` (causality plus the
+decode-side ``kv_len`` mask make this bit-exact); recurrent / MoE /
+encoder-decoder families group by exact prompt length instead (their
+state or routing would absorb pad steps).
+
+``engine="legacy"`` keeps the original per-slot host-sampling path as a
+benchmark baseline (`benchmarks/serve_bench.py` asserts greedy token
+parity between the two).
+
+Determinism: a slot's sample stream is keyed by ``fold_in(fold_in(seed,
+slot), position)`` — reproducible run-to-run, and identical between
+step-by-step and chunked decode for a given slot assignment (chunked
+refill happens at chunk boundaries, so when requests outnumber slots a
+request may land in a different slot and draw a different — but equally
+deterministic — stream).  The legacy path instead consumes one global
+split per sampled token, so temperature>0 draws differ between the
+engines; greedy tokens agree bit-for-bit.
 """
 from __future__ import annotations
 
 import dataclasses
 from collections import deque
-from typing import Any, Callable, Deque, Dict, List, Optional, Tuple
+from typing import Any, Deque, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -23,6 +58,8 @@ import numpy as np
 from repro.models.api import Model
 
 Pytree = Any
+
+_MIN_SEQ_BUCKET = 8
 
 
 @dataclasses.dataclass
@@ -42,50 +79,264 @@ class Completion:
     finished_reason: str  # eos | length
 
 
-def _insert_slot(batched: Pytree, single: Pytree, slot: int) -> Pytree:
-    """Write a B=1 cache into slot ``slot`` of the batched cache."""
+def _pow2_bucket(n: int, cap: int) -> int:
+    """Smallest power of two >= n, clamped to cap (bounds jit retraces)."""
+    b = 1
+    while b < n:
+        b *= 2
+    return min(b, cap)
 
-    def one(b, s):
-        if b.shape == s.shape:
+
+def _cache_batch_axes(model: Model, max_seq: int) -> Pytree:
+    """Per-leaf batch-axis index of the decode cache (-1 for leaves shared
+    across slots), found by diffing cache specs at two batch sizes — no
+    shape guessing at insert time, correct even for ``max_batch == 1``."""
+    a = model.cache_specs(1, max_seq)
+    b = model.cache_specs(2, max_seq)
+
+    def one(x, y):
+        if x.shape == y.shape:
+            return -1
+        return next(i for i, (p, q) in enumerate(zip(x.shape, y.shape))
+                    if p != q)
+
+    return jax.tree.map(one, a, b)
+
+
+def _insert_rows(batched: Pytree, rows: Pytree, slots: jax.Array,
+                 n_valid: jax.Array, axes: Pytree) -> Pytree:
+    """Scatter the first ``n_valid`` rows of a prefilled cache into slots
+    ``slots[:n_valid]`` of the batched cache.  ``slots`` and ``n_valid``
+    are traced, so one compiled program serves every admission batch of
+    the same bucket shape."""
+
+    def one(b, g, ax):
+        if ax < 0:
             return b  # shared (non-batched) leaf
-        # the batch axis is the first axis where shapes differ
-        axis = next(i for i, (x, y) in enumerate(zip(b.shape, s.shape)) if x != y)
-        start = [0] * b.ndim
-        start[axis] = slot
-        return jax.lax.dynamic_update_slice(b, s.astype(b.dtype), tuple(start))
 
-    return jax.tree.map(one, batched, single)
+        def body(i, acc):
+            row = jax.lax.dynamic_slice_in_dim(g, i, 1, axis=ax)
+            return jax.lax.dynamic_update_slice_in_dim(
+                acc, row.astype(acc.dtype), slots[i], axis=ax
+            )
+
+        return jax.lax.fori_loop(0, n_valid, body, b)
+
+    return jax.tree.map(one, batched, rows, axes)
+
+
+def _make_prefill_insert(model: Model, max_seq: int, axes: Pytree,
+                         use_lens: bool):
+    """Jittable batched admission: prefill a request group, sample each
+    row's first token on device, and scatter the group cache into the
+    engine's slots — one dispatch per admission group."""
+    from repro.models import sampling
+
+    def fn(params, batched_cache, tokens, extra, lens, slots, n_valid,
+           base_key, temps):
+        logits, cache1 = model.prefill(
+            params, tokens, extra, max_seq=max_seq,
+            lens=lens if use_lens else None,
+        )
+        keys = sampling.slot_keys(base_key, slots, lens - 1)
+        toks = sampling.sample_tokens(logits, keys, temps)
+        new_cache = _insert_rows(batched_cache, cache1, slots, n_valid, axes)
+        return toks, new_cache
+
+    return fn
+
+
+def _make_decode_chunk(model: Model, steps: int):
+    """Jittable chunked decode: ``steps`` fused decode+sample iterations
+    under ``lax.scan``, masking slots that finish (EOS or budget) so
+    their later tokens are dead.  Emits ``(steps, B)`` tokens — the
+    chunk's single host transfer."""
+
+    def fn(params, cache, last_token, base_key, temps, active, counts,
+           budgets, eos_id, greedy_only=False):
+        def body(carry, _):
+            cache, last, act, cnt = carry
+            toks, cache = model.decode_and_sample(
+                params, cache, last[:, None], base_key, temps,
+                greedy_only=greedy_only,
+            )
+            cnt = cnt + act.astype(jnp.int32)
+            emit = jnp.where(act, toks, jnp.zeros_like(toks))
+            finished = act & ((toks == eos_id) | (cnt >= budgets))
+            last = jnp.where(act, toks, last)
+            return (cache, last, act & ~finished, cnt), emit
+
+        (cache, _, _, _), seq = jax.lax.scan(
+            body, (cache, last_token, active, counts), None, length=steps
+        )
+        return seq, cache
+
+    return fn
 
 
 class ServeEngine:
     def __init__(self, model: Model, params: Pytree, *, max_batch: int = 8,
-                 max_seq: int = 256, eos_id: int = 2, seed: int = 0):
+                 max_seq: int = 256, eos_id: int = 2, seed: int = 0,
+                 engine: str = "fused", decode_chunk: int = 1):
+        if engine not in ("fused", "legacy"):
+            raise ValueError(f"engine must be 'fused' or 'legacy', got {engine!r}")
+        if decode_chunk < 1:
+            raise ValueError(f"decode_chunk must be >= 1, got {decode_chunk}")
+        if engine == "legacy" and decode_chunk > 1:
+            raise ValueError("decode_chunk > 1 requires the fused engine: "
+                             "the legacy baseline decodes token-by-token")
         self.model = model
         self.params = params
         self.max_batch = max_batch
         self.max_seq = max_seq
         self.eos_id = eos_id
-        self.rng = jax.random.PRNGKey(seed)
+        self.engine = engine
+        self.decode_chunk = decode_chunk
+        self.rng = jax.random.PRNGKey(seed)      # legacy serial sampling
+        self.base_key = jax.random.PRNGKey(seed)  # fused per-slot fold-in
 
         self.cache = model.init_cache(max_batch, max_seq)
         self.active = np.zeros(max_batch, dtype=bool)
         self.req: List[Optional[Request]] = [None] * max_batch
         self.emitted: List[List[int]] = [[] for _ in range(max_batch)]
-        self.last_token = np.zeros((max_batch, 1), dtype=np.int32)
+        self.last_token = np.zeros(max_batch, dtype=np.int32)
+        self.temps = np.zeros(max_batch, dtype=np.float32)
         self.queue: Deque[Request] = deque()
         self.done: List[Completion] = []
+        # instrumentation: fast-path D2H transfers (count, elements)
+        self.d2h_transfers = 0
+        self.d2h_elems = 0
+
+        self._padded_admission = model.supports_padded_prefill()
+        self._axes = _cache_batch_axes(model, max_seq)
 
         self._decode = jax.jit(model.decode_step)
+        self._decode_sample = jax.jit(model.decode_and_sample,
+                                      static_argnames=("greedy_only",))
         self._prefill = jax.jit(
             lambda p, t, e: model.prefill(p, t, e, max_seq=max_seq)
         )
-        self._insert = jax.jit(_insert_slot, static_argnames=("slot",))
+        # slot writer: slot index is traced, so admissions never retrace
+        self._insert = jax.jit(
+            lambda batched, single, slot: _insert_rows(
+                batched, single, slot[None], jnp.int32(1), self._axes
+            )
+        )
+        self._prefill_insert_exact = jax.jit(
+            _make_prefill_insert(model, max_seq, self._axes, use_lens=False)
+        )
+        self._prefill_insert_pad = jax.jit(
+            _make_prefill_insert(model, max_seq, self._axes, use_lens=True)
+        )
+        self._decode_chunk = (
+            jax.jit(_make_decode_chunk(model, decode_chunk),
+                    static_argnames=("greedy_only",))
+            if engine == "fused" and decode_chunk > 1 else None
+        )
 
     # ------------------------------------------------------------------
     def submit(self, req: Request) -> None:
+        """Queue a request.  Validation happens here — once a request is
+        accepted, admission/decode cannot fail or silently clamp, so a
+        queued request is never dropped or corrupted mid-batch."""
+        plen = len(req.prompt)
+        if plen < 1:
+            raise ValueError("prompt must have at least one token")
+        if req.max_new_tokens < 1:
+            raise ValueError(
+                f"max_new_tokens must be >= 1, got {req.max_new_tokens}"
+            )
+        # worst case the request decodes its full budget: the last decode
+        # writes K/V at position plen + max_new_tokens - 2, which must
+        # stay inside the cache or the scatter silently clamps/drops
+        if plen + req.max_new_tokens - 1 > self.max_seq:
+            raise ValueError(
+                f"prompt ({plen}) + max_new_tokens ({req.max_new_tokens}) "
+                f"- 1 exceeds max_seq={self.max_seq}: the decode would "
+                f"overflow the KV cache"
+            )
         self.queue.append(req)
 
+    def _to_host(self, arr: jax.Array) -> np.ndarray:
+        out = np.asarray(arr)
+        self.d2h_transfers += 1
+        self.d2h_elems += out.size
+        return out
+
+    def _all_greedy(self) -> bool:
+        """Static sampling hint: True when no active slot needs the
+        categorical draw (at most two jit variants exist per shape)."""
+        return not bool((self.temps[self.active] > 0).any())
+
+    # ------------------------------------------------------------------
+    # admission
+    # ------------------------------------------------------------------
+    @staticmethod
+    def _extra_sig(extra: Optional[Dict[str, np.ndarray]]):
+        if not extra:
+            return None
+        return tuple(sorted(
+            (k, tuple(np.asarray(v).shape), np.asarray(v).dtype.str)
+            for k, v in extra.items()
+        ))
+
     def _admit(self) -> None:
+        if self.engine == "legacy":
+            self._admit_legacy()
+            return
+        if not self.queue:
+            return
+        free = np.flatnonzero(~self.active)
+        if free.size == 0:
+            return
+        n = min(int(free.size), len(self.queue))
+        pairs = [(int(free[i]), self.queue.popleft()) for i in range(n)]
+        groups: Dict[Tuple, List[Tuple[int, Request]]] = {}
+        for slot, req in pairs:
+            plen = len(req.prompt)
+            sig = self._extra_sig(req.extra)
+            if self._padded_admission:
+                key = ("pad", _pow2_bucket(max(plen, _MIN_SEQ_BUCKET),
+                                           self.max_seq), sig)
+            else:
+                key = ("exact", plen, sig)
+            groups.setdefault(key, []).append((slot, req))
+        for (kind, seq_len, _), members in groups.items():
+            self._admit_group(kind, seq_len, members)
+
+    def _admit_group(self, kind: str, seq_len: int,
+                     members: List[Tuple[int, Request]]) -> None:
+        n = len(members)
+        n_pad = _pow2_bucket(n, self.max_batch)
+        tokens = np.zeros((n_pad, seq_len), np.int32)
+        lens = np.ones(n_pad, np.int32)
+        temps = np.zeros(n_pad, np.float32)
+        slots = np.zeros(n_pad, np.int32)
+        for i, (slot, req) in enumerate(members):
+            plen = len(req.prompt)
+            tokens[i, :plen] = np.asarray(req.prompt, np.int32)
+            lens[i] = plen
+            temps[i] = req.temperature
+            slots[i] = slot
+        extra = None
+        if members[0][1].extra:
+            extra = {}
+            for k in sorted(members[0][1].extra):
+                rows = [np.asarray(req.extra[k]) for _, req in members]
+                rows += [rows[0]] * (n_pad - n)
+                extra[k] = jnp.asarray(np.stack(rows))
+        fn = (self._prefill_insert_pad if kind == "pad"
+              else self._prefill_insert_exact)
+        first, self.cache = fn(
+            self.params, self.cache, jnp.asarray(tokens), extra,
+            jnp.asarray(lens), jnp.asarray(slots), jnp.int32(n),
+            self.base_key, jnp.asarray(temps),
+        )
+        first = np.asarray(first)
+        for i, (slot, req) in enumerate(members):
+            self._place(slot, req, int(first[i]))
+
+    def _admit_legacy(self) -> None:
         while self.queue and not self.active.all():
             slot = int(np.argmax(~self.active))
             req = self.queue.popleft()
@@ -95,12 +346,23 @@ class ServeEngine:
                 if req.extra else None
             )
             logits, cache1 = self._prefill(self.params, tokens, extra)
-            self.cache = _insert_slot(self.cache, cache1, slot)
+            self.cache = self._insert(self.cache, cache1, jnp.int32(slot))
             first = self._sample(logits[0], req.temperature)
-            self.active[slot] = True
-            self.req[slot] = req
-            self.emitted[slot] = [int(first)]
-            self.last_token[slot, 0] = int(first)
+            self._place(slot, req, int(first))
+
+    def _place(self, slot: int, req: Request, first: int) -> None:
+        """Occupy a slot with a freshly prefilled request and apply the
+        retire rules to its admission-sampled token — a prefill-EOS (or a
+        1-token budget) finishes the request without a decode step."""
+        self.active[slot] = True
+        self.req[slot] = req
+        self.emitted[slot] = [first]
+        self.last_token[slot] = first
+        self.temps[slot] = req.temperature
+        if first == self.eos_id:
+            self._retire(slot, "eos")
+        elif req.max_new_tokens <= 1:
+            self._retire(slot, "length")
 
     def _sample(self, logits: jax.Array, temperature: float) -> int:
         if temperature <= 0:
@@ -118,33 +380,89 @@ class ServeEngine:
         self.emitted[slot] = []
 
     # ------------------------------------------------------------------
+    # decode
+    # ------------------------------------------------------------------
+    def _consume(self, tok_rows: np.ndarray) -> None:
+        """Apply decoded tokens, one (B,) row per decode step, to the host
+        bookkeeping — the same retire rules the device chunk mask uses,
+        so host and device state stay in lockstep."""
+        for row in tok_rows:
+            if not self.active.any():
+                break
+            for slot in range(self.max_batch):
+                if not self.active[slot]:
+                    continue
+                req = self.req[slot]
+                tok = int(row[slot])
+                self.emitted[slot].append(tok)
+                self.last_token[slot] = tok
+                if tok == self.eos_id:
+                    self._retire(slot, "eos")
+                elif len(self.emitted[slot]) >= req.max_new_tokens:
+                    self._retire(slot, "length")
+
     def step(self) -> None:
         """One engine iteration: admit new work, decode one token for every
-        active slot, retire finished slots."""
+        active slot, retire finished slots.  On the fused path this is one
+        device dispatch and one (B,) host transfer."""
         self._admit()
         if not self.active.any():
             return
-        logits, self.cache = self._decode(
-            self.params, self.cache, jnp.asarray(self.last_token)
+        if self.engine == "legacy":
+            logits, self.cache = self._decode(
+                self.params, self.cache, jnp.asarray(self.last_token)[:, None]
+            )
+            # full (B, V) host copy — the cost the fused path removes;
+            # routed through _to_host so the instrumentation tells the truth
+            logits = self._to_host(logits).astype(np.float32)
+            row = np.zeros(self.max_batch, np.int32)
+            for slot in range(self.max_batch):  # one dispatch per slot
+                if not self.active[slot]:
+                    continue
+                row[slot] = self._sample(jnp.asarray(logits[slot]),
+                                         self.req[slot].temperature)
+            self._consume(row[None])
+            return
+        toks, self.cache = self._decode_sample(
+            self.params, self.cache, jnp.asarray(self.last_token)[:, None],
+            self.base_key, jnp.asarray(self.temps),
+            greedy_only=self._all_greedy(),
         )
-        logits = np.asarray(logits, np.float32)  # (B, V)
-        for slot in range(self.max_batch):
-            if not self.active[slot]:
-                continue
-            req = self.req[slot]
-            tok = self._sample(jnp.asarray(logits[slot]), req.temperature)
-            self.emitted[slot].append(int(tok))
-            self.last_token[slot, 0] = int(tok)
-            if tok == self.eos_id:
-                self._retire(slot, "eos")
-            elif len(self.emitted[slot]) >= req.max_new_tokens:
-                self._retire(slot, "length")
+        self._consume(self._to_host(toks)[None])
+
+    def step_chunk(self) -> int:
+        """One chunked iteration: admit, then decode ``decode_chunk``
+        tokens per slot in a single scanned dispatch.  Returns the number
+        of decode steps executed (0 when idle)."""
+        if self._decode_chunk is None:
+            self.step()
+            return 1
+        self._admit()
+        if not self.active.any():
+            return 0
+        budgets = np.asarray(
+            [r.max_new_tokens if r is not None else 0 for r in self.req],
+            np.int32,
+        )
+        counts = np.asarray([len(e) for e in self.emitted], np.int32)
+        seq, self.cache = self._decode_chunk(
+            self.params, self.cache, jnp.asarray(self.last_token),
+            self.base_key, jnp.asarray(self.temps), jnp.asarray(self.active),
+            jnp.asarray(counts), jnp.asarray(budgets), jnp.int32(self.eos_id),
+            greedy_only=self._all_greedy(),
+        )
+        self._consume(self._to_host(seq))
+        return self.decode_chunk
 
     def run(self, max_steps: int = 10_000) -> List[Completion]:
         steps = 0
+        chunked = self.engine == "fused" and self.decode_chunk > 1
         while (self.queue or self.active.any()) and steps < max_steps:
-            self.step()
-            steps += 1
+            if chunked:
+                steps += self.step_chunk() or 1
+            else:
+                self.step()
+                steps += 1
         return self.done
 
     # ------------------------------------------------------------------
@@ -156,24 +474,29 @@ class ServeEngine:
 def smoke_serve(model: Model, params: Pytree, *, num_requests: int,
                 vocab_size: int, max_batch: int = 8, max_seq: int = 96,
                 prompt_len: int = 8, max_new_tokens: int = 8,
-                seed: int = 0) -> Tuple[List[Completion], Dict[str, float]]:
+                seed: int = 0, engine: str = "fused", decode_chunk: int = 1,
+                temperature: float = 0.0
+                ) -> Tuple[List[Completion], Dict[str, float]]:
     """Drive one engine through a synthetic request burst and report
     throughput stats — the serving smoke used by ServeStage and quick
     engine checks.  Returns (completions, stats) where stats carries
     request/token counts and tokens/s for the metric log."""
     import time
 
-    engine = ServeEngine(model, params, max_batch=max_batch, max_seq=max_seq,
-                         seed=seed)
+    eng = ServeEngine(model, params, max_batch=max_batch, max_seq=max_seq,
+                      seed=seed, engine=engine, decode_chunk=decode_chunk)
     rng = np.random.default_rng(seed)
     t0 = time.perf_counter()
     for i in range(num_requests):
-        engine.submit(Request(uid=i,
-                              prompt=rng.integers(1, vocab_size, prompt_len),
-                              max_new_tokens=max_new_tokens))
-    completions = engine.run()
+        eng.submit(Request(uid=i,
+                           prompt=rng.integers(1, vocab_size, prompt_len),
+                           max_new_tokens=max_new_tokens,
+                           temperature=temperature))
+    completions = eng.run()
     dt = time.perf_counter() - t0
     toks = sum(len(c.tokens) for c in completions)
     stats = {"requests": len(completions), "tokens": toks,
-             "step_time_s": dt, "tok_per_s": toks / max(dt, 1e-9)}
+             "step_time_s": dt, "tok_per_s": toks / max(dt, 1e-9),
+             "engine": engine, "decode_chunk": decode_chunk,
+             "d2h_transfers": eng.d2h_transfers}
     return completions, stats

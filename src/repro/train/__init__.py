@@ -1,5 +1,5 @@
 from repro.train.optimizer import OptimizerConfig, adamw_init, adamw_update, lr_at
-from repro.train.step import TrainArtifacts, init_train_state, make_train_artifacts, make_train_step
+from repro.train.step import TrainArtifacts, init_train_state, jit_train_step, make_train_artifacts, make_train_step
 
 __all__ = [
     "OptimizerConfig",
@@ -8,6 +8,7 @@ __all__ = [
     "lr_at",
     "TrainArtifacts",
     "init_train_state",
+    "jit_train_step",
     "make_train_artifacts",
     "make_train_step",
 ]

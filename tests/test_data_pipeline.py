@@ -1,0 +1,81 @@
+"""Synthetic stream: seed/shard determinism and byte-exact parity of the
+vectorized bigram injection with the original per-position loop."""
+import numpy as np
+import pytest
+
+from repro.configs import get_config, reduced
+from repro.configs.base import ShapeConfig
+from repro.data import DataConfig, make_stream
+
+
+def _reference_batch(stream, step):
+    """The pre-vectorization batch_at: per-position bigram substitution.
+    Kept here as the parity oracle for the transition-chain gather."""
+    dcfg = stream.dcfg
+    rng = np.random.default_rng((dcfg.seed, step, stream.host_id, 0xA11CE))
+    B, S, v = stream.local_batch, stream.seq_len, stream._v
+    base = rng.zipf(dcfg.zipf_a, size=(B, S)) % (v - 1) + 1
+    toks = base.astype(np.int32)
+    follow = rng.random((B, S)) < dcfg.bigram_weight
+    for t in range(1, S):
+        toks[:, t] = np.where(
+            follow[:, t], stream._next_tok[toks[:, t - 1]], toks[:, t]
+        )
+    out = {"tokens": toks}
+    cfg = stream.model_cfg
+    if cfg.is_encoder_decoder:
+        out["frames"] = rng.standard_normal(
+            (B, cfg.encoder_frames, cfg.d_model)
+        ).astype(np.float32) * 0.02
+    if cfg.family == "vlm" and cfg.num_image_tokens:
+        out["image_embeds"] = rng.standard_normal(
+            (B, cfg.num_image_tokens, cfg.d_model)
+        ).astype(np.float32) * 0.02
+    return out
+
+
+@pytest.mark.parametrize("arch", ["qwen2-1.5b", "whisper-large-v3",
+                                  "phi3-vision"])
+@pytest.mark.parametrize("seed,weight", [(0, 0.5), (7, 0.9)])
+def test_vectorized_bigram_matches_loop(arch, seed, weight):
+    cfg = reduced(get_config(arch))
+    stream = make_stream(cfg, ShapeConfig("t", 48, 6, "train"),
+                         DataConfig(seed=seed, bigram_weight=weight))
+    for step in (0, 2, 9):
+        got = stream.batch_at(step)
+        want = _reference_batch(stream, step)
+        assert sorted(got) == sorted(want)
+        for k in want:
+            assert got[k].dtype == want[k].dtype, k
+            np.testing.assert_array_equal(got[k], want[k], err_msg=k)
+
+
+def test_bigram_weight_extremes():
+    cfg = reduced(get_config("qwen2-1.5b"))
+    always = make_stream(cfg, ShapeConfig("t", 32, 4, "train"),
+                         DataConfig(seed=0, bigram_weight=1.1))
+    toks = always.batch_at(0)["tokens"]
+    # every position follows the table from its predecessor
+    np.testing.assert_array_equal(
+        toks[:, 1:], always._next_tok[toks[:, :-1]].astype(np.int32)
+    )
+    never = make_stream(cfg, ShapeConfig("t", 32, 4, "train"),
+                        DataConfig(seed=0, bigram_weight=-1.0))
+    ref = _reference_batch(never, 0)["tokens"]
+    np.testing.assert_array_equal(never.batch_at(0)["tokens"], ref)
+
+
+def test_host_shards_deterministic():
+    cfg = reduced(get_config("qwen2-1.5b"))
+    shape = ShapeConfig("t", 16, 8, "train")
+    dcfg = DataConfig(seed=3)
+    full = make_stream(cfg, shape, dcfg).batch_at(5)["tokens"]
+    shards = [make_stream(cfg, shape, dcfg, host_id=h, num_hosts=2)
+              .batch_at(5)["tokens"] for h in range(2)]
+    assert all(s.shape == (4, 16) for s in shards)
+    # each host regenerates only its shard, deterministically
+    for h, s in enumerate(shards):
+        np.testing.assert_array_equal(
+            s, make_stream(cfg, shape, dcfg, host_id=h, num_hosts=2)
+            .batch_at(5)["tokens"])
+    assert full.shape == (8, 16)

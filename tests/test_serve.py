@@ -1,5 +1,7 @@
-"""Serving engine: continuous batching, slot refill, EOS handling, and
-decode==prefill-continuation consistency inside the engine."""
+"""Serving engine: continuous batching, slot refill, EOS handling,
+decode==prefill-continuation consistency inside the engine, and the
+fused-path contracts (greedy parity with the per-slot legacy path,
+chunked==step-by-step decode, one (B,) host transfer per step)."""
 import jax
 import numpy as np
 import pytest
@@ -15,6 +17,24 @@ def engine_setup():
     model = build_model(cfg)
     params, _ = model.init(jax.random.PRNGKey(0))
     return cfg, model, params
+
+
+def _completions(engine_setup, *, engine, decode_chunk=1, max_batch=3,
+                 prompt_lens=(6, 9, 6, 11, 7, 9), max_new=5, seed=0,
+                 temperature=0.0, eos_id=-1):
+    """Run one request burst and return {uid: (tokens, reason)}."""
+    cfg, model, params = engine_setup
+    eng = ServeEngine(model, params, max_batch=max_batch, max_seq=64,
+                      eos_id=eos_id, seed=seed, engine=engine,
+                      decode_chunk=decode_chunk)
+    rng = np.random.default_rng(1)
+    for i, plen in enumerate(prompt_lens):
+        eng.submit(Request(uid=i, prompt=rng.integers(1, cfg.vocab_size, plen),
+                           max_new_tokens=max_new + (i % 3),
+                           temperature=temperature))
+    done = eng.run()
+    assert len(done) == len(prompt_lens)
+    return {c.uid: (tuple(c.tokens), c.finished_reason) for c in done}, eng
 
 
 def test_engine_completes_all_requests(engine_setup, rng):
@@ -78,3 +98,151 @@ def test_engine_temperature_sampling_differs(engine_setup, rng):
                            temperature=2.0))
         outs.add(tuple(eng.run()[0].tokens))
     assert len(outs) > 1
+
+
+# ---------------------------------------------------------------------------
+# fused-path contracts
+# ---------------------------------------------------------------------------
+def test_fused_greedy_parity_with_legacy(engine_setup):
+    """Batched admission + on-device sampling must reproduce the per-slot
+    legacy path token-for-token (greedy), across mixed prompt lengths
+    and continuous slot refill."""
+    legacy, _ = _completions(engine_setup, engine="legacy")
+    fused, eng = _completions(engine_setup, engine="fused")
+    assert fused == legacy
+    assert eng._padded_admission  # qwen2 is attention-family: padded path
+
+
+def test_chunked_decode_matches_step_by_step(engine_setup):
+    step, _ = _completions(engine_setup, engine="fused", decode_chunk=1)
+    for chunk in (2, 4):
+        chunked, _ = _completions(engine_setup, engine="fused",
+                                  decode_chunk=chunk)
+        assert chunked == step
+
+
+def test_chunked_refills_freed_slots(engine_setup):
+    """More requests than slots in chunked mode: every request completes
+    (slots freed mid-chunk are refilled at the chunk boundary)."""
+    out, eng = _completions(engine_setup, engine="fused", decode_chunk=4,
+                            max_batch=2, prompt_lens=(6, 6, 7, 6, 9))
+    assert sorted(out) == list(range(5))
+    assert all(reason == "length" for _, reason in out.values())
+    assert not eng.active.any() and not eng.queue
+
+
+def test_temperature_deterministic_per_slot(engine_setup):
+    """A slot's sample stream is a pure function of (seed, slot, pos):
+    identical across runs and across step vs chunked decode when the
+    slot assignment is fixed (requests == slots)."""
+    kw = dict(engine_setup=engine_setup, engine="fused", max_batch=4,
+              prompt_lens=(6, 8, 7, 9), temperature=1.5, seed=3)
+    a, _ = _completions(**kw)
+    b, _ = _completions(**kw)
+    assert a == b
+    chunked, _ = _completions(decode_chunk=4, **kw)
+    assert chunked == a
+    other_seed, _ = _completions(**{**kw, "seed": 4})
+    assert other_seed != a
+
+
+def test_fused_step_transfers_one_token_row(engine_setup):
+    """The fast path's D2H contract: step() moves exactly one (B,) token
+    array to the host per decode step — never the (B, V) logits."""
+    cfg, model, params = engine_setup
+    eng = ServeEngine(model, params, max_batch=4, max_seq=64, eos_id=-1)
+    rng = np.random.default_rng(0)
+    for i in range(4):
+        eng.submit(Request(uid=i, prompt=rng.integers(1, cfg.vocab_size, 6),
+                           max_new_tokens=4))
+    eng.step()  # admit + first decode
+    assert eng.d2h_transfers == 1 and eng.d2h_elems == eng.max_batch
+    eng.run()
+    assert eng.d2h_elems == eng.d2h_transfers * eng.max_batch
+
+
+def test_exact_group_admission_recurrent_family():
+    """ssm-family models reject padded prefill, so admission groups by
+    exact prompt length — and still matches the legacy path."""
+    cfg = reduced(get_config("xlstm-125m"))
+    model = build_model(cfg)
+    params, _ = model.init(jax.random.PRNGKey(0))
+    setup = (cfg, model, params)
+    legacy, _ = _completions(setup, engine="legacy", max_batch=2,
+                             prompt_lens=(5, 5, 7), max_new=3)
+    fused, eng = _completions(setup, engine="fused", max_batch=2,
+                              prompt_lens=(5, 5, 7), max_new=3)
+    assert not eng._padded_admission
+    assert fused == legacy
+
+
+@pytest.mark.parametrize("engine,chunk", [("legacy", 1), ("fused", 1),
+                                          ("fused", 4)])
+def test_max_new_tokens_is_exact(engine_setup, rng, engine, chunk):
+    """max_new_tokens=1 means one token: the admission-sampled token
+    counts against the budget (all engine paths agree)."""
+    cfg, model, params = engine_setup
+    eng = ServeEngine(model, params, max_batch=2, max_seq=64, eos_id=-1,
+                      engine=engine, decode_chunk=chunk)
+    for i, budget in enumerate((1, 2, 3)):
+        eng.submit(Request(uid=i, prompt=rng.integers(1, cfg.vocab_size, 6),
+                           max_new_tokens=budget))
+    done = eng.run()
+    assert {c.uid: len(c.tokens) for c in done} == {0: 1, 1: 2, 2: 3}
+    assert all(c.finished_reason == "length" for c in done)
+
+
+def test_prefill_eos_finishes_request(engine_setup):
+    """A request whose first sampled token is EOS retires at admission
+    with reason 'eos' — the slot never enters the decode batch."""
+    cfg, model, params = engine_setup
+    prompt = np.arange(1, 7, dtype=np.int32)
+    probe = ServeEngine(model, params, max_batch=1, max_seq=64, eos_id=-1)
+    probe.submit(Request(uid=0, prompt=prompt, max_new_tokens=1))
+    first_tok = probe.run()[0].tokens[0]
+
+    for engine in ("fused", "legacy"):
+        eng = ServeEngine(model, params, max_batch=1, max_seq=64,
+                          eos_id=first_tok, engine=engine)
+        eng.submit(Request(uid=0, prompt=prompt, max_new_tokens=8))
+        done = eng.run()
+        assert done[0].tokens == [first_tok]
+        assert done[0].finished_reason == "eos"
+
+
+def test_submit_validates_requests(engine_setup):
+    """Invalid requests are rejected at submit(), before they can poison
+    an admission batch."""
+    cfg, model, params = engine_setup
+    eng = ServeEngine(model, params, max_batch=2, max_seq=16, eos_id=-1)
+    with pytest.raises(ValueError, match="max_seq"):
+        eng.submit(Request(uid=0, prompt=np.arange(1, 30, dtype=np.int32),
+                           max_new_tokens=2))
+    with pytest.raises(ValueError, match="max_new_tokens"):
+        eng.submit(Request(uid=1, prompt=np.arange(1, 5, dtype=np.int32),
+                           max_new_tokens=0))
+    assert not eng.queue  # nothing half-accepted
+    eng.submit(Request(uid=2, prompt=np.arange(1, 5, dtype=np.int32),
+                       max_new_tokens=2))
+    assert len(eng.run()) == 1
+
+
+def test_single_slot_engine_inserts_cache(engine_setup):
+    """max_batch=1: the axes-based slot writer must still scatter the
+    prefilled cache (the old shape-diff heuristic silently no-opped)."""
+    cfg, model, params = engine_setup
+    prompt = np.arange(1, 7, dtype=np.int32)
+    eng = ServeEngine(model, params, max_batch=1, max_seq=64, eos_id=-1)
+    eng.submit(Request(uid=0, prompt=prompt, max_new_tokens=4))
+    got = eng.run()[0].tokens
+
+    import jax.numpy as jnp
+    logits, cache = model.prefill(params, jnp.asarray(prompt)[None], None,
+                                  max_seq=64)
+    want = [int(jnp.argmax(logits[0]))]
+    tok = jnp.asarray([[want[-1]]], jnp.int32)
+    for _ in range(3):
+        logits, cache = model.decode_step(params, cache, tok)
+        want.append(int(jnp.argmax(logits[0])))
+        tok = jnp.asarray([[want[-1]]], jnp.int32)
+    assert got == want

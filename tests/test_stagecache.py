@@ -199,3 +199,73 @@ def test_stats_and_clear(tmp_path):
     s = CountingStage()
     r, _ = _run(s, cache, {"knob": 1})
     assert not r.cached and s.calls == 1
+
+
+# ---------------------------------------------------------------------------
+# LRU size bound
+# ---------------------------------------------------------------------------
+def _entry_bytes(cache):
+    stats = cache.stats()
+    assert stats["entries"] == 1
+    return stats["bytes"]
+
+
+def test_lru_evicts_oldest_on_insert(tmp_path):
+    probe = StageCache(str(tmp_path / "probe"))
+    _run(CountingStage(), probe, {"knob": 0})
+    per_entry = _entry_bytes(probe)
+
+    cache = StageCache(str(tmp_path / "lru"), max_bytes=2 * per_entry)
+    for knob in (1, 2, 3):
+        _run(CountingStage(), cache, {"knob": knob})
+    stats = cache.stats()
+    assert stats["entries"] == 2
+    assert stats["bytes"] <= 2 * per_entry
+    assert stats["max_bytes"] == 2 * per_entry
+    assert cache.evictions == 1
+    assert stats["session"]["evictions"] == 1
+    # the oldest entry (knob=1) went; the two newest survive and hit
+    s2 = CountingStage()
+    r2, _ = _run(s2, cache, {"knob": 2})
+    assert r2.cached and s2.calls == 0
+    s1 = CountingStage()
+    r1, _ = _run(s1, cache, {"knob": 1})
+    assert not r1.cached and s1.calls == 1
+
+
+def test_lru_hit_refreshes_recency(tmp_path):
+    import time
+
+    probe = StageCache(str(tmp_path / "probe"))
+    _run(CountingStage(), probe, {"knob": 0})
+    per_entry = _entry_bytes(probe)
+
+    cache = StageCache(str(tmp_path / "lru"), max_bytes=2 * per_entry)
+    _run(CountingStage(), cache, {"knob": 1})
+    time.sleep(0.02)
+    _run(CountingStage(), cache, {"knob": 2})
+    time.sleep(0.02)
+    _run(CountingStage(), cache, {"knob": 1})  # hit: knob=1 is now newest
+    time.sleep(0.02)
+    _run(CountingStage(), cache, {"knob": 3})  # evicts knob=2, not knob=1
+    s1 = CountingStage()
+    r1, _ = _run(s1, cache, {"knob": 1})
+    assert r1.cached and s1.calls == 0
+    s2 = CountingStage()
+    r2, _ = _run(s2, cache, {"knob": 2})
+    assert not r2.cached and s2.calls == 1
+
+
+def test_unbounded_cache_never_evicts(tmp_path):
+    cache = StageCache(str(tmp_path))
+    assert cache.max_bytes is None
+    for knob in range(5):
+        _run(CountingStage(), cache, {"knob": knob})
+    assert cache.stats()["entries"] == 5 and cache.evictions == 0
+
+
+def test_max_bytes_env_default(tmp_path, monkeypatch):
+    monkeypatch.setenv("REPRO_CACHE_MAX_BYTES", "12345")
+    assert StageCache(str(tmp_path)).max_bytes == 12345
+    assert StageCache(str(tmp_path), max_bytes=99).max_bytes == 99
+    assert StageCache(str(tmp_path), max_bytes=0).max_bytes == 0
