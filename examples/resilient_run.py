@@ -1,0 +1,69 @@
+"""Resilience walkthrough: stage retry, crash, and resume.
+
+Three acts, all on the reduced CPU config:
+
+  1. a workflow survives an injected stage failure via per-stage retry
+     (provenance: stage_failed -> stage_retry -> stage_end);
+  2. the same workflow is killed outright (no retries) — the run
+     directory keeps its stage manifest and committed checkpoints;
+  3. the crashed run is resumed: completed stages are skipped
+     (stage_cached with resume=true), training restarts from its
+     checkpoint, and the final checks match an uninterrupted run.
+
+    python examples/resilient_run.py
+"""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.core import (  # noqa: E402
+    REGISTRY,
+    FailureSchedule,
+    InjectedFailure,
+    ProvenanceStore,
+    RestartPolicy,
+    run_workflow,
+)
+
+
+def main():
+    store = ProvenanceStore("runs")
+    t = REGISTRY.get("train-xlstm-125m")
+
+    print("=== act 1: retry absorbs a stage failure =======================")
+    res = run_workflow(
+        t, store, steps_override=8,
+        failures=FailureSchedule(fail_stages={"data": 1}),
+        stage_retry=RestartPolicy(max_restarts=2, backoff_s=0.0),
+    )
+    trail = [e["kind"] for e in res.record.stage_events()
+             if e.get("stage") == "data"]
+    print(f"data-stage trail : {' -> '.join(trail)}")
+    print(f"attempts         : {res.stage_results['data'].attempts}")
+    assert res.ok and "stage_retry" in trail
+
+    print("\n=== act 2: crash (no retries) ==================================")
+    before = set(store.list_runs())
+    try:
+        run_workflow(t, store, steps_override=8,
+                     failures=FailureSchedule(fail_stages={"train": 1}))
+    except InjectedFailure as e:
+        (crashed,) = set(store.list_runs()) - before
+        print(f"run {crashed} died: {e}")
+
+    print("\n=== act 3: resume ==============================================")
+    res = run_workflow(t, store, steps_override=8, resume=crashed)
+    for name, sr in res.stage_results.items():
+        status = "skipped (resume)" if sr.resumed else "ran"
+        print(f"  {name:10s} {status}")
+    assert res.ok
+    assert res.stage_results["plan"].resumed
+    assert res.stage_results["data"].resumed
+    assert not res.stage_results["train"].resumed
+    print(f"\nresumed run ok; checks: "
+          f"{ {k: v[0] for k, v in res.checks.items()} }")
+
+
+if __name__ == "__main__":
+    main()

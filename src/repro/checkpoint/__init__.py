@@ -1,3 +1,10 @@
+"""Checkpointing: async (snapshot on caller thread, serialize on a
+background thread), atomic (temp dir + fsync + rename — a worker killed
+mid-save can never corrupt the newest committed step), rotating, and
+self-describing (a manifest records pytree structure/shapes/dtypes so
+elastic restarts can reshard onto a different mesh).  The restore path
+optionally places leaves directly onto target shardings — the hook the
+resume and elastic-restart flows use."""
 from repro.checkpoint.checkpointer import Checkpointer
 
 __all__ = ["Checkpointer"]

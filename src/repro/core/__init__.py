@@ -26,6 +26,7 @@ from repro.core.graph import (
     FnStage,
     GraphError,
     MissingInputError,
+    Placement,
     Stage,
     StageContext,
     StageGraph,
@@ -43,7 +44,7 @@ from repro.core.planner import (
     rank,
     to_runtime_plan,
 )
-from repro.core.stagecache import StageCache
+from repro.core.stagecache import RunManifest, StageCache
 from repro.core.provenance import (
     ProvenanceStore,
     RunRecord,
@@ -67,8 +68,10 @@ from repro.core.workflow import (
     WorkflowResult,
     WorkflowTemplate,
     compile_template,
+    resolve_placements,
     run_workflow,
 )
+from repro.ft.failures import FailureSchedule, InjectedFailure, RestartPolicy
 
 __all__ = [
     "BudgetExceeded", "BudgetLedger", "PermissionDenied", "Workspace",
@@ -76,8 +79,10 @@ __all__ = [
     "candidate_table", "catalog_summary", "find_slice",
     "BatchEstimate", "CostEstimate", "PlanGeometry", "estimate", "estimate_batch",
     "ExecutionEnvelope", "ResourceIntent",
-    "CycleError", "FnStage", "GraphError", "MissingInputError",
+    "CycleError", "FnStage", "GraphError", "MissingInputError", "Placement",
     "Stage", "StageCache", "StageContext", "StageGraph", "StageResult",
+    "RunManifest",
+    "FailureSchedule", "InjectedFailure", "RestartPolicy",
     "PlanChoice", "clear_planner_cache", "enumerate_plans", "intent_hash",
     "plan", "plan_stages", "prune_dominated", "rank", "to_runtime_plan",
     "ProvenanceStore", "RunRecord", "StageRecordView",
@@ -85,5 +90,6 @@ __all__ = [
     "CHECKS", "DataStage", "EvalStage", "PlanStage", "ServeStage",
     "TrainStage", "ValidateStage", "VisualizeStage",
     "REGISTRY", "WorkflowRegistry", "WorkflowResult",
-    "WorkflowTemplate", "compile_template", "run_workflow",
+    "WorkflowTemplate", "compile_template", "resolve_placements",
+    "run_workflow",
 ]

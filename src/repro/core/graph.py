@@ -10,11 +10,31 @@ stages concurrently on a thread pool, and emits per-stage provenance
 events (``stage_start`` / ``stage_end`` with timing and an outputs hash)
 into the run's :class:`RunRecord`.
 
+Resilience (see docs/architecture.md for the full event vocabulary):
+
+  * **per-stage retry** — a stage failing with a *retryable* exception
+    (default: :class:`~repro.ft.failures.InjectedFailure`, standing in
+    for preemption/node loss) is re-run under a
+    :class:`~repro.ft.failures.RestartPolicy` — per-stage ``retry``
+    attribute, falling back to the graph-level policy passed to
+    ``execute(retry=...)`` — with ``stage_failed`` / ``stage_retry``
+    provenance events and capped exponential backoff between attempts;
+  * **resume** — when ``ctx.resume`` carries a
+    :class:`~repro.core.stagecache.RunManifest`, every completed stage's
+    outputs are persisted under its content-addressed input hash, and a
+    re-execution of the same run (``repro run --resume <run_id>``) skips
+    stages whose recorded hash still matches, restoring their outputs;
+  * **placement** — each stage is bound to its own resolved backend
+    (its entry in ``stage_plans``, its own ``intent``, or the main
+    workload's ``plan_choice`` when ``placement_key == "__main__"``),
+    recorded as a ``placement`` provenance event and readable from the
+    stage body via ``ctx.current_placement()``.
+
 Graphs nest: ``inner.as_stage("prep")`` wraps a whole graph as a single
 stage of an outer graph; nested stage events are name-prefixed
 (``prep/tokenize``).
 
-Authoring a custom stage::
+Authoring a custom stage (expanded guide: docs/authoring-stages.md)::
 
     class MyStage(Stage):
         inputs = ("cfg",)
@@ -37,6 +57,7 @@ from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 from repro.core.intent import ResourceIntent
 from repro.core.provenance import RunRecord, stable_hash
+from repro.ft.failures import RestartPolicy
 
 
 class GraphError(ValueError):
@@ -81,6 +102,64 @@ class MissingInputError(KeyError):
 
 
 # ===========================================================================
+# Placement: the backend a stage is bound to
+# ===========================================================================
+@dataclasses.dataclass
+class Placement:
+    """The resolved backend one stage runs on.
+
+    Derived from the stage's :class:`~repro.core.planner.PlanChoice` —
+    slice (the catalog's backend unit), mesh shape/axes, chip count and
+    price.  ``build_mesh()`` folds the planned mesh onto the locally
+    visible devices (degenerate all-1s mesh on a CPU container, the real
+    shape on a fleet) so stage bodies can place arrays on *their* backend
+    rather than the global default.
+    """
+
+    stage: str
+    slice_name: str
+    mesh_shape: Tuple[int, ...]
+    mesh_axes: Tuple[str, ...]
+    chips: int
+    price_per_hour: float
+    summary: str = ""
+
+    def as_doc(self) -> Dict[str, Any]:
+        """JSON-able form for provenance events and CLI rendering."""
+        return {
+            "stage": self.stage,
+            "slice": self.slice_name,
+            "mesh_shape": list(self.mesh_shape),
+            "mesh_axes": list(self.mesh_axes),
+            "chips": self.chips,
+            "price_per_hour": self.price_per_hour,
+        }
+
+    def render(self) -> str:
+        mesh = "x".join(map(str, self.mesh_shape))
+        return (f"{self.slice_name} mesh={mesh} chips={self.chips} "
+                f"${self.price_per_hour:,.2f}/h")
+
+    def build_mesh(self):
+        """A jax Mesh for this placement, clamped to available devices."""
+        from repro.launch.mesh import mesh_for_placement
+
+        return mesh_for_placement(self.mesh_shape, self.mesh_axes)
+
+    @classmethod
+    def from_choice(cls, stage: str, choice: Any) -> "Placement":
+        return cls(
+            stage=stage,
+            slice_name=choice.slice.name,
+            mesh_shape=tuple(choice.mesh_shape),
+            mesh_axes=tuple(choice.mesh_axes),
+            chips=choice.slice.total_chips,
+            price_per_hour=choice.slice.price_per_hour,
+            summary=choice.summary,
+        )
+
+
+# ===========================================================================
 # Stage & context
 # ===========================================================================
 class Stage:
@@ -99,13 +178,33 @@ class Stage:
     outputs: Tuple[str, ...] = ()
     intent: Optional[ResourceIntent] = None
     checks: Tuple[str, ...] = ()
+    # -- fault tolerance ------------------------------------------------
+    # per-stage restart policy; None inherits the graph-level policy
+    # passed to StageGraph.execute(retry=...).  Only exceptions matching
+    # the policy's ``retry_on`` classes are retried.
+    retry: Optional[RestartPolicy] = None
+    # -- placement ------------------------------------------------------
+    # how the scheduler binds this stage to a backend: "__main__" uses
+    # the workflow's main plan_choice; None falls back to the stage's
+    # entry in stage_plans, then to its own ``intent``.
+    placement_key: Optional[str] = None
+    # -- resume ---------------------------------------------------------
+    # False = record this stage in the run manifest hash-only (no output
+    # pickle): on resume it re-runs instead of restoring.  Set it on
+    # stages with their own durable recovery path — TrainStage opts out
+    # because its state is already committed by the checkpointer, and a
+    # re-run restores the newest checkpoint without replaying steps.
+    resume_payload: bool = True
     # -- cross-run caching (see repro.core.stagecache) ------------------
     # Only stages whose outputs are a pure function of the hashed inputs
     # should opt in; side-effectful stages (budget authorization, metric
     # logging, checkpoint writes) must stay uncacheable.
     cacheable: bool = False
     # ctx.params keys folded into the input hash (the knobs this stage
-    # actually reads — keeps unrelated param changes from invalidating)
+    # actually reads — keeps unrelated param changes from invalidating).
+    # Also folded into the *resume* key, so uncacheable stages should
+    # list their knobs too: it keeps `run --resume` from skipping a
+    # stage whose effective configuration changed.
     cache_params: Tuple[str, ...] = ()
     # template fields folded into the input hash; None = whole template
     cache_template_fields: Optional[Tuple[str, ...]] = None
@@ -119,6 +218,14 @@ class Stage:
 
     def run(self, ctx: "StageContext") -> Dict[str, Any]:
         raise NotImplementedError
+
+    def resume_safe(self, ctx: "StageContext") -> bool:
+        """May a resumed run skip this stage when its recorded input hash
+        still matches?  Override to return False when skipping would
+        bypass a side effect the run depends on — e.g. PlanStage refuses
+        while a budget ledger is attached, so resume cannot dodge the
+        authorization gate."""
+        return True
 
     def signature(self) -> Dict[str, Any]:
         """JSON-able identity of this stage for the cache key: type,
@@ -141,12 +248,14 @@ class FnStage(Stage):
 
     def __init__(self, name: str, fn: Callable[["StageContext"], Optional[Dict]],
                  inputs: Sequence[str] = (), outputs: Sequence[str] = (),
-                 intent: Optional[ResourceIntent] = None):
+                 intent: Optional[ResourceIntent] = None,
+                 retry: Optional[RestartPolicy] = None):
         super().__init__(name)
         self.fn = fn
         self.inputs = tuple(inputs)
         self.outputs = tuple(outputs)
         self.intent = intent
+        self.retry = retry
 
     def run(self, ctx: "StageContext") -> Dict[str, Any]:
         return self.fn(ctx) or {}
@@ -160,7 +269,10 @@ class StageContext:
     (lock-guarded — stages may run concurrently); ``params`` carries
     run-scoped knobs (steps_override, smoke_batch, failures, intent);
     ``cache`` is an optional :class:`repro.core.stagecache.StageCache`
-    the scheduler consults to skip cacheable stages across runs.
+    the scheduler consults to skip cacheable stages across runs;
+    ``resume`` is an optional
+    :class:`repro.core.stagecache.RunManifest` recording completed
+    stages of *this* run so an interrupted execution can be resumed.
     """
 
     template: Any = None
@@ -170,11 +282,14 @@ class StageContext:
     user: str = "anonymous"
     workspace: str = "default"
     cache: Any = None
+    resume: Any = None
     params: Dict[str, Any] = dataclasses.field(default_factory=dict)
     outputs: Dict[str, Any] = dataclasses.field(default_factory=dict)
 
     def __post_init__(self):
         self._lock = threading.Lock()
+        self._placements: Dict[str, Placement] = {}
+        self._tls = threading.local()
 
     def get(self, key: str, default: Any = dataclasses.MISSING) -> Any:
         with self._lock:
@@ -191,6 +306,29 @@ class StageContext:
         with self._lock:
             self.outputs.update(kw)
 
+    # -- placement bindings (written by the scheduler) ------------------
+    def bind_placement(self, name: str, placement: Placement) -> None:
+        with self._lock:
+            self._placements[name] = placement
+
+    def placement(self, name: str) -> Optional[Placement]:
+        """The backend the scheduler bound stage ``name`` to, if any.
+        Names are as they appear in provenance — nested stages are
+        prefixed (``prep/train``)."""
+        with self._lock:
+            return self._placements.get(name)
+
+    def placements(self) -> Dict[str, Placement]:
+        with self._lock:
+            return dict(self._placements)
+
+    def current_placement(self) -> Optional[Placement]:
+        """The placement of the stage executing on *this* thread — what a
+        stage body should read (collision-free even when nested
+        subgraphs reuse stage names; the scheduler sets it around every
+        ``run()`` call)."""
+        return getattr(self._tls, "placement", None)
+
 
 @dataclasses.dataclass
 class StageResult:
@@ -201,7 +339,15 @@ class StageResult:
     output_keys: Tuple[str, ...] = ()
     error: Optional[str] = None
     cached: bool = False                 # outputs restored from StageCache
+    resumed: bool = False                # outputs restored from RunManifest
     outputs_hash: Optional[str] = None   # structural hash of the outputs
+    attempts: int = 1                    # 1 = first try succeeded
+    placement: Optional[str] = None      # bound backend (render string)
+
+    @property
+    def skipped(self) -> bool:
+        """True when the stage body never ran (cache or resume skip)."""
+        return self.cached or self.resumed
 
 
 # ===========================================================================
@@ -294,14 +440,20 @@ class StageGraph:
         return g
 
     def as_stage(self, name: Optional[str] = None,
-                 max_workers: int = 4) -> Stage:
+                 max_workers: int = 4,
+                 retry: Optional[RestartPolicy] = None) -> Stage:
         """Wrap this whole graph as one stage of an outer graph
-        (recursive subworkflow nesting)."""
-        return _SubworkflowStage(name or self.name, self, max_workers)
+        (recursive subworkflow nesting).  ``retry`` becomes the inner
+        graph's graph-level restart policy."""
+        return _SubworkflowStage(name or self.name, self, max_workers, retry)
 
     # -- rendering ------------------------------------------------------
-    def render(self) -> str:
-        """ASCII DAG in topological order (the CLI `graph` subcommand)."""
+    def render(self, placements: Optional[Dict[str, str]] = None) -> str:
+        """ASCII DAG in topological order (the CLI `graph` subcommand).
+
+        ``placements`` maps stage names to resolved-backend strings
+        (the CLI's ``graph --placements``); stages without an entry
+        render as running on the local/default backend."""
         lines = [f"graph {self.name} ({len(self._stages)} stages)"]
         for n in self.topo_order():
             s = self._stages[n]
@@ -313,15 +465,26 @@ class StageGraph:
             if s.inputs or s.outputs:
                 io = f"  [{','.join(s.inputs)}] -> [{','.join(s.outputs)}]"
             lines.append(f"  {n:<16s} <- {deps:<24s}{io}{extra}")
+            if placements is not None:
+                lines.append(f"  {'':<16s}    @ {placements.get(n, 'local')}")
         return "\n".join(lines)
 
     # -- execution ------------------------------------------------------
     def execute(self, ctx: StageContext, *, max_workers: int = 4,
-                prefix: str = "") -> Dict[str, StageResult]:
+                prefix: str = "",
+                retry: Optional[RestartPolicy] = None,
+                ) -> Dict[str, StageResult]:
         """Run every stage, respecting edges, independent stages in
-        parallel.  Stage exceptions propagate unchanged (after an
-        ``ok=False`` stage_end event) so callers see e.g. BudgetExceeded
-        exactly as the monolithic runner raised it."""
+        parallel.
+
+        ``retry`` is the graph-level restart policy: a stage failing with
+        an exception the policy deems retryable is re-run (after backoff)
+        up to ``max_restarts`` times, with ``stage_failed`` /
+        ``stage_retry`` provenance events per attempt; a stage's own
+        ``retry`` attribute overrides it.  Non-retryable stage exceptions
+        propagate unchanged (after an ``ok=False`` stage_end event) so
+        callers see e.g. BudgetExceeded exactly as the monolithic runner
+        raised it."""
         self.validate()
         indeg = {n: sum(1 for d in self._deps[n]) for n in self._stages}
         ready = [n for n in self.topo_order() if indeg[n] == 0]
@@ -330,10 +493,18 @@ class StageGraph:
 
         def _launch(pool, name):
             stage = self._stages[name]
+            placement = self._resolve_placement(name, ctx)
+            if placement is not None:
+                ctx.bind_placement(prefix + name, placement)
+                if ctx.record is not None:
+                    ctx.record.log_event("placement", {
+                        **placement.as_doc(), "stage": prefix + name,
+                    })
             if ctx.record is not None:
                 ctx.record.log_event("stage_start", {"stage": prefix + name})
             input_hash = self._input_hash(name, ctx, results)
-            fut = pool.submit(self._run_stage, stage, ctx, prefix, input_hash)
+            fut = pool.submit(self._run_stage, stage, ctx, prefix,
+                              input_hash, retry, placement)
             pending[fut] = name
 
         failure: Optional[BaseException] = None
@@ -358,14 +529,45 @@ class StageGraph:
             raise failure
         return results
 
+    # -- placement ------------------------------------------------------
+    def _resolve_placement(self, name: str,
+                           ctx: StageContext) -> Optional[Placement]:
+        """The backend stage ``name`` should run on, best-effort at launch
+        time: the main workload's plan_choice (``placement_key ==
+        "__main__"``), the stage's entry in an upstream PlanStage's
+        ``stage_plans``, or a fresh planner pass over the stage's own
+        ``intent``.  None when nothing is resolvable yet (e.g. a stage
+        launched concurrently with the plan stage)."""
+        stage = self._stages[name]
+        choice = None
+        if stage.placement_key == "__main__":
+            choice = ctx.get("plan_choice", None)
+        if choice is None:
+            plans = ctx.get("stage_plans", None) or {}
+            choice = plans.get(name)
+        if choice is None and stage.intent is not None:
+            from repro.core.planner import plan_stages
+
+            try:
+                choice = plan_stages({name: stage.intent}).get(name)
+            except Exception:
+                choice = None  # placement is advisory; never block launch
+        if choice is None:
+            return None
+        return Placement.from_choice(name, choice)
+
+    # -- content addressing ---------------------------------------------
     def _input_hash(self, name: str, ctx: StageContext,
                     results: Dict[str, StageResult]) -> Optional[str]:
-        """The stage's content-addressed cache key: stage signature +
+        """The stage's content-addressed input key: stage signature +
         declared input values + upstream output hashes + the template
         fields and params the stage reads (see repro.core.stagecache).
-        None when the stage is uncacheable or no cache is attached."""
+        Used both as the cross-run cache key (cacheable stages) and the
+        resume key (any stage, when a RunManifest is attached).  None
+        when neither consumer is attached or an input is missing."""
         stage = self._stages[name]
-        if not stage.cacheable or ctx.cache is None:
+        want_cache = stage.cacheable and ctx.cache is not None
+        if not want_cache and ctx.resume is None:
             return None
         try:
             inputs = {k: _describe(ctx.get(k)) for k in stage.inputs}
@@ -389,12 +591,54 @@ class StageGraph:
                        for k in stage.cache_params},
         })
 
+    # -- the per-stage state machine ------------------------------------
     def _run_stage(self, stage: Stage, ctx: StageContext, prefix: str,
                    input_hash: Optional[str] = None,
+                   graph_retry: Optional[RestartPolicy] = None,
+                   placement: Optional[Placement] = None,
                    ) -> Tuple[StageResult, Optional[BaseException]]:
         t0 = time.perf_counter()
         started = time.time()
-        if input_hash is not None and ctx.cache is not None:
+        full_name = prefix + stage.name
+        place_str = placement.render() if placement is not None else None
+        # expose the binding and the full provenance prefix to the stage
+        # body thread-locally: unlike name-keyed lookups this stays
+        # correct when nested subgraphs reuse stage names, and lets a
+        # subworkflow stage extend the prefix at any nesting depth
+        ctx._tls.placement = placement
+        ctx._tls.prefix = prefix
+
+        # 1) resume: this very run already completed the stage ----------
+        if input_hash is not None and ctx.resume is not None \
+                and stage.resume_safe(ctx):
+            entry = ctx.resume.lookup(full_name, input_hash)
+            if entry is not None:
+                hit = ctx.resume.load_outputs(full_name, input_hash)
+                if hit is not None and all(k in hit for k in stage.outputs):
+                    ctx.put(**hit)
+                    dt = time.perf_counter() - t0
+                    ohash = entry.get("outputs_hash") or stable_hash(
+                        _describe_outputs(hit))
+                    if ctx.record is not None:
+                        ctx.record.log_event("stage_cached", {
+                            "stage": full_name, "input_hash": input_hash,
+                            "outputs": sorted(hit), "resume": True,
+                        })
+                        ctx.record.log_event("stage_end", {
+                            "stage": full_name, "ok": True,
+                            "duration_s": dt, "cached": True, "resumed": True,
+                            "outputs": sorted(hit), "outputs_hash": ohash,
+                        })
+                    return StageResult(stage.name, True, started, dt,
+                                       output_keys=tuple(sorted(hit)),
+                                       cached=True, resumed=True,
+                                       outputs_hash=ohash,
+                                       placement=place_str), None
+
+        # 2) cross-run cache hit ----------------------------------------
+        use_cache = (input_hash is not None and stage.cacheable
+                     and ctx.cache is not None)
+        if use_cache:
             hit = ctx.cache.get(input_hash)
             if hit is not None and all(k in hit for k in stage.outputs):
                 ctx.put(**hit)
@@ -402,29 +646,70 @@ class StageGraph:
                 ohash = stable_hash(_describe_outputs(hit))
                 if ctx.record is not None:
                     ctx.record.log_event("stage_cached", {
-                        "stage": prefix + stage.name,
+                        "stage": full_name,
                         "input_hash": input_hash,
                         "outputs": sorted(hit),
                     })
                     ctx.record.log_event("stage_end", {
-                        "stage": prefix + stage.name, "ok": True,
+                        "stage": full_name, "ok": True,
                         "duration_s": dt, "cached": True,
                         "outputs": sorted(hit), "outputs_hash": ohash,
                     })
+                if ctx.resume is not None:
+                    # hash-only entry: a resume misses here, falls through
+                    # to the cross-run cache and hits there — no need to
+                    # pickle the payload a second time into the run dir
+                    ctx.resume.record(full_name, input_hash, ohash, hit, dt,
+                                      store_payload=False)
                 return StageResult(stage.name, True, started, dt,
                                    output_keys=tuple(sorted(hit)),
-                                   cached=True, outputs_hash=ohash), None
-        try:
-            out = stage.run(ctx) or {}
-        except BaseException as e:  # noqa: BLE001 — re-raised by execute()
-            dt = time.perf_counter() - t0
-            res = StageResult(stage.name, False, started, dt, error=repr(e))
-            if ctx.record is not None:
-                ctx.record.log_event("stage_end", {
-                    "stage": prefix + stage.name, "ok": False,
-                    "duration_s": dt, "error": repr(e),
-                })
-            return res, e
+                                   cached=True, outputs_hash=ohash,
+                                   placement=place_str), None
+
+        # 3) run, retrying under the restart policy ---------------------
+        policy = stage.retry if stage.retry is not None else graph_retry
+        failures = ctx.params.get("failures")
+        attempt = 0
+        while True:
+            t_attempt = time.perf_counter()
+            try:
+                if failures is not None:
+                    failures.check_stage(full_name)
+                out = stage.run(ctx) or {}
+                break
+            except BaseException as e:  # noqa: BLE001 — re-raised below
+                dt_attempt = time.perf_counter() - t_attempt
+                retryable = policy is not None and policy.retryable(e)
+                will_retry = retryable and attempt < policy.max_restarts
+                if ctx.record is not None:
+                    ctx.record.log_event("stage_failed", {
+                        "stage": full_name, "attempt": attempt + 1,
+                        "error": repr(e), "retryable": retryable,
+                        "duration_s": dt_attempt,
+                    })
+                if not will_retry:
+                    dt = time.perf_counter() - t0
+                    res = StageResult(stage.name, False, started, dt,
+                                      error=repr(e), attempts=attempt + 1,
+                                      placement=place_str)
+                    if ctx.record is not None:
+                        ctx.record.log_event("stage_end", {
+                            "stage": full_name, "ok": False,
+                            "duration_s": dt, "error": repr(e),
+                            "attempts": attempt + 1,
+                        })
+                    return res, e
+                delay = policy.delay(attempt)
+                if ctx.record is not None:
+                    ctx.record.log_event("stage_retry", {
+                        "stage": full_name, "attempt": attempt + 2,
+                        "delay_s": delay,
+                    })
+                if delay > 0:
+                    time.sleep(delay)
+                attempt += 1
+
+        # 4) success: validate declared outputs, publish, persist -------
         dt = time.perf_counter() - t0
         missing = [k for k in stage.outputs if k not in out]
         if missing:
@@ -434,24 +719,36 @@ class StageGraph:
             )
             if ctx.record is not None:
                 ctx.record.log_event("stage_end", {
-                    "stage": prefix + stage.name, "ok": False,
+                    "stage": full_name, "ok": False,
                     "duration_s": dt, "error": repr(e),
                 })
             return StageResult(stage.name, False, started, dt,
-                               error=repr(e)), e
+                               error=repr(e), attempts=attempt + 1,
+                               placement=place_str), e
         ctx.put(**out)
         ohash = stable_hash(_describe_outputs(out))
         res = StageResult(stage.name, True, started, dt,
                           output_keys=tuple(sorted(out)),
-                          outputs_hash=ohash)
-        if input_hash is not None and ctx.cache is not None:
-            ctx.cache.put(input_hash, prefix + stage.name, out, dt)
+                          outputs_hash=ohash, attempts=attempt + 1,
+                          placement=place_str)
+        if use_cache:
+            ctx.cache.put(input_hash, full_name, out, dt)
+        if input_hash is not None and ctx.resume is not None:
+            # a cacheable stage's payload just went into the cross-run
+            # cache — the manifest entry stays hash-only and resume
+            # falls through to the cache, same as the hit path
+            ctx.resume.record(full_name, input_hash, ohash, out, dt,
+                              store_payload=stage.resume_payload
+                              and not use_cache)
         if ctx.record is not None:
-            ctx.record.log_event("stage_end", {
-                "stage": prefix + stage.name, "ok": True, "duration_s": dt,
+            end = {
+                "stage": full_name, "ok": True, "duration_s": dt,
                 "outputs": sorted(out),
                 "outputs_hash": ohash,
-            })
+            }
+            if attempt:
+                end["attempts"] = attempt + 1
+            ctx.record.log_event("stage_end", end)
         return res, None
 
 
@@ -462,10 +759,12 @@ class _SubworkflowStage(Stage):
     params); its stage events are prefixed ``<name>/``.
     """
 
-    def __init__(self, name: str, graph: StageGraph, max_workers: int = 4):
+    def __init__(self, name: str, graph: StageGraph, max_workers: int = 4,
+                 retry: Optional[RestartPolicy] = None):
         super().__init__(name)
         self.graph = graph
         self.max_workers = max_workers
+        self.inner_retry = retry
         order = graph.topo_order()
         self.inputs = tuple(dict.fromkeys(
             k for n in order for k in graph.stages[n].inputs))
@@ -473,6 +772,11 @@ class _SubworkflowStage(Stage):
             k for n in order for k in graph.stages[n].outputs))
 
     def run(self, ctx: StageContext) -> Dict[str, Any]:
+        # extend the prefix we were launched under, so doubly-nested
+        # stages register as 'outer/inner/stage' in provenance, failure
+        # schedules, placements and the resume manifest
+        outer = getattr(ctx._tls, "prefix", "")
         self.graph.execute(ctx, max_workers=self.max_workers,
-                           prefix=self.name + "/")
+                           prefix=outer + self.name + "/",
+                           retry=self.inner_retry)
         return {k: ctx.get(k) for k in self.outputs if k in ctx.outputs}

@@ -98,12 +98,14 @@ class RunRecord:
             return [json.loads(line) for line in f if line.strip()]
 
     def stage_events(self) -> List[Dict[str, Any]]:
-        """The per-stage provenance trail (stage_start / stage_cached /
-        stage_end rows with timing and outputs hash) emitted by
-        StageGraph.execute."""
+        """The per-stage provenance trail emitted by StageGraph.execute:
+        placement (resolved backend binding), stage_start, stage_cached
+        (cache or resume skip), stage_failed / stage_retry (fault
+        tolerance), and stage_end rows with timing and outputs hash."""
         return [e for e in self.events()
-                if e.get("kind") in ("stage_start", "stage_cached",
-                                     "stage_end")]
+                if e.get("kind") in ("placement", "stage_start",
+                                     "stage_cached", "stage_failed",
+                                     "stage_retry", "stage_end")]
 
     def stage_view(self, stage: str) -> "StageRecordView":
         return StageRecordView(self, stage)

@@ -1,4 +1,5 @@
-"""Content-addressed cross-run stage cache.
+"""Content-addressed cross-run stage cache, plus the per-run manifest
+that makes interrupted runs resumable (``repro run --resume``).
 
 Workflow runtime is dominated by redundant recomputation across runs
 (Juve et al., arXiv:1005.2718): a sweep's fan-out re-executes the same
@@ -50,6 +51,25 @@ evicts least-recently-used entries until the payload total fits.  The
 bound is per-insert best-effort (concurrent writers may transiently
 overshoot); ``stats()`` reports the configured bound and session
 eviction count.
+
+Resumable runs
+--------------
+:class:`RunManifest` applies the same content addressing *within* one
+run: as each stage completes, its outputs are pickled under
+``<run_dir>/stages/<name>.pkl`` and an entry ``{input_hash,
+outputs_hash, completed_at}`` is appended to
+``<run_dir>/stage_manifest.json``.  When a crashed run is re-executed
+with ``repro run --resume <run_id>``, the scheduler recomputes each
+stage's input hash; a match restores the recorded outputs (emitting
+``stage_cached`` provenance with ``resume: true``) instead of
+re-running the stage, so only the incomplete suffix of the graph
+executes.  Stages whose outputs cannot be pickled simply re-run.
+
+The manifest trades disk + one pickle per completed stage for
+resumability; StageCache hits record hash-only entries (their payload
+already lives in the cross-run cache), and runs that will never be
+resumed can opt out entirely with ``run_workflow(resume_store=False)``
+/ ``repro run --no-run-manifest``.
 """
 from __future__ import annotations
 
@@ -57,10 +77,29 @@ import json
 import os
 import pickle
 import tempfile
+import threading
 import time
 from typing import Any, Dict, Optional
 
 DEFAULT_CACHE_DIR = ".repro_cache/stages"
+
+
+def _atomic_write(tmp_dir: str, final_path: str, payload: bytes) -> bool:
+    """Write bytes via temp file + rename (concurrent-writer safe).
+    Returns False instead of raising on OS errors — callers treat a
+    failed persist as 'never cached', not a run failure."""
+    fd, tmp = tempfile.mkstemp(dir=tmp_dir, suffix=".tmp")
+    try:
+        with os.fdopen(fd, "wb") as f:
+            f.write(payload)
+        os.replace(tmp, final_path)
+    except OSError:
+        try:
+            os.remove(tmp)
+        except OSError:
+            pass
+        return False
+    return True
 
 
 def default_cache_dir() -> str:
@@ -139,16 +178,7 @@ class StageCache:
         except Exception:
             self.unpicklable += 1
             return False
-        fd, tmp = tempfile.mkstemp(dir=self.root, suffix=".tmp")
-        try:
-            with os.fdopen(fd, "wb") as f:
-                f.write(payload)
-            os.replace(tmp, self._payload_path(key))
-        except OSError:
-            try:
-                os.remove(tmp)
-            except OSError:
-                pass
+        if not _atomic_write(self.root, self._payload_path(key), payload):
             return False
         meta = {
             "stage": stage,
@@ -248,3 +278,121 @@ class StageCache:
                 except OSError:
                     pass
         return n
+
+
+# ===========================================================================
+# Per-run completed-stage manifest (resume support)
+# ===========================================================================
+def _safe_filename(stage: str) -> str:
+    """Stage names may contain nesting separators ('prep/tokenize');
+    map them to a filesystem-safe, collision-free payload name."""
+    import hashlib
+
+    clean = "".join(c if c.isalnum() or c in "._-" else "_" for c in stage)
+    digest = hashlib.sha256(stage.encode()).hexdigest()[:8]
+    return f"{clean}-{digest}"
+
+
+class RunManifest:
+    """Durable record of one run's completed stages, for ``--resume``.
+
+    Lives inside the run's provenance directory:
+
+        <run_dir>/stage_manifest.json   # {stage: {input_hash, outputs_hash,
+                                        #          payload, completed_at, ...}}
+        <run_dir>/stages/<stage>.pkl    # the stage's pickled outputs
+
+    The scheduler calls :meth:`record` after every successful stage and
+    :meth:`lookup`/:meth:`load_outputs` before running one: a stage whose
+    recomputed input hash matches its recorded entry is skipped and its
+    outputs restored, so a crashed run re-executes only the incomplete
+    suffix of the graph.  Writes are atomic (temp file + rename) and
+    lock-guarded — independent stages complete concurrently on the
+    scheduler's thread pool.
+    """
+
+    def __init__(self, run_dir: str):
+        self.run_dir = run_dir
+        self.stages_dir = os.path.join(run_dir, "stages")
+        self.path = os.path.join(run_dir, "stage_manifest.json")
+        os.makedirs(self.stages_dir, exist_ok=True)
+        self._lock = threading.Lock()
+        self._entries: Dict[str, Dict[str, Any]] = {}
+        if os.path.exists(self.path):
+            try:
+                with open(self.path) as f:
+                    self._entries = json.load(f)
+            except (OSError, json.JSONDecodeError):
+                self._entries = {}
+
+    def _payload_path(self, stage: str) -> str:
+        return os.path.join(self.stages_dir, f"{_safe_filename(stage)}.pkl")
+
+    def _flush_locked(self) -> None:
+        fd, tmp = tempfile.mkstemp(dir=self.run_dir, suffix=".tmp")
+        with os.fdopen(fd, "w") as f:
+            json.dump(self._entries, f, indent=1, sort_keys=True)
+        os.replace(tmp, self.path)
+
+    # ------------------------------------------------------------------
+    def record(self, stage: str, input_hash: str, outputs_hash: str,
+               outputs: Dict[str, Any], duration_s: float,
+               store_payload: bool = True) -> bool:
+        """Persist a completed stage.  Returns False (entry still written,
+        marked payload-less) when the outputs cannot be pickled — such
+        stages re-run on resume instead of restoring.  Pass
+        ``store_payload=False`` to record only the hashes: the scheduler
+        does this for StageCache hits, whose payload already lives in the
+        cross-run cache (a resume misses the manifest, falls through to
+        the cache, and hits there — no duplicate pickle)."""
+        payload_ok = store_payload
+        if payload_ok:
+            try:
+                payload = pickle.dumps(outputs)
+            except Exception:
+                payload_ok = False
+        if payload_ok:
+            payload_ok = _atomic_write(self.stages_dir,
+                                       self._payload_path(stage), payload)
+        with self._lock:
+            self._entries[stage] = {
+                "input_hash": input_hash,
+                "outputs_hash": outputs_hash,
+                "outputs": sorted(outputs),
+                "payload": payload_ok,
+                "duration_s": duration_s,
+                "completed_at": time.time(),
+            }
+            try:
+                self._flush_locked()
+            except OSError:
+                return False
+        return payload_ok
+
+    # ------------------------------------------------------------------
+    def lookup(self, stage: str, input_hash: str) -> Optional[Dict[str, Any]]:
+        """The recorded entry for ``stage`` iff its input hash still
+        matches and a restorable payload exists."""
+        with self._lock:
+            entry = self._entries.get(stage)
+        if entry is None or entry.get("input_hash") != input_hash:
+            return None
+        if not entry.get("payload"):
+            return None
+        return dict(entry)
+
+    def load_outputs(self, stage: str,
+                     input_hash: str) -> Optional[Dict[str, Any]]:
+        """The pickled outputs of a completed stage, or None (corrupt or
+        hash-mismatched entries re-run rather than restoring)."""
+        if self.lookup(stage, input_hash) is None:
+            return None
+        try:
+            with open(self._payload_path(stage), "rb") as f:
+                return pickle.load(f)
+        except Exception:
+            return None
+
+    def completed(self) -> Dict[str, Dict[str, Any]]:
+        with self._lock:
+            return {k: dict(v) for k, v in self._entries.items()}

@@ -117,7 +117,9 @@ class PlanStage(Stage):
     while train plans ``production``.  Outputs:
 
       * ``plan_choice``    — the main (train/serve) stage's winner
-      * ``stage_plans``    — {stage_name: PlanChoice | None}
+      * ``stage_plans``    — {stage_name: PlanChoice | None}; the
+                             scheduler binds each listed stage to its
+                             choice (``placement`` provenance events)
       * ``rt_plan``        — runtime sharding Plan for the main workload
       * ``projected_cost`` — $ projection used for the budget gate
 
@@ -129,21 +131,24 @@ class PlanStage(Stage):
     """
 
     outputs = ("plan_choice", "stage_plans", "rt_plan", "projected_cost")
+    cache_params = ("intent", "steps_override")
 
     def __init__(self, name: str = "plan",
                  stage_goals: Optional[Dict[str, str]] = None):
         super().__init__(name)
         self.stage_goals = dict(stage_goals or {})
 
+    def resume_safe(self, ctx: StageContext) -> bool:
+        """Never skip on resume while a budget ledger is attached: the
+        skip would restore the plan without re-running the
+        ``ledger.authorize`` gate, letting a resumed run spend budget it
+        was never granted."""
+        return ctx.ledger is None
+
     def _main_intent(self, ctx: StageContext) -> ResourceIntent:
-        t = ctx.template
         intent = ctx.params.get("intent")
         if intent is None:
-            intent = ResourceIntent(
-                arch=t.arch, shape=t.shape,
-                goal=t.intent_defaults.get("goal", "production"),
-                **{k: v for k, v in t.intent_defaults.items() if k != "goal"},
-            )
+            intent = ctx.template.default_intent()
         return intent
 
     def run(self, ctx: StageContext) -> Dict[str, Any]:
@@ -170,7 +175,14 @@ class PlanStage(Stage):
             "bottleneck": choice.est.bottleneck if choice else None,
         }
         if ctx.record is not None:
-            ctx.record.update_manifest(plan=plan_doc)
+            placements_doc = {
+                name: ({"slice": c.slice.name,
+                        "mesh_shape": list(c.mesh_shape)}
+                       if c is not None else None)
+                for name, c in sorted(stage_plans.items())
+            }
+            ctx.record.update_manifest(plan=plan_doc,
+                                       stage_placements=placements_doc)
             if choice is not None:
                 ctx.record.log_event("plan", {"summary": choice.summary})
             for stage_name, c in sorted(stage_plans.items()):
@@ -237,9 +249,24 @@ class TrainStage(Stage):
     (``donate=False`` or ctx param ``donate=False`` opts out): the state
     is updated in place instead of copied every step, which matters once
     the optimizer state stops fitting twice in HBM.
+
+    Resilience: the stage checkpoints through the run's artifacts dir,
+    so a retried or resumed attempt restores from the newest committed
+    step automatically.  When the scheduler bound the stage to a
+    placement (its resolved backend), the restore is placed directly
+    onto that placement's mesh via
+    :func:`repro.ft.elastic.state_shardings` — the elastic-restart path
+    for a re-plan that landed on a different slice.
     """
 
     inputs = ("cfg", "shape", "stream", "rt_plan")
+    placement_key = "__main__"
+    cache_params = ("steps_override", "donate")
+    # the checkpointer already persists the state in this run dir; a
+    # resume re-enters run() and restores the newest committed step, so
+    # pickling the full {params, opt} pytree into the run manifest would
+    # only duplicate it
+    resume_payload = False
 
     def __init__(self, name: str = "train",
                  overrides: Optional[Dict[str, Any]] = None,
@@ -285,13 +312,43 @@ class TrainStage(Stage):
         record = ctx.record.stage_view(self.name)
         ckpt = Checkpointer(f"{ctx.record.artifacts_dir}/ckpt-{self.name}",
                             keep=2)
+        shardings = self._restore_shardings(ctx, ckpt, model, rt_plan,
+                                            init_fn)
         env = ExecutionEnvelope(
             record, checkpointer=ckpt, checkpoint_every=t.checkpoint_every,
             failures=ctx.params.get("failures"),
         )
         state = env.run(init_state=init_fn, step_fn=step_fn,
-                        num_steps=num_steps)
+                        num_steps=num_steps, state_shardings=shardings)
         return {self.state_key: state}
+
+    def _restore_shardings(self, ctx, ckpt, model, rt_plan, init_fn):
+        """When a committed checkpoint exists (stage retry or run
+        resume) and the scheduler bound this stage to a placement,
+        restore directly onto that placement's mesh — the elastic
+        reshard path for a re-plan that landed on a different slice."""
+        placement = ctx.current_placement() \
+            if hasattr(ctx, "current_placement") else None
+        if placement is None or ckpt.latest_step() is None:
+            return None
+        import jax
+
+        from repro.ft.elastic import state_shardings
+
+        try:
+            like = jax.eval_shape(init_fn)
+            mesh = placement.build_mesh()
+            shardings = state_shardings(like, model, mesh, rt_plan)
+        except Exception as e:  # placement is advisory — never block restore
+            if ctx.record is not None:
+                ctx.record.log_event("reshard_skipped", {
+                    "stage": self.name, "error": repr(e)})
+            return None
+        if ctx.record is not None:
+            ctx.record.log_event("reshard", {
+                "stage": self.name, "slice": placement.slice_name,
+                "mesh_shape": list(placement.mesh_shape)})
+        return shardings
 
 
 # ===========================================================================
@@ -308,6 +365,8 @@ class ServeStage(Stage):
 
     inputs = ("cfg",)
     outputs = ("final_state", "completions")
+    placement_key = "__main__"
+    cache_params = ("serve_engine", "serve_chunk", "smoke_batch", "smoke_seq")
 
     def __init__(self, name: str = "serve", engine: str = "fused",
                  decode_chunk: int = 1):

@@ -54,11 +54,11 @@ import shutil
 from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 from repro.core.budget import BudgetExceeded, BudgetLedger, PermissionDenied
-from repro.core.graph import StageContext, StageGraph, StageResult
+from repro.core.graph import Placement, StageContext, StageGraph, StageResult
 from repro.core.intent import ResourceIntent
 from repro.core.planner import PlanChoice
 from repro.core.provenance import ProvenanceStore, RunRecord
-from repro.core.stagecache import StageCache
+from repro.core.stagecache import RunManifest, StageCache
 from repro.core.stages import (
     CHECKS,
     DataStage,
@@ -70,7 +70,7 @@ from repro.core.stages import (
     VisualizeStage,
 )
 from repro.data import DataConfig
-from repro.ft.failures import FailureSchedule
+from repro.ft.failures import FailureSchedule, RestartPolicy
 from repro.train import OptimizerConfig
 
 
@@ -100,6 +100,17 @@ class WorkflowTemplate:
     def config_dict(self) -> Dict[str, Any]:
         d = dataclasses.asdict(self)
         return d
+
+    def default_intent(self) -> ResourceIntent:
+        """The ResourceIntent this template implies when the caller does
+        not supply one — the single source for the runner, PlanStage and
+        the placement preview, so they can never diverge."""
+        return ResourceIntent(
+            arch=self.arch, shape=self.shape,
+            goal=self.intent_defaults.get("goal", "production"),
+            **{k: v for k, v in self.intent_defaults.items()
+               if k != "goal"},
+        )
 
     def with_overrides(self, **kw) -> "WorkflowTemplate":
         """Parameter injection: override template fields or optimizer/data
@@ -213,6 +224,42 @@ def compile_template(t: WorkflowTemplate, *, with_eval: bool = False) -> StageGr
     return g
 
 
+def resolve_placements(
+    t: WorkflowTemplate,
+    graph: StageGraph,
+    intent: Optional[ResourceIntent] = None,
+) -> Dict[str, str]:
+    """Static preview of per-stage backend bindings (``graph
+    --placements``): the same resolution the scheduler applies at launch
+    time — a stage's entry in the PlanStage's ``stage_goals``, its own
+    ``intent``, or the main workload's plan for ``placement_key ==
+    "__main__"`` stages.  Returns render strings keyed by stage name;
+    stages with no resolvable backend are omitted (they run locally)."""
+    from repro.core.planner import plan_stages
+
+    intent = intent or t.default_intent()
+    intents: Dict[str, ResourceIntent] = {"__main__": intent}
+    for s in graph.stages.values():
+        if isinstance(s, PlanStage):
+            for stage_name, goal in s.stage_goals.items():
+                intents[stage_name] = intent.with_goal(goal)
+    for s in graph.stages.values():
+        # mirror the scheduler's order: a stage_goals entry wins over the
+        # stage's own intent (which is only the runtime fallback)
+        if s.intent is not None:
+            intents.setdefault(s.name, s.intent)
+    plans = plan_stages(intents)
+    main = plans.pop("__main__", None)
+    out: Dict[str, str] = {}
+    for name, s in graph.stages.items():
+        choice = main if s.placement_key == "__main__" else plans.get(name)
+        if choice is not None:
+            out[name] = Placement.from_choice(name, choice).render()
+        elif isinstance(s, PlanStage):
+            out[name] = "coordinator (local)"
+    return out
+
+
 # ===========================================================================
 # The single-command runner (adviser run analogue) — compat wrapper
 # ===========================================================================
@@ -245,6 +292,9 @@ def run_workflow(
     serve_engine: str = "fused",
     serve_chunk: int = 1,
     donate: bool = True,
+    stage_retry: Optional[RestartPolicy] = None,
+    resume: Optional[str] = None,
+    resume_store: bool = True,
 ) -> WorkflowResult:
     """Execute a workflow end-to-end on the local backend.
 
@@ -266,6 +316,26 @@ def run_workflow(
     run are skipped, restoring their outputs and emitting a
     ``stage_cached`` provenance event (the CLI's ``run --no-cache``
     turns this off).
+
+    ``stage_retry`` is the graph-level restart policy: stages failing
+    with a retryable exception (node loss / preemption, injected as
+    :class:`~repro.ft.failures.InjectedFailure` in drills) re-run up to
+    ``max_restarts`` times with backoff, emitting ``stage_failed`` /
+    ``stage_retry`` provenance events (the CLI's ``--stage-retries``).
+
+    ``resume`` re-executes an earlier (crashed) run *in place*: the run
+    record is loaded instead of created, and every stage whose
+    content-addressed input hash matches the run's
+    :class:`~repro.core.stagecache.RunManifest` is skipped with its
+    outputs restored, so only the incomplete suffix of the graph runs.
+    An interrupted TrainStage additionally restores from its newest
+    committed checkpoint.  ``resume_store=False`` skips writing the
+    per-run manifest entirely (saves the per-stage output pickling on
+    runs that will never be resumed; the CLI's ``--no-run-manifest``).
+    Budget note: a resumed workload stage charges its full projection
+    again — projections are per-attempt authorizations, not metered
+    usage — and the plan stage always re-authorizes on resume while a
+    ledger is attached (see ``PlanStage.resume_safe``).
     """
     t = template
     graph = compile_template(t, with_eval=with_eval)
@@ -274,20 +344,27 @@ def run_workflow(
 
     # resolve the intent up-front so run_id/config_hash cover it (same
     # hashing the monolith did) and PlanStage plans exactly this intent
-    intent = intent or ResourceIntent(
-        arch=t.arch, shape=t.shape,
-        goal=t.intent_defaults.get("goal", "production"),
-        **{k: v for k, v in t.intent_defaults.items() if k != "goal"},
-    )
-    record = store.create_run(
-        template=t.name, template_version=t.version,
-        config={**t.config_dict(), "intent": dataclasses.asdict(intent)},
-        plan={"slice": None, "status": "pending"},
-        workspace=workspace,
-    )
+    intent = intent or t.default_intent()
+    if resume is not None:
+        record = store.load(resume)
+        if record.manifest.get("template") != t.name:
+            raise ValueError(
+                f"run {resume!r} was created from template "
+                f"{record.manifest.get('template')!r}, not {t.name!r}"
+            )
+        record.log_event("resume", {"run_id": resume})
+    else:
+        record = store.create_run(
+            template=t.name, template_version=t.version,
+            config={**t.config_dict(), "intent": dataclasses.asdict(intent)},
+            plan={"slice": None, "status": "pending"},
+            workspace=workspace,
+        )
     ctx = StageContext(
         template=t, record=record, store=store, ledger=ledger,
         user=user, workspace=workspace, cache=cache,
+        resume=(RunManifest(record.dir)
+                if resume_store or resume is not None else None),
         params={
             "intent": intent, "failures": failures,
             "steps_override": steps_override,
@@ -297,19 +374,26 @@ def run_workflow(
         },
     )
     try:
-        stage_results = graph.execute(ctx, max_workers=max_workers)
+        stage_results = graph.execute(ctx, max_workers=max_workers,
+                                      retry=stage_retry)
     except (BudgetExceeded, PermissionDenied):
         # the monolith authorized before creating the run record; keep
-        # denied attempts from leaving phantom runs in the store
-        shutil.rmtree(record.dir, ignore_errors=True)
+        # denied attempts from leaving phantom runs in the store (but
+        # never delete a pre-existing run we were asked to resume)
+        if resume is None:
+            shutil.rmtree(record.dir, ignore_errors=True)
         raise
 
     checks = ctx.get("checks", {})
     ok = all(v[0] for v in checks.values())
     record.log_event("done", {"ok": ok})
     # charge only when the main workload stage actually ran (a --stage
-    # subgraph that stops at plan/data consumed nothing billable)
-    ran_workload = any(s in stage_results for s in ("train", "serve"))
+    # subgraph that stops at plan/data, or a resume that skipped the
+    # whole workload, consumed nothing billable)
+    ran_workload = any(
+        s in stage_results and not stage_results[s].skipped
+        for s in ("train", "serve")
+    )
     if ledger is not None and ran_workload and ctx.get("projected_cost", 0.0):
         ledger.charge(workspace, user, ctx.get("projected_cost"),
                       note=record.run_id)

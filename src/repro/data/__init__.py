@@ -1,3 +1,10 @@
+"""Data pipeline: deterministic synthetic streams per model family
+(token bigram chains, audio frames, vision embeddings).  Every batch is
+a pure function of (config, seed, step) — the property the whole
+resilience story leans on: restarts, elastic reshards and resumed runs
+replay the stream exactly, so recovery is bitwise-reproducible.  Host
+sharding (``host_id``/``num_hosts``) partitions the global batch
+deterministically for multi-host runs."""
 from repro.data.pipeline import DataConfig, SyntheticStream, make_stream
 
 __all__ = ["DataConfig", "SyntheticStream", "make_stream"]

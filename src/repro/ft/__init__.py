@@ -1,4 +1,12 @@
-from repro.ft.elastic import elastic_restart, reshard_state
+"""Fault tolerance: the paper's §6 "durability for long-running jobs",
+implemented.  ``FailureSchedule`` injects deterministic step- and
+stage-level failures for drills; ``RestartPolicy`` bounds retries with
+capped exponential backoff + jitter (consumed by both the execution
+envelope's step restarts and the stage graph's per-stage retry);
+``StragglerWatch`` flags slow steps into provenance; the elastic module
+reshards checkpointed state onto a re-planned mesh so recovery can land
+on different hardware than the run that wrote the checkpoint."""
+from repro.ft.elastic import elastic_restart, reshard_state, state_shardings
 from repro.ft.failures import (
     FailureSchedule,
     InjectedFailure,
@@ -15,4 +23,5 @@ __all__ = [
     "run_with_restarts",
     "elastic_restart",
     "reshard_state",
+    "state_shardings",
 ]

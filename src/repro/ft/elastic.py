@@ -9,6 +9,13 @@ Flow (mirrors what the Execution Engine does after losing/gaining nodes):
      shardings — shapes are unchanged, placement differs;
   4. the data stream continues from the restored step — the pipeline is a
      pure function of (seed, step), so no data is lost or repeated.
+
+``state_shardings`` is the shared mapping: given any train-state-shaped
+pytree (real or ``jax.eval_shape`` abstract), it produces the matching
+sharding pytree for a mesh+plan — used both by :func:`reshard_state`
+(explicit re-placement) and by the stage scheduler's resume path, where
+``TrainStage`` restores its newest committed checkpoint directly onto
+the mesh of whatever backend the re-plan bound it to.
 """
 from __future__ import annotations
 
@@ -23,10 +30,12 @@ from repro.parallel.sharding import Plan, make_param_shardings
 Pytree = Any
 
 
-def reshard_state(state: Pytree, model: Model, mesh: Mesh, plan: Plan,
-                  moment_dtype: str = "float32") -> Pytree:
-    """Re-place an (already host-resident or differently-sharded) train
-    state onto a new mesh according to ``plan``."""
+def state_shardings(state_like: Pytree, model: Model, mesh: Mesh,
+                    plan: Plan) -> Pytree:
+    """The sharding pytree matching a train state's structure: params and
+    optimizer moments follow the model's logical param specs, scalars
+    (step, adam count) replicate.  ``state_like`` only supplies the
+    structure — ``jax.eval_shape`` output works."""
     specs, axes = model.param_specs()
     p_shard = make_param_shardings(mesh, axes, specs, plan)
     from jax.sharding import NamedSharding, PartitionSpec as P
@@ -37,10 +46,17 @@ def reshard_state(state: Pytree, model: Model, mesh: Mesh, plan: Plan,
         "opt": {"m": p_shard, "v": p_shard, "count": rep},
         "step": rep,
     }
-    if "grad_err" in state:
+    if "grad_err" in state_like:
         shardings["grad_err"] = p_shard
+    return shardings
 
-    return jax.tree.map(jax.device_put, state, shardings)
+
+def reshard_state(state: Pytree, model: Model, mesh: Mesh,
+                  plan: Plan) -> Pytree:
+    """Re-place an (already host-resident or differently-sharded) train
+    state onto a new mesh according to ``plan``."""
+    return jax.tree.map(jax.device_put, state,
+                        state_shardings(state, model, mesh, plan))
 
 
 def elastic_restart(checkpointer, like_state: Pytree, model: Model,

@@ -6,40 +6,109 @@ a node failure kills the step; recovery = re-provision (possibly at a
 different scale) + restore newest committed checkpoint + replay the data
 stream from the restored step (exact, because the pipeline is a pure
 function of step).
+
+Two failure granularities are injectable for drills and tests:
+
+  * **step-level** (``FailureSchedule.check(step)``): the train loop dies
+    mid-run and the :class:`~repro.core.envelope.ExecutionEnvelope`
+    restores from the newest committed checkpoint;
+  * **stage-level** (``FailureSchedule.check_stage(name)``): a whole
+    workflow stage dies and the :class:`~repro.core.graph.StageGraph`
+    scheduler retries it under its :class:`RestartPolicy`, emitting
+    ``stage_failed`` / ``stage_retry`` provenance events.
 """
 from __future__ import annotations
 
 import dataclasses
+import random
+import threading
 import time
 from collections import deque
-from typing import Callable, Deque, Dict, List, Optional
+from typing import Callable, Deque, Dict, List, Mapping, Optional, Tuple
 
 
 class InjectedFailure(RuntimeError):
-    """A simulated node/step failure."""
+    """A simulated node/step/stage failure."""
 
 
 @dataclasses.dataclass
 class FailureSchedule:
-    """Deterministic failure injection for tests/drills: fail at given
-    steps (each step fires once)."""
+    """Deterministic failure injection for tests/drills.
+
+    ``fail_at_steps`` kills individual train steps (each step fires
+    once); ``fail_stages`` maps a stage name (as it appears in
+    provenance, i.e. including any nesting prefix) to the number of
+    consecutive attempts that should die before one succeeds — e.g.
+    ``{"train": 2}`` fails the train stage twice, so a policy allowing
+    two retries completes on the third attempt.  Counters are guarded by
+    a lock because independent stages run on a thread pool.
+    """
 
     fail_at_steps: tuple = ()
+    fail_stages: Mapping[str, int] = dataclasses.field(default_factory=dict)
     _fired: set = dataclasses.field(default_factory=set)
+    _stage_fired: Dict[str, int] = dataclasses.field(default_factory=dict)
+
+    def __post_init__(self):
+        self._lock = threading.Lock()
 
     def check(self, step: int) -> None:
         if step in self.fail_at_steps and step not in self._fired:
             self._fired.add(step)
             raise InjectedFailure(f"injected node failure at step {step}")
 
+    def check_stage(self, stage: str) -> None:
+        """Raise InjectedFailure for the first ``fail_stages[stage]``
+        attempts of ``stage``; later attempts pass."""
+        budget = self.fail_stages.get(stage, 0)
+        with self._lock:
+            fired = self._stage_fired.get(stage, 0)
+            if fired >= budget:
+                return
+            self._stage_fired[stage] = fired + 1
+        raise InjectedFailure(
+            f"injected stage failure in {stage!r} (attempt {fired + 1})"
+        )
+
 
 @dataclasses.dataclass
 class RestartPolicy:
+    """How many times to retry, and how long to wait between attempts.
+
+    ``delay(attempt)`` implements capped exponential backoff with jitter:
+    ``backoff_s * 2**attempt``, capped at ``max_backoff_s``, then scaled
+    by a uniform factor in ``[1, 1 + jitter]`` so a fleet of restarting
+    workers doesn't stampede the scheduler in lockstep.  ``backoff_s=0``
+    (the test default) disables waiting entirely.  Pass ``seed`` for a
+    deterministic jitter sequence (drills that assert on timing).
+
+    ``retry_on`` names the exception classes worth retrying — resource
+    failures, not bugs: an assertion error or a shape mismatch will fail
+    identically on every attempt, so only transient classes (default:
+    :class:`InjectedFailure`, standing in for preemption/node loss)
+    trigger a restart.
+    """
+
     max_restarts: int = 5
-    backoff_s: float = 0.0  # 0 in tests; exponential in production
+    backoff_s: float = 0.0  # base delay; 0 disables backoff (tests)
+    max_backoff_s: float = 60.0
+    jitter: float = 0.1
+    seed: Optional[int] = None
+    retry_on: Tuple[type, ...] = (InjectedFailure,)
+
+    def retryable(self, exc: BaseException) -> bool:
+        return isinstance(exc, tuple(self.retry_on))
 
     def delay(self, attempt: int) -> float:
-        return self.backoff_s * (2 ** attempt)
+        """Seconds to wait before retry number ``attempt`` (0-based)."""
+        if self.backoff_s <= 0:
+            return 0.0
+        base = min(self.backoff_s * (2 ** attempt), self.max_backoff_s)
+        if self.jitter <= 0:
+            return base
+        rng = random.Random((self.seed << 16) ^ attempt) \
+            if self.seed is not None else random
+        return base * (1.0 + self.jitter * rng.random())
 
 
 class StragglerWatch:

@@ -38,6 +38,14 @@
     # legacy per-slot baseline, and chunked multi-token decode
     python -m repro.launch.cli run serve-qwen2-1.5b --serve-chunk 8
     python -m repro.launch.cli run serve-qwen2-1.5b --serve-engine legacy
+
+    # resilience: retry stages on (injected) node loss, resume a crashed
+    # run from its run manifest + newest committed checkpoint
+    python -m repro.launch.cli run train-qwen2-1.5b --stage-retries 2
+    python -m repro.launch.cli run train-qwen2-1.5b --resume RUN_ID
+
+    # render each stage's resolved backend (slice + mesh)
+    python -m repro.launch.cli graph train-qwen2-1.5b --placements
 """
 from __future__ import annotations
 
@@ -71,6 +79,7 @@ def cmd_plan(args) -> None:
 
 def cmd_run(args) -> None:
     from repro.core import REGISTRY, ProvenanceStore, StageCache, run_workflow
+    from repro.ft.failures import RestartPolicy
 
     t = REGISTRY.get(args.template, args.version)
     if args.override:
@@ -86,6 +95,10 @@ def cmd_run(args) -> None:
     store = ProvenanceStore(args.runs_dir)
     cache = None if args.no_cache else StageCache(args.cache_dir,
                                                   max_bytes=args.cache_max_bytes)
+    retry = None
+    if args.stage_retries:
+        retry = RestartPolicy(max_restarts=args.stage_retries,
+                              backoff_s=args.stage_backoff)
     res = run_workflow(t, store, user=args.user, workspace=args.workspace,
                        steps_override=args.steps,
                        stages=args.stage or None,
@@ -93,14 +106,19 @@ def cmd_run(args) -> None:
                        cache=cache,
                        serve_engine=args.serve_engine,
                        serve_chunk=args.serve_chunk,
-                       donate=not args.no_donate)
+                       donate=not args.no_donate,
+                       stage_retry=retry,
+                       resume=args.resume,
+                       resume_store=not args.no_run_manifest)
     print(f"run {res.record.run_id}: ok={res.ok}")
     for name, sr in res.stage_results.items():
         status = "ok" if sr.ok else "FAIL"
         if sr.cached:
-            status = "hit"
+            status = "skip" if sr.resumed else "hit"
+        extra = f" x{sr.attempts}" if sr.attempts > 1 else ""
+        where = f"  @ {sr.placement}" if sr.placement else ""
         print(f"  stage {name:16s} {status:4s} "
-              f"{sr.duration_s:7.2f}s")
+              f"{sr.duration_s:7.2f}s{extra}{where}")
     for name, (ok, detail) in res.checks.items():
         print(f"  check {name:20s} {'PASS' if ok else 'FAIL'}  {detail}")
     if res.plan_choice:
@@ -108,13 +126,14 @@ def cmd_run(args) -> None:
 
 
 def cmd_graph(args) -> None:
-    from repro.core import REGISTRY, compile_template
+    from repro.core import REGISTRY, compile_template, resolve_placements
 
     t = REGISTRY.get(args.template, args.version)
     g = compile_template(t, with_eval=args.with_eval)
     if args.stage:
         g = g.subgraph(args.stage)
-    print(g.render())
+    placements = resolve_placements(t, g) if args.placements else None
+    print(g.render(placements=placements))
 
 
 def cmd_catalog(args) -> None:
@@ -164,7 +183,7 @@ def cmd_cache(args) -> None:
     print(json.dumps(stats, indent=1))
 
 
-def main() -> None:
+def build_parser() -> argparse.ArgumentParser:
     ap = argparse.ArgumentParser(prog="repro", description=__doc__,
                                  formatter_class=argparse.RawDescriptionHelpFormatter)
     sub = ap.add_subparsers(dest="cmd", required=True)
@@ -214,6 +233,20 @@ def main() -> None:
                         "(lax.scan chunk; 1 = step-by-step)")
     p.add_argument("--no-donate", action="store_true",
                    help="disable train-state buffer donation")
+    p.add_argument("--stage-retries", type=int, default=0,
+                   help="retry a stage this many times on retryable "
+                        "failures (node loss / preemption)")
+    p.add_argument("--stage-backoff", type=float, default=0.5,
+                   help="base seconds for capped exponential backoff "
+                        "between stage retries")
+    p.add_argument("--resume", default=None, metavar="RUN_ID",
+                   help="resume an interrupted run: skip stages whose "
+                        "recorded input hash still matches, restore the "
+                        "rest from checkpoints")
+    p.add_argument("--no-run-manifest", action="store_true",
+                   help="skip writing the per-run stage manifest (the "
+                        "run cannot be resumed, but saves per-stage "
+                        "output pickling)")
     p.set_defaults(fn=cmd_run)
 
     p = sub.add_parser("graph", help="render a template's stage DAG")
@@ -223,6 +256,9 @@ def main() -> None:
                    help="include the held-out EvalStage in the graph")
     p.add_argument("--stage", action="append", default=[],
                    help="restrict to this stage (+ ancestors); repeatable")
+    p.add_argument("--placements", action="store_true",
+                   help="also resolve and render each stage's backend "
+                        "(slice + mesh) via the planner")
     p.set_defaults(fn=cmd_graph)
 
     p = sub.add_parser("catalog", help="list slice types")
@@ -247,8 +283,11 @@ def main() -> None:
                    help="stage-cache root (default $REPRO_CACHE_DIR "
                         "or .repro_cache/stages)")
     p.set_defaults(fn=cmd_cache)
+    return ap
 
-    args = ap.parse_args()
+
+def main() -> None:
+    args = build_parser().parse_args()
     args.fn(args)
 
 

@@ -1,3 +1,12 @@
+"""Multi-pod dry-run (assignment deliverable e).
+
+For every live (architecture × input-shape) cell, lower + compile the
+step on the single-pod 16×16 mesh AND the 2×16×16 multi-pod mesh, print
+``memory_analysis()`` / ``cost_analysis()`` and record collective traffic
+parsed from the partitioned HLO.  Results accumulate in a JSON artifact
+(default ``dryrun_results.json``) consumed by the roofline benchmark and
+EXPERIMENTS.md.
+"""
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
 
@@ -15,16 +24,6 @@ import jax  # noqa: E402
 from repro.configs import ARCHS, SHAPES, all_cells  # noqa: E402
 from repro.launch.cells import analyze_compiled, build_cell, default_plan  # noqa: E402
 from repro.launch.mesh import make_production_mesh  # noqa: E402
-
-"""Multi-pod dry-run (assignment deliverable e).
-
-For every live (architecture × input-shape) cell, lower + compile the
-step on the single-pod 16×16 mesh AND the 2×16×16 multi-pod mesh, print
-``memory_analysis()`` / ``cost_analysis()`` and record collective traffic
-parsed from the partitioned HLO.  Results accumulate in a JSON artifact
-(default ``dryrun_results.json``) consumed by the roofline benchmark and
-EXPERIMENTS.md.
-"""
 
 
 def run_cell(arch: str, shape_name: str, multi_pod: bool,

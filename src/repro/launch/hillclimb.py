@@ -1,6 +1,3 @@
-import os
-os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
-
 """Perf-iteration runner: compile tagged plan variants of one cell and
 print the roofline-term deltas vs the baseline tag.
 
@@ -11,6 +8,8 @@ print the roofline-term deltas vs the baseline tag.
 Results accumulate in the same dryrun_results.json, tagged; the roofline
 benchmark and EXPERIMENTS.md §Perf read them side by side.
 """
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
 
 import argparse  # noqa: E402
 import json  # noqa: E402

@@ -33,3 +33,34 @@ def make_mesh(shape: Tuple[int, ...], axes: Optional[Tuple[str, ...]] = None):
 def local_mesh():
     """Single-device mesh with the production axis names (CPU paths)."""
     return jax.make_mesh((1, 1), ("data", "model"))
+
+
+def _largest_divisor_at_most(n: int, cap: int) -> int:
+    best = 1
+    for c in range(1, min(n, cap) + 1):
+        if n % c == 0:
+            best = c
+    return best
+
+
+def mesh_for_placement(shape: Tuple[int, ...], axes: Tuple[str, ...]):
+    """A planned mesh folded onto the locally visible devices.
+
+    Keeps the plan's axis *names* (so sharding specs resolve unchanged)
+    but clamps each dimension so the product fits ``jax.device_count()``
+    — on a 1-device CPU container every planned mesh degenerates to all
+    1s; on a real slice whose device count matches, the planned shape is
+    used as-is.  Later axes (model/tensor) get first claim on devices so
+    the clamped mesh preserves the plan's innermost parallelism."""
+    n = jax.device_count()
+    want = 1
+    for d in shape:
+        want *= d
+    if want <= n:
+        return jax.make_mesh(tuple(shape), tuple(axes))
+    dims = [1] * len(shape)
+    rem = n
+    for i in range(len(shape) - 1, -1, -1):
+        dims[i] = _largest_divisor_at_most(rem, shape[i])
+        rem //= dims[i]
+    return jax.make_mesh(tuple(dims), tuple(axes))

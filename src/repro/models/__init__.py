@@ -1,3 +1,11 @@
+"""Model zoo behind one mesh-agnostic API.  ``build_model(cfg)``
+dispatches a ``ModelConfig`` to its family (dense attention LM, MoE,
+recurrent/SSM, hybrid, encoder-decoder, vision/audio-conditioned); every
+family exposes the same surface — ``init``, ``loss``, ``prefill``,
+``decode``/``decode_and_sample``, ``param_specs`` (logical sharding
+axes) — so the planner, trainer, server and checkpoint layers never
+branch on architecture.  ``sampling`` holds the fused per-slot
+temperature/PRNG sampling used by the serve engine."""
 from repro.models.api import Model, build_model
 from repro.models.sampling import sample_tokens, slot_keys
 

@@ -1,3 +1,10 @@
+"""Parallelism: the sharding ``Plan`` (data/fsdp axes, remat mode,
+microbatching, compression and kernel-impl knobs) and the derivation of
+concrete ``NamedSharding``s from the models' logical axis specs.  Plans
+are produced by the planner (``to_runtime_plan``) or written by hand;
+because specs are logical, the same model code runs on a laptop's 1×1
+mesh and a multi-pod 2×16×16 mesh unchanged — which is also what makes
+elastic resharding a pure re-placement."""
 from repro.parallel.sharding import (
     Plan,
     batch_specs,

@@ -1,3 +1,12 @@
+"""Serving: a continuous-batching decode engine over the shared model
+API.  ``ServeEngine`` admits queued requests in batches (one jitted
+prefill+sample+insert dispatch for up to ``free_slots`` requests),
+decodes with fused on-device sampling (one ``(B,)`` token transfer per
+step, never ``(B, V)`` logits) and optional chunked multi-token scans,
+and retires completions against per-request budgets; ``engine="legacy"``
+keeps the per-slot baseline for A/B parity.  ``smoke_serve`` is the
+one-call harness the ServeStage and benchmarks drive.  See
+docs/architecture.md for where serving sits in the platform."""
 from repro.serve.engine import Completion, Request, ServeEngine, smoke_serve
 
 __all__ = ["Completion", "Request", "ServeEngine", "smoke_serve"]

@@ -1,3 +1,10 @@
+"""Training: AdamW with warmup+cosine schedule, the sharded train step
+(loss + grad + clip + update as one jittable function built by
+``make_train_step``), and ``jit_train_step`` which compiles it with the
+state buffers optionally donated (in-place update — matters once the
+optimizer state stops fitting twice in HBM).  ``init_train_state``
+builds the ``{params, opt, step}`` pytree the checkpoint and fault-
+tolerance layers treat as the unit of recovery."""
 from repro.train.optimizer import OptimizerConfig, adamw_init, adamw_update, lr_at
 from repro.train.step import TrainArtifacts, init_train_state, jit_train_step, make_train_artifacts, make_train_step
 

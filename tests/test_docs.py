@@ -1,0 +1,85 @@
+"""Docs health: the README/docs relative-link checker (tools/check_docs.py)
+passes on the repo, catches planted breakage, and the documented CLI
+surface actually exists."""
+import os
+import subprocess
+import sys
+
+import pytest
+
+ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+sys.path.insert(0, os.path.join(ROOT, "tools"))
+
+from check_docs import check_file, check_tree, doc_files  # noqa: E402
+
+
+def test_repo_docs_exist():
+    files = doc_files(ROOT)
+    names = {os.path.relpath(f, ROOT) for f in files}
+    assert "README.md" in names
+    assert os.path.join("docs", "architecture.md") in names
+    assert os.path.join("docs", "authoring-stages.md") in names
+
+
+def test_repo_docs_have_no_broken_links():
+    _, errors = check_tree(ROOT)
+    assert errors == []
+
+
+def test_checker_catches_broken_link_and_anchor(tmp_path):
+    docs = tmp_path / "docs"
+    docs.mkdir()
+    (tmp_path / "README.md").write_text(
+        "# Title\n[ok](docs/a.md) [bad](docs/missing.md) "
+        "[bad2](docs/a.md#nope) [ok2](#title)\n")
+    (docs / "a.md").write_text("# Alpha\n")
+    errors = check_file(str(tmp_path / "README.md"), str(tmp_path))
+    assert len(errors) == 2
+    assert any("missing.md" in e for e in errors)
+    assert any("#nope" in e for e in errors)
+
+
+def test_checker_handles_carets_images_and_nested_badges(tmp_path):
+    (tmp_path / "README.md").write_text(
+        "# T\n[2^n scaling](missing.md)\n"
+        "![alt](img-gone.png)\n"
+        "[![badge](shield-gone.svg)](target-gone.md)\n")
+    errors = check_file(str(tmp_path / "README.md"), str(tmp_path))
+    broken = {e.split("broken link ")[1].split(" ")[0] for e in errors}
+    assert broken == {"'missing.md'", "'img-gone.png'",
+                      "'shield-gone.svg'", "'target-gone.md'"}
+
+
+def test_checker_ignores_external_and_code_fences(tmp_path):
+    (tmp_path / "README.md").write_text(
+        "# T\n[x](https://example.com)\n```\n[fake](not/a/file.md)\n```\n")
+    assert check_file(str(tmp_path / "README.md"), str(tmp_path)) == []
+
+
+@pytest.mark.slow
+def test_check_docs_cli_exits_zero():
+    proc = subprocess.run(
+        [sys.executable, os.path.join(ROOT, "tools", "check_docs.py"),
+         "--root", ROOT],
+        capture_output=True, text=True, timeout=60)
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+
+
+def test_documented_cli_flags_parse():
+    """README's CLI tour can't drift: every flag it names must parse."""
+    from repro.launch.cli import build_parser
+
+    ap = build_parser()
+    for argv in (
+        ["run", "t", "--steps", "1", "--stage-retries", "2",
+         "--stage-backoff", "0.1", "--resume", "RUN", "--no-cache",
+         "--serve-chunk", "8", "--with-eval"],
+        ["graph", "t", "--placements", "--stage", "train"],
+        ["plan", "--arch", "glm4-9b", "--shape", "train_4k",
+         "--goal", "production", "--budget", "400"],
+        ["cache", "stats"],
+        ["runs", "--runs-dir", "runs"],
+        ["compare", "A", "B"],
+    ):
+        args = ap.parse_args(argv)
+        assert callable(args.fn)

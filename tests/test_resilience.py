@@ -1,0 +1,447 @@
+"""Resilient stage execution: capped-exponential-backoff restart policy,
+stage-level failure injection, per-stage retry with stage_failed /
+stage_retry provenance, placement binding, and resumable runs
+(`run --resume` skipping the completed prefix and hash-matching an
+uninterrupted run)."""
+import dataclasses
+import json
+import os
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    REGISTRY,
+    FnStage,
+    Placement,
+    ProvenanceStore,
+    RunManifest,
+    StageContext,
+    StageGraph,
+    compile_template,
+    resolve_placements,
+    run_workflow,
+)
+from repro.ft.failures import FailureSchedule, InjectedFailure, RestartPolicy
+
+
+# ===========================================================================
+# RestartPolicy backoff (the documented-but-unimplemented exponential)
+# ===========================================================================
+def test_backoff_grows_exponentially_and_caps():
+    p = RestartPolicy(backoff_s=1.0, max_backoff_s=8.0, jitter=0.0)
+    assert [p.delay(a) for a in range(5)] == [1.0, 2.0, 4.0, 8.0, 8.0]
+
+
+def test_backoff_zero_base_disables_waiting():
+    p = RestartPolicy(backoff_s=0.0, jitter=0.5)
+    assert all(p.delay(a) == 0.0 for a in range(6))
+
+
+def test_backoff_jitter_bounded_and_seeded_deterministic():
+    p = RestartPolicy(backoff_s=1.0, max_backoff_s=64.0, jitter=0.25, seed=7)
+    for a in range(5):
+        base = min(2.0 ** a, 64.0)
+        d = p.delay(a)
+        assert base <= d <= base * 1.25
+        assert d == p.delay(a)  # seeded => reproducible
+    q = RestartPolicy(backoff_s=1.0, max_backoff_s=64.0, jitter=0.25, seed=8)
+    assert any(p.delay(a) != q.delay(a) for a in range(5))
+
+
+def test_retryable_classes():
+    p = RestartPolicy()
+    assert p.retryable(InjectedFailure("x"))
+    assert not p.retryable(ValueError("bug"))
+    p2 = RestartPolicy(retry_on=(InjectedFailure, TimeoutError))
+    assert p2.retryable(TimeoutError())
+
+
+# ===========================================================================
+# Stage-level failure injection
+# ===========================================================================
+def test_failure_schedule_stage_injection_fires_n_times():
+    fs = FailureSchedule(fail_stages={"train": 2})
+    for _ in range(2):
+        with pytest.raises(InjectedFailure):
+            fs.check_stage("train")
+    fs.check_stage("train")  # third attempt passes
+    fs.check_stage("other")  # unlisted stages never fail
+
+
+# ===========================================================================
+# Per-stage retry in the scheduler
+# ===========================================================================
+def _record(tmp_path, name="rt"):
+    store = ProvenanceStore(str(tmp_path / "runs"))
+    return store.create_run(template=name, template_version="0",
+                            config={}, plan={})
+
+
+def test_stage_retry_recovers_with_provenance(tmp_path):
+    rec = _record(tmp_path)
+    g = StageGraph("drill")
+    g.add(FnStage("flaky", lambda ctx: {"x": 1}, outputs=("x",)))
+    ctx = StageContext(record=rec,
+                       params={"failures": FailureSchedule(
+                           fail_stages={"flaky": 2})})
+    results = g.execute(ctx, retry=RestartPolicy(max_restarts=2,
+                                                 backoff_s=0.0))
+    assert results["flaky"].ok and results["flaky"].attempts == 3
+    kinds = [e["kind"] for e in rec.stage_events()
+             if e.get("stage") == "flaky"]
+    # the acceptance sequence: failed -> retry -> ... -> successful end
+    assert kinds == ["stage_start", "stage_failed", "stage_retry",
+                     "stage_failed", "stage_retry", "stage_end"]
+    end = [e for e in rec.stage_events() if e["kind"] == "stage_end"][-1]
+    assert end["ok"] and end["attempts"] == 3
+
+
+def test_stage_retry_budget_exhausted_raises(tmp_path):
+    rec = _record(tmp_path)
+    g = StageGraph("drill")
+    g.add(FnStage("doomed", lambda ctx: {}))
+    ctx = StageContext(record=rec,
+                       params={"failures": FailureSchedule(
+                           fail_stages={"doomed": 5})})
+    with pytest.raises(InjectedFailure):
+        g.execute(ctx, retry=RestartPolicy(max_restarts=1, backoff_s=0.0))
+    ends = [e for e in rec.stage_events() if e["kind"] == "stage_end"]
+    assert not ends[-1]["ok"] and ends[-1]["attempts"] == 2
+
+
+def test_non_retryable_exception_fails_fast(tmp_path):
+    rec = _record(tmp_path)
+    calls = []
+
+    def buggy(ctx):
+        calls.append(1)
+        raise ValueError("a real bug, not a node loss")
+
+    g = StageGraph()
+    g.add(FnStage("bug", buggy))
+    with pytest.raises(ValueError):
+        g.execute(StageContext(record=rec),
+                  retry=RestartPolicy(max_restarts=5, backoff_s=0.0))
+    assert len(calls) == 1  # never retried
+    failed = [e for e in rec.stage_events() if e["kind"] == "stage_failed"]
+    assert failed and failed[0]["retryable"] is False
+
+
+def test_per_stage_policy_overrides_graph_policy():
+    s = FnStage("fragile", lambda ctx: {},
+                retry=RestartPolicy(max_restarts=0))
+    g = StageGraph()
+    g.add(s)
+    ctx = StageContext(params={"failures": FailureSchedule(
+        fail_stages={"fragile": 1})})
+    with pytest.raises(InjectedFailure):
+        g.execute(ctx, retry=RestartPolicy(max_restarts=3, backoff_s=0.0))
+
+
+# ===========================================================================
+# Placement binding
+# ===========================================================================
+def test_workflow_binds_train_placement(tmp_path):
+    store = ProvenanceStore(str(tmp_path / "runs"))
+    t = REGISTRY.get("train-xlstm-125m")
+    res = run_workflow(t, store, steps_override=6)
+    placements = [e for e in res.record.stage_events()
+                  if e["kind"] == "placement"]
+    by_stage = {e["stage"]: e for e in placements}
+    assert "train" in by_stage
+    assert by_stage["train"]["slice"]
+    assert by_stage["train"]["mesh_shape"]
+    assert res.stage_results["train"].placement  # render string on result
+
+
+def test_resolve_placements_small_data_big_train():
+    t = REGISTRY.get("train-qwen2-1.5b")
+    g = compile_template(t)
+    p = resolve_placements(t, g)
+    assert "data" in p and "train" in p and p["plan"] == "coordinator (local)"
+    rendered = g.render(placements=p)
+    assert "@" in rendered and p["train"].split()[0] in rendered
+
+
+def test_placement_mesh_folds_onto_local_devices():
+    choice_like = Placement(stage="train", slice_name="v5e-256",
+                            mesh_shape=(16, 16), mesh_axes=("data", "model"),
+                            chips=256, price_per_hour=1.0)
+    mesh = choice_like.build_mesh()
+    assert tuple(mesh.axis_names) == ("data", "model")
+    assert int(np.prod(mesh.devices.shape)) <= 256
+
+
+# ===========================================================================
+# RunManifest (the resume store)
+# ===========================================================================
+def test_run_manifest_roundtrip_and_mismatch(tmp_path):
+    m = RunManifest(str(tmp_path))
+    assert m.record("data", "h1", "oh1", {"x": 41}, 0.1)
+    assert m.lookup("data", "h1")["outputs_hash"] == "oh1"
+    assert m.load_outputs("data", "h1") == {"x": 41}
+    assert m.lookup("data", "other-hash") is None  # inputs changed: re-run
+    # survives a process restart (fresh instance reads the json back)
+    m2 = RunManifest(str(tmp_path))
+    assert m2.load_outputs("data", "h1") == {"x": 41}
+
+
+def test_run_manifest_unpicklable_outputs_rerun(tmp_path):
+    m = RunManifest(str(tmp_path))
+    assert not m.record("gen", "h1", "oh", {"fn": lambda: 1}, 0.0)
+    assert m.lookup("gen", "h1") is None  # payload-less entries never skip
+
+
+def test_run_manifest_nested_stage_names(tmp_path):
+    m = RunManifest(str(tmp_path))
+    assert m.record("prep/tokenize", "h", "oh", {"y": 2}, 0.0)
+    assert m.load_outputs("prep/tokenize", "h") == {"y": 2}
+    assert os.listdir(os.path.join(str(tmp_path), "stages"))
+
+
+def test_resume_skip_respects_changed_template(tmp_path):
+    @dataclasses.dataclass
+    class Tpl:
+        knob: int
+
+    runs = 0
+
+    def produce(ctx):
+        nonlocal runs
+        runs += 1
+        return {"x": ctx.template.knob}
+
+    def build():
+        g = StageGraph("g")
+        g.add(FnStage("make", produce, outputs=("x",)))
+        return g
+
+    manifest = RunManifest(str(tmp_path))
+    build().execute(StageContext(template=Tpl(1), resume=manifest))
+    assert runs == 1
+    # identical template: skipped via the manifest
+    ctx = StageContext(template=Tpl(1), resume=manifest)
+    res = build().execute(ctx)
+    assert runs == 1 and res["make"].resumed and ctx.get("x") == 1
+    # changed template field: hash differs, stage re-runs
+    build().execute(StageContext(template=Tpl(2), resume=manifest))
+    assert runs == 2
+
+
+def test_current_placement_isolated_across_nested_same_names():
+    """Nested subgraphs reusing a stage name each see their *own*
+    placement from the stage body: bindings are published under the
+    prefixed provenance name and delivered thread-locally, so two
+    'work' stages planned onto different slices never clobber."""
+    from repro.core import ResourceIntent
+
+    seen = {}
+
+    class Probe(FnStage):
+        def __init__(self, tag, intent):
+            super().__init__("work", lambda ctx: {})
+            self.tag = tag
+            self.intent = intent
+
+        def run(self, ctx):
+            seen[self.tag] = ctx.current_placement()
+            return {}
+
+    big = ResourceIntent(arch="xlstm-125m", shape="train_4k",
+                         goal="production")
+    small = big.with_goal("quick_test")
+    outer = StageGraph("outer")
+    for tag, intent in (("a", big), ("b", small)):
+        inner = StageGraph(tag)
+        inner.add(Probe(tag, intent))
+        outer.add(inner.as_stage(tag))
+    ctx = StageContext()
+    outer.execute(ctx, max_workers=2)
+    assert seen["a"] is not None and seen["b"] is not None
+    assert seen["a"].slice_name != seen["b"].slice_name
+    # bindings are observable under the prefixed names, no clobbering
+    assert ctx.placement("a/work").slice_name == seen["a"].slice_name
+    assert ctx.placement("b/work").slice_name == seen["b"].slice_name
+    assert ctx.placement("work") is None
+
+
+def test_doubly_nested_prefixes_compose(tmp_path):
+    """Stage names in provenance (and therefore failure injection,
+    placements and the resume manifest) carry the full nesting path:
+    X nests Y nests Z -> 'Y/Z/leaf', not 'Z/leaf'."""
+    rec = _record(tmp_path)
+    z = StageGraph("zg")
+    z.add(FnStage("leaf", lambda ctx: {"v": 1}, outputs=("v",)))
+    y = StageGraph("yg")
+    y.add(z.as_stage("Z", retry=RestartPolicy(max_restarts=1,
+                                              backoff_s=0.0)))
+    x = StageGraph("xg")
+    x.add(y.as_stage("Y"))
+    ctx = StageContext(record=rec,
+                       params={"failures": FailureSchedule(
+                           fail_stages={"Y/Z/leaf": 1})})
+    x.execute(ctx)
+    stages = {e["stage"] for e in rec.stage_events()}
+    assert "Y/Z/leaf" in stages and "Z/leaf" not in stages
+    retried = [e for e in rec.stage_events() if e["kind"] == "stage_retry"]
+    assert retried and retried[0]["stage"] == "Y/Z/leaf"  # drill fired
+
+
+def test_train_manifest_entry_is_hash_only(tmp_path):
+    """TrainStage records hash-only (its state is already committed by
+    the checkpointer); a resume of a completed run re-runs the stage as
+    a pure checkpoint restore and still ends hash-identical."""
+    import jax
+
+    store = ProvenanceStore(str(tmp_path / "runs"))
+    t = REGISTRY.get("train-xlstm-125m")
+    first = run_workflow(t, store, steps_override=6)
+    manifest = json.load(open(os.path.join(first.record.dir,
+                                           "stage_manifest.json")))
+    assert manifest["train"]["payload"] is False
+    assert manifest["data"]["payload"] is True
+    ref = [np.asarray(x, np.float32)
+           for x in jax.tree.leaves(first.final_state["params"])]
+
+    res = run_workflow(t, store, steps_override=6,
+                       resume=first.record.run_id)
+    assert res.ok
+    assert res.stage_results["plan"].resumed
+    assert res.stage_results["data"].resumed
+    assert not res.stage_results["train"].resumed  # restored, not skipped
+    assert any(e["kind"] == "restore" for e in res.record.events())
+    for a, b in zip(jax.tree.leaves(res.final_state["params"]), ref):
+        np.testing.assert_array_equal(np.asarray(a, np.float32), b)
+
+
+def test_resume_cannot_bypass_budget_gate(tmp_path):
+    """A resumed run must re-run PlanStage's authorization when a ledger
+    is attached — resume-skipping it would overdraft the workspace."""
+    from repro.core import BudgetExceeded, BudgetLedger
+
+    store = ProvenanceStore(str(tmp_path / "runs"))
+    ledger = BudgetLedger(str(tmp_path / "ledger.json"))
+    ledger.create_workspace("lab", admins=["pi"], budget_usd=1e9)
+    t = REGISTRY.get("train-xlstm-125m")
+    with pytest.raises(InjectedFailure):
+        run_workflow(t, store, user="pi", workspace="lab", ledger=ledger,
+                     steps_override=8,
+                     failures=FailureSchedule(fail_stages={"train": 1}))
+    crashed = store.list_runs()[-1]
+    # the budget shrinks before the resume attempt
+    ledger.get("lab").budget_usd = 1e-9
+    with pytest.raises(BudgetExceeded):
+        run_workflow(t, store, user="pi", workspace="lab", ledger=ledger,
+                     steps_override=8, resume=crashed)
+    assert ledger.get("lab").spent_usd == 0.0
+
+
+def test_no_run_manifest_opt_out(tmp_path):
+    store = ProvenanceStore(str(tmp_path / "runs"))
+    t = REGISTRY.get("train-xlstm-125m")
+    res = run_workflow(t, store, steps_override=6, resume_store=False)
+    assert res.ok
+    assert not os.path.exists(os.path.join(res.record.dir,
+                                           "stage_manifest.json"))
+
+
+# ===========================================================================
+# End-to-end: interrupted workflow, resumed, hash-matching a clean run
+# ===========================================================================
+def test_resume_reexecutes_only_incomplete_suffix(tmp_path):
+    store = ProvenanceStore(str(tmp_path / "runs"))
+    t = REGISTRY.get("train-xlstm-125m")
+
+    # kill the run at the train stage (no retries -> the graph dies)
+    with pytest.raises(InjectedFailure):
+        run_workflow(t, store, steps_override=8,
+                     failures=FailureSchedule(fail_stages={"train": 1}))
+    crashed = store.list_runs()[-1]
+    manifest = json.load(
+        open(os.path.join(str(tmp_path / "runs"), crashed,
+                          "stage_manifest.json")))
+    assert {"plan", "data"} <= set(manifest) and "train" not in manifest
+
+    res = run_workflow(t, store, steps_override=8, resume=crashed)
+    assert res.ok
+    assert res.record.run_id == crashed  # resumed in place, no new run
+    sr = res.stage_results
+    assert sr["plan"].resumed and sr["data"].resumed
+    assert not sr["train"].resumed and not sr["validate"].resumed
+    cached_events = [e for e in res.record.stage_events()
+                     if e["kind"] == "stage_cached" and e.get("resume")]
+    assert {e["stage"] for e in cached_events} == {"plan", "data"}
+
+    # reference: an uninterrupted run of the same template
+    clean = run_workflow(t, store, steps_override=8)
+    h_resumed = {e["stage"]: e["outputs_hash"]
+                 for e in res.record.stage_events()
+                 if e["kind"] == "stage_end" and e.get("outputs_hash")}
+    h_clean = {e["stage"]: e["outputs_hash"]
+               for e in clean.record.stage_events()
+               if e["kind"] == "stage_end" and e.get("outputs_hash")}
+    for stage in ("plan", "data", "train"):
+        assert h_resumed[stage] == h_clean[stage]
+    # bitwise-identical final parameters, same check verdicts
+    import jax
+
+    for a, b in zip(jax.tree.leaves(res.final_state["params"]),
+                    jax.tree.leaves(clean.final_state["params"])):
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+    assert {k: v[0] for k, v in res.checks.items()} == \
+           {k: v[0] for k, v in clean.checks.items()}
+
+
+@pytest.mark.slow
+def test_resume_mid_train_restores_checkpoint(tmp_path):
+    """Kill training after a committed checkpoint (envelope restarts
+    exhausted), resume, and verify the restore + exact final params."""
+    store = ProvenanceStore(str(tmp_path / "runs"))
+    t = REGISTRY.get("train-xlstm-125m").with_overrides(checkpoint_every=4)
+    steps = 12
+    # six distinct failing steps exhaust the envelope's 5 restarts, but
+    # the checkpoint at step 7 commits before the run dies
+    with pytest.raises(InjectedFailure):
+        run_workflow(t, store, steps_override=steps,
+                     failures=FailureSchedule(
+                         fail_at_steps=(5, 6, 7, 8, 9, 10)))
+    crashed = store.list_runs()[-1]
+    ckpt_dir = os.path.join(str(tmp_path / "runs"), crashed,
+                            "artifacts", "ckpt-train")
+    assert os.path.isdir(ckpt_dir) and os.listdir(ckpt_dir)
+
+    res = run_workflow(t, store, steps_override=steps, resume=crashed)
+    assert res.ok
+    events = res.record.events()
+    assert any(e["kind"] == "resume" for e in events)
+    assert any(e["kind"] == "restore" for e in events)
+    assert any(e["kind"] == "reshard" for e in events)  # placement-aware
+
+    clean = run_workflow(t, store, steps_override=steps)
+    import jax
+
+    for a, b in zip(jax.tree.leaves(res.final_state["params"]),
+                    jax.tree.leaves(clean.final_state["params"])):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32), atol=1e-6)
+
+
+def test_workflow_stage_retry_end_to_end(tmp_path):
+    """The acceptance drill: an injected stage failure completes via
+    retry with the stage_failed -> stage_retry -> stage_end sequence."""
+    store = ProvenanceStore(str(tmp_path / "runs"))
+    t = REGISTRY.get("train-xlstm-125m")
+    res = run_workflow(t, store, steps_override=6,
+                       failures=FailureSchedule(fail_stages={"data": 1}),
+                       stage_retry=RestartPolicy(max_restarts=2,
+                                                 backoff_s=0.0))
+    assert res.ok
+    assert res.stage_results["data"].attempts == 2
+    kinds = [e["kind"] for e in res.record.stage_events()
+             if e.get("stage") == "data"]
+    i_fail = kinds.index("stage_failed")
+    i_retry = kinds.index("stage_retry")
+    i_end = kinds.index("stage_end")
+    assert i_fail < i_retry < i_end

@@ -1,0 +1,112 @@
+"""Docs link checker: fail on broken relative links/anchors in
+README.md and docs/*.md, so documentation can't rot silently.
+
+    python tools/check_docs.py            # check the repo's docs
+    python tools/check_docs.py --root X   # check another tree
+
+Checks every markdown inline link ``[text](target)``:
+  * external targets (http/https/mailto) are skipped (no network in CI);
+  * pure-anchor targets (``#section``) must match a heading in the file;
+  * relative targets must resolve to an existing file or directory
+    (anchors on relative targets are validated against that file's
+    headings when it is markdown).
+
+Used by CI (see .github/workflows/ci.yml) and wrapped as a tier-1 test
+in tests/test_docs.py.
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import os
+import re
+import sys
+from typing import List, Tuple
+
+# image links are extracted first and replaced by a placeholder so the
+# outer half of a nested [![badge](img)](target) still matches _LINK_RE
+_IMG_RE = re.compile(r"!\[[^\]]*\]\(([^)\s]+)(?:\s+\"[^\"]*\")?\)")
+_LINK_RE = re.compile(r"\[[^\]\[]*\]\(([^)\s]+)(?:\s+\"[^\"]*\")?\)")
+_HEADING_RE = re.compile(r"^#{1,6}\s+(.*)$", re.MULTILINE)
+_CODE_FENCE_RE = re.compile(r"```.*?```", re.DOTALL)
+
+
+def _anchor_of(heading: str) -> str:
+    """GitHub's heading -> anchor slug (enough of it for our docs)."""
+    slug = heading.strip().lower()
+    slug = re.sub(r"[`*_~]", "", slug)
+    slug = re.sub(r"[^\w\- ]", "", slug)
+    return slug.replace(" ", "-")
+
+
+def _headings(md_path: str) -> List[str]:
+    with open(md_path, encoding="utf-8") as f:
+        text = _CODE_FENCE_RE.sub("", f.read())
+    return [_anchor_of(h) for h in _HEADING_RE.findall(text)]
+
+
+def doc_files(root: str) -> List[str]:
+    files = []
+    readme = os.path.join(root, "README.md")
+    if os.path.exists(readme):
+        files.append(readme)
+    files.extend(sorted(glob.glob(os.path.join(root, "docs", "*.md"))))
+    return files
+
+
+def check_file(path: str, root: str) -> List[str]:
+    """Broken-link descriptions for one markdown file (empty = clean)."""
+    errors: List[str] = []
+    rel = os.path.relpath(path, root)
+    with open(path, encoding="utf-8") as f:
+        text = _CODE_FENCE_RE.sub("", f.read())
+    targets = [m.group(1) for m in _IMG_RE.finditer(text)]
+    text = _IMG_RE.sub("IMG", text)
+    targets += [m.group(1) for m in _LINK_RE.finditer(text)]
+    for target in targets:
+        if target.startswith(("http://", "https://", "mailto:")):
+            continue
+        if target.startswith("#"):
+            if _anchor_of(target[1:]) not in _headings(path):
+                errors.append(f"{rel}: broken anchor {target!r}")
+            continue
+        file_part, _, anchor = target.partition("#")
+        dest = os.path.normpath(
+            os.path.join(os.path.dirname(path), file_part))
+        if not os.path.exists(dest):
+            errors.append(f"{rel}: broken link {target!r} "
+                          f"(no such file {os.path.relpath(dest, root)!r})")
+            continue
+        if anchor and dest.endswith(".md"):
+            if _anchor_of(anchor) not in _headings(dest):
+                errors.append(f"{rel}: broken anchor {target!r}")
+    return errors
+
+
+def check_tree(root: str) -> Tuple[List[str], List[str]]:
+    """(checked files, errors) for README.md + docs/*.md under root."""
+    files = doc_files(root)
+    errors: List[str] = []
+    for path in files:
+        errors.extend(check_file(path, root))
+    return files, errors
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--root", default=os.path.join(
+        os.path.dirname(os.path.abspath(__file__)), ".."))
+    args = ap.parse_args()
+    root = os.path.abspath(args.root)
+    files, errors = check_tree(root)
+    if not files:
+        print(f"no docs found under {root}", file=sys.stderr)
+        return 2
+    for e in errors:
+        print(f"BROKEN  {e}", file=sys.stderr)
+    print(f"checked {len(files)} files, {len(errors)} broken links")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
