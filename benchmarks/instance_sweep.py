@@ -4,19 +4,17 @@ The Icepack synthetic-ice-shelf experiment held the workload fixed (4-rank
 MPI, dx=1000m) and swept EC2 instance types/generations, reporting
 time-to-solution (4a) and cost-per-solution (4b).  Here the fixed workload
 is one training step of glm4-9b/train_4k at 64 chips, swept across chip
-generations (v4 → v5e → v5p; the m6a → m7a → m8a analogue); the planner's
-roofline model provides step time and $ — with the measured quantity being
-the planner itself (its latency is what an interactive Adviser user
-experiences).
+generations (v4 → v5e → v5p; the m6a → m7a → m8a analogue) — and the
+sweep itself goes through :mod:`repro.core.explore`, the same engine the
+``explore`` CLI and ``examples/cost_explorer.py`` use, so bench, example
+and CLI exercise one code path.  The latency column is explore µs per
+planner query (sweep wall time / queries issued) — what an interactive
+Adviser user experiences per answered question.
 """
 from __future__ import annotations
 
 import time
 from typing import List
-
-from repro.configs import get_config, get_shape
-from repro.core.catalog import CATALOG
-from repro.core.costmodel import PlanGeometry, estimate
 
 ARCH = "glm4-9b"
 SHAPE = "train_4k"
@@ -24,43 +22,49 @@ CHIPS = 64
 
 
 def rows() -> List[dict]:
-    cfg = get_config(ARCH)
-    shape = get_shape(SHAPE)
+    from repro.core.explore import ExploreSpec, explore
+
+    spec = ExploreSpec(archs=(ARCH,), shapes=(SHAPE,),
+                       goals=("exploration",), chip_counts=(CHIPS,),
+                       allow_multi_pod=False)
+    t0 = time.perf_counter()
+    result = explore(spec)
+    dt = (time.perf_counter() - t0) * 1e6
+    n_queries = len(result.cells) + sum(len(f.rows) for f in result.scaling)
     out = []
-    for sl in CATALOG:
-        if sl.multi_pod or sl.total_chips != CHIPS:
-            continue
-        geom = PlanGeometry(data=CHIPS // 4, model=4, remat="full")
-        t0 = time.perf_counter()
-        est = estimate(cfg, shape, sl, geom)
-        dt = (time.perf_counter() - t0) * 1e6
-        out.append({
-            "slice": sl.name,
-            "generation": sl.chip.name,
-            "est_step_ms": est.step_s * 1e3,
-            "cost_per_step_usd": est.cost_per_step,
-            "bottleneck": est.bottleneck,
-            "hbm_frac": est.hbm_frac,
-            "planner_us_per_call": dt,
-            "feasible": est.feasible,
-        })
+    for fam in result.scaling:
+        for r in fam.rows:
+            if r.chips != CHIPS:
+                continue
+            out.append({
+                "slice": r.slice_name,
+                "generation": fam.generation,
+                "est_step_ms": r.step_s * 1e3,
+                "cost_per_mtok": r.cost_per_mtok,
+                "bottleneck": r.bottleneck,
+                "us_per_query": dt / max(n_queries, 1),
+            })
     return out
 
 
 def main(csv: bool = True) -> None:
     rs = rows()
-    best_time = min(r["est_step_ms"] for r in rs if r["feasible"])
-    best_cost = min(r["cost_per_step_usd"] for r in rs if r["feasible"])
+    best_time = min(r["est_step_ms"] for r in rs)
+    best_cost = min(r["cost_per_mtok"] for r in rs)
     for r in rs:
         derived = (
             f"step={r['est_step_ms']:.1f}ms"
-            f";cost=${r['cost_per_step_usd']:.5f}"
+            f";$/Mtok={r['cost_per_mtok']:.4f}"
             f";bottleneck={r['bottleneck']}"
             f";speed_vs_best={best_time / r['est_step_ms']:.2f}"
-            f";cost_vs_best={r['cost_per_step_usd'] / best_cost:.2f}"
+            f";cost_vs_best={r['cost_per_mtok'] / best_cost:.2f}"
         )
-        print(f"instance_sweep/{r['slice']},{r['planner_us_per_call']:.1f},{derived}")
+        print(f"instance_sweep/{r['slice']},{r['us_per_query']:.1f},{derived}")
 
 
 if __name__ == "__main__":
+    import os
+    import sys
+
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
     main()

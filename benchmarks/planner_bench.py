@@ -80,6 +80,44 @@ def bench_planner() -> dict:
     }
 
 
+def bench_explore() -> dict:
+    """Full explore-grid wall time: cold (every cell is a planner query)
+    vs cell-cached (every cell restored from a StageCache) — the
+    interactive-latency budget of the Fig.-4 user journey."""
+    from repro.core import StageCache
+    from repro.core.explore import ExploreSpec, explore
+    from repro.core.planner import clear_planner_cache
+
+    spec = ExploreSpec(archs=("glm4-9b", "qwen2-1.5b"),
+                       shapes=("train_4k",),
+                       goals=("production", "exploration", "quick_test"),
+                       chip_counts=(8, 16, 32, 64),
+                       preempt_rate_per_chip_hour=0.01)
+    n_cells = len(spec.cell_specs())
+
+    clear_planner_cache()
+    t0 = time.perf_counter()
+    cold = explore(spec)
+    cold_s = time.perf_counter() - t0
+
+    with tempfile.TemporaryDirectory() as tmp:
+        cache = StageCache(tmp)
+        explore(spec, cache=cache)  # populate
+        clear_planner_cache()
+        t0 = time.perf_counter()
+        warm = explore(spec, cache=cache)
+        warm_s = time.perf_counter() - t0
+    assert warm.cells_from_cache == n_cells, "explore cell cache did not hit"
+    return {
+        "grid_cells": n_cells,
+        "frontier_size": len(cold.frontier),
+        "cold_s": cold_s,
+        "cell_cached_s": warm_s,
+        "us_per_cell_cold": cold_s * 1e6 / n_cells,
+        "speedup_cached": cold_s / max(warm_s, 1e-9),
+    }
+
+
 def bench_stage_cache() -> dict:
     from repro.core import REGISTRY, DataStage, StageCache, StageContext, StageGraph
 
@@ -106,8 +144,9 @@ def bench_stage_cache() -> dict:
 def main() -> None:
     planner = bench_planner()
     cache = bench_stage_cache()
+    explore_grid = bench_explore()
     doc = {"generated_at": time.time(), "planner": planner,
-           "stage_cache": cache}
+           "stage_cache": cache, "explore": explore_grid}
     with open(OUT_PATH, "w") as f:
         json.dump(doc, f, indent=1)
 
@@ -123,6 +162,12 @@ def main() -> None:
     print(f"stagecache/data_miss,{cache['data_stage_miss_s']*1e6:.1f},"
           f"hit_us={cache['data_stage_hit_s']*1e6:.1f}"
           f";speedup={cache['speedup']:.1f}x")
+    e = explore_grid
+    print(f"explore/grid_cold,{e['us_per_cell_cold']:.1f},"
+          f"cells={e['grid_cells']};frontier={e['frontier_size']}"
+          f";total_s={e['cold_s']:.3f}")
+    print(f"explore/grid_cached,{e['cell_cached_s']*1e6/e['grid_cells']:.1f},"
+          f"speedup={e['speedup_cached']:.1f}x")
 
     if not p["rank_parity"]:
         raise RuntimeError("vectorized ranking diverged from scalar oracle")

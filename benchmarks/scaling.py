@@ -3,85 +3,79 @@
 PISM's Greenland spin-up was run at fixed problem size from np=8..96,
 either on one big node (scale-up) or a cluster of small ones (scale-out),
 and parallel efficiency collapsed once inter-node latency dominated.  The
-TPU translation: fixed workload (internlm2-20b train_4k), chips 8..512,
-either growing one pod (scale-up: ICI all the way) or ganging 64-chip
-pods (scale-out: cross-pod DCI in the gradient path).  Efficiency =
-T(8)·8 / (T(n)·n) from the roofline model — the same quantity as the
-paper's table.
+TPU translation: fixed workload (qwen2-1.5b train_4k) on v5e, swept
+through :mod:`repro.core.explore` (the same engine as the CLI and the
+cost-explorer example) in two regimes:
+
+  * **scale-up** — single-pod slices only (``allow_multi_pod=False``),
+    ICI all the way, capped at the 256-chip pod;
+  * **scale-out** — the multi-pod assemblies (512/1024/2048 = 2/4/8
+    ganged 256-chip pods), cross-pod DCI in the gradient path.
+
+Efficiency is T(n0)·n0 / (T(n)·n) against the *shared* scale-up
+baseline, so the two curves are directly comparable: they tell you
+exactly where leaving the pod (DCI hops in the collective term) starts
+to eat the added chips — the paper's efficiency-collapse phenomenon.
 """
 from __future__ import annotations
 
-import dataclasses
 import time
 from typing import List
 
-from repro.configs import get_config, get_shape
-from repro.core.catalog import CHIPS as CHIP_SPECS, SliceType
-from repro.core.costmodel import PlanGeometry, estimate
-
 ARCH = "qwen2-1.5b"
 SHAPE = "train_4k"
-STEPS = (8, 16, 32, 64, 128, 256, 512, 1024, 2048)
-POD = 64  # scale-out building block
-
-
-def _geom(chips: int, pods: int) -> PlanGeometry:
-    per_pod = chips // pods
-    model = min(16, per_pod)
-    data = per_pod // model
-    return PlanGeometry(data=data, model=model, pods=pods, remat="full")
+UP_CHIPS = (8, 16, 32, 64, 128, 256)
+OUT_CHIPS = (512, 1024, 2048)
 
 
 def rows() -> List[dict]:
-    cfg = get_config(ARCH)
-    shape = get_shape(SHAPE)
-    chip = CHIP_SPECS["v5e"]
+    from repro.core.explore import ExploreSpec, explore
+
     out = []
-    for n in STEPS:
-        for strategy in ("scale-up", "scale-out"):
-            if strategy == "scale-up":
-                if n > chip.max_pod_chips:
-                    continue
-                sl = SliceType(f"v5e-{n}", chip, n, 1)
-                geom = _geom(n, 1)
-            else:
-                pods = max(1, n // POD)
-                if n % POD and n > POD:
-                    continue
-                if n <= POD:
-                    sl = SliceType(f"v5e-{n}", chip, n, 1)
-                    geom = _geom(n, 1)
-                else:
-                    sl = SliceType(f"{pods}x-v5e-{POD}", chip, POD, pods)
-                    geom = _geom(n, pods)
-            t0 = time.perf_counter()
-            est = estimate(cfg, shape, sl, geom)
-            dt = (time.perf_counter() - t0) * 1e6
-            out.append({
-                "strategy": strategy,
-                "chips": n,
-                "pods": geom.pods,
-                "step_s": est.step_s,
-                "bottleneck": est.bottleneck,
-                "us": dt,
-            })
+    base_work = None
+    for strategy, chips, multi_pod in (("scale-up", UP_CHIPS, False),
+                                       ("scale-out", OUT_CHIPS, True)):
+        spec = ExploreSpec(archs=(ARCH,), shapes=(SHAPE,),
+                           goals=("exploration",),
+                           chip_counts=chips,
+                           chip_generation="v5e",
+                           allow_multi_pod=multi_pod)
+        t0 = time.perf_counter()
+        result = explore(spec)
+        dt = (time.perf_counter() - t0) * 1e6
+        n_queries = len(result.cells) + sum(
+            len(f.rows) for f in result.scaling)
+        for fam in result.scaling:
+            for r in fam.rows:
+                work = r.step_s * r.chips
+                if base_work is None:  # smallest feasible scale-up count
+                    base_work = work
+                out.append({
+                    "strategy": strategy,
+                    "chips": r.chips,
+                    "slice": r.slice_name,
+                    "step_s": r.step_s,
+                    "efficiency": base_work / work,
+                    "bottleneck": r.bottleneck,
+                    "us": dt / max(n_queries, 1),
+                })
     return out
 
 
 def main() -> None:
-    rs = rows()
-    base = {s: next(r["step_s"] * r["chips"] for r in rs
-                    if r["strategy"] == s and r["chips"] == STEPS[0])
-            for s in ("scale-up", "scale-out")}
-    for r in rs:
-        eff = base[r["strategy"]] / (r["step_s"] * r["chips"]) * 100
+    for r in rows():
         derived = (
-            f"chips={r['chips']};pods={r['pods']}"
-            f";step={r['step_s']*1e3:.1f}ms;efficiency={eff:.1f}%"
+            f"chips={r['chips']};slice={r['slice']}"
+            f";step={r['step_s']*1e3:.1f}ms"
+            f";efficiency={r['efficiency']*100:.1f}%"
             f";bottleneck={r['bottleneck']}"
         )
         print(f"scaling/{r['strategy']}-{r['chips']},{r['us']:.1f},{derived}")
 
 
 if __name__ == "__main__":
+    import os
+    import sys
+
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
     main()

@@ -1,9 +1,13 @@
-"""Cost/performance exploration — the paper's Fig. 4 workflow as an
-interactive tool.  'Which hardware should I run my training job on, and
-what will it cost?' answered without naming a single instance type.
+"""Cost/performance exploration — the paper's Fig. 4 workflow through
+`repro.core.explore`: 'Which hardware should I run my training job on,
+and what will it cost?' answered without naming a single instance type.
 
     PYTHONPATH=src python examples/cost_explorer.py --arch glm4-9b \
         --shape train_4k --budget 500
+
+The full walkthrough (grid axes, Pareto frontier, scaling knees,
+retry-aware expected cost, the `explore` CLI and the Markdown report)
+lives in docs/exploring-cost-performance.md.
 """
 import argparse
 import os
@@ -11,8 +15,11 @@ import sys
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
-from repro.core import ResourceIntent, plan  # noqa: E402
-from repro.core.catalog import CHIPS  # noqa: E402
+from repro.core.explore import (  # noqa: E402
+    ExploreSpec,
+    explore,
+    frontier_table,
+)
 
 
 def main():
@@ -22,38 +29,44 @@ def main():
     ap.add_argument("--budget", type=float, default=None, help="$/hour cap")
     ap.add_argument("--deadline-ms", type=float, default=None,
                     help="max step time")
+    ap.add_argument("--preempt-rate", type=float, default=0.02,
+                    help="preemptions per chip-hour folded into the "
+                         "expected-cost column")
     args = ap.parse_args()
 
-    print(f"workload: {args.arch} × {args.shape}")
-    print(f"{'':14s} {'goal=quick_test':^38s} {'goal=production':^38s}")
+    # One spec, every question: all three goals over a chip-count axis,
+    # shared constraints, a failure model for the E[$] column.
+    spec = ExploreSpec(
+        archs=(args.arch,),
+        shapes=(args.shape,),
+        goals=("quick_test", "production", "exploration"),
+        chip_counts=(16, 32, 64, 128),
+        budget_usd_per_hour=args.budget,
+        max_step_seconds=args.deadline_ms / 1e3 if args.deadline_ms else None,
+        preempt_rate_per_chip_hour=args.preempt_rate,
+        steps=2000,
+    )
+    result = explore(spec)
 
-    for goal in ("quick_test", "production", "exploration"):
-        intent = ResourceIntent(
-            arch=args.arch, shape=args.shape, goal=goal,
-            budget_usd_per_hour=args.budget,
-            max_step_seconds=args.deadline_ms / 1e3 if args.deadline_ms else None,
-        )
-        choices = plan(intent, top_k=3)
-        print(f"\n-- {goal} --")
-        if not choices:
-            print("   no feasible plan under constraints")
-            continue
-        for i, c in enumerate(choices):
-            print(f"  #{i+1} {c.summary}")
+    print(f"workload: {args.arch} × {args.shape} — "
+          f"{len(result.cells)} cells, {result.feasible_cells} feasible")
+    print("\n-- Pareto frontier (step time × $/Mtok × $/h, "
+          "retry-aware E[$]) --")
+    print(frontier_table(result))
 
-    # generation sweep (Fig. 4a/4b analogue): same chip count per generation
-    print("\n-- chip-generation sweep (64 chips, like the paper's "
+    # generation sweep (Fig. 4a/4b analogue): the scaling report groups
+    # the same grid by chip generation and finds each family's knee
+    print("\n-- scaling per chip generation (like the paper's "
           "m6a->m7a->m8a) --")
-    for gen in CHIPS:
-        intent = ResourceIntent(arch=args.arch, shape=args.shape,
-                                goal="exploration", chip_generation=gen,
-                                min_chips=64, max_chips=64)
-        c = plan(intent, top_k=1)
-        if c:
-            e = c[0].est
-            print(f"  {gen:4s} step={e.step_s*1e3:9.1f}ms  "
-                  f"cost/step=${e.cost_per_step:.5f}  "
-                  f"bottleneck={e.bottleneck}")
+    for fam in result.scaling:
+        knee = (f"knee at {fam.knee_chips} chips" if fam.knee_chips
+                else "no efficient point")
+        print(f"  {fam.generation:4s} ({knee})")
+        for r in fam.rows:
+            print(f"    {r.chips:5d} chips  {r.slice_name:>12s}  "
+                  f"step={r.step_s*1e3:9.1f}ms  "
+                  f"eff={r.efficiency*100:5.1f}%  "
+                  f"$/Mtok={r.cost_per_mtok:.4f}")
 
 
 if __name__ == "__main__":

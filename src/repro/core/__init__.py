@@ -10,17 +10,30 @@ from repro.core.catalog import (
     SliceType,
     build_catalog,
     candidate_table,
+    catalog_generation,
     catalog_summary,
     find_slice,
+    register_slice,
+    unregister_slice,
 )
 from repro.core.costmodel import (
     BatchEstimate,
     CostEstimate,
     PlanGeometry,
+    RetryCost,
     estimate,
     estimate_batch,
+    retry_expected_cost,
 )
 from repro.core.envelope import ExecutionEnvelope
+from repro.core.explore import (
+    CellSpec,
+    ExploreResult,
+    ExploreSpec,
+    FrontierPoint,
+    explore,
+    report_markdown,
+)
 from repro.core.graph import (
     CycleError,
     FnStage,
@@ -56,6 +69,7 @@ from repro.core.stages import (
     CHECKS,
     DataStage,
     EvalStage,
+    ExploreStage,
     PlanStage,
     ServeStage,
     TrainStage,
@@ -76,8 +90,12 @@ from repro.ft.failures import FailureSchedule, InjectedFailure, RestartPolicy
 __all__ = [
     "BudgetExceeded", "BudgetLedger", "PermissionDenied", "Workspace",
     "CATALOG", "CHIPS", "CandidateTable", "SliceType", "build_catalog",
-    "candidate_table", "catalog_summary", "find_slice",
-    "BatchEstimate", "CostEstimate", "PlanGeometry", "estimate", "estimate_batch",
+    "candidate_table", "catalog_generation", "catalog_summary",
+    "find_slice", "register_slice", "unregister_slice",
+    "BatchEstimate", "CostEstimate", "PlanGeometry", "RetryCost",
+    "estimate", "estimate_batch", "retry_expected_cost",
+    "CellSpec", "ExploreResult", "ExploreSpec", "FrontierPoint",
+    "explore", "report_markdown",
     "ExecutionEnvelope", "ResourceIntent",
     "CycleError", "FnStage", "GraphError", "MissingInputError", "Placement",
     "Stage", "StageCache", "StageContext", "StageGraph", "StageResult",
@@ -87,8 +105,8 @@ __all__ = [
     "plan", "plan_stages", "prune_dominated", "rank", "to_runtime_plan",
     "ProvenanceStore", "RunRecord", "StageRecordView",
     "capture_environment", "stable_hash",
-    "CHECKS", "DataStage", "EvalStage", "PlanStage", "ServeStage",
-    "TrainStage", "ValidateStage", "VisualizeStage",
+    "CHECKS", "DataStage", "EvalStage", "ExploreStage", "PlanStage",
+    "ServeStage", "TrainStage", "ValidateStage", "VisualizeStage",
     "REGISTRY", "WorkflowRegistry", "WorkflowResult",
     "WorkflowTemplate", "compile_template", "resolve_placements",
     "run_workflow",

@@ -12,8 +12,7 @@ Chip generations play the role of the paper's m6a → m7a → m8a sweep.
 from __future__ import annotations
 
 import dataclasses
-import functools
-import itertools
+import threading
 from typing import Dict, List, Optional, Tuple
 
 import numpy as np
@@ -79,6 +78,47 @@ def build_catalog() -> List[SliceType]:
 
 
 CATALOG: List[SliceType] = build_catalog()
+
+# Catalog generation: bumped on every mutation of CATALOG so downstream
+# caches (candidate tables, the planner's scored tables and ranked-order
+# memo) can detect growth and re-score *incrementally* instead of
+# invalidating wholesale — the "fleet gained a slice type" path.
+_GENERATION = 1
+_CATALOG_LOCK = threading.Lock()
+
+
+def catalog_generation() -> int:
+    """Monotonic counter identifying the current CATALOG contents."""
+    return _GENERATION
+
+
+def register_slice(slice_: SliceType) -> SliceType:
+    """Append a new slice type to the live catalog (bumps the generation).
+
+    Appending — never inserting — keeps every existing candidate-table
+    row index valid, which is what lets the planner extend its scored
+    tables with just the new slice's rows (see
+    :func:`repro.core.planner.plan`)."""
+    global _GENERATION
+    with _CATALOG_LOCK:
+        if any(s.name == slice_.name for s in CATALOG):
+            raise ValueError(f"slice {slice_.name!r} already in catalog")
+        CATALOG.append(slice_)
+        _GENERATION += 1
+    return slice_
+
+
+def unregister_slice(name: str) -> SliceType:
+    """Remove a slice type by name (bumps the generation; downstream
+    caches detect the non-append mutation and rebuild from scratch)."""
+    global _GENERATION
+    with _CATALOG_LOCK:
+        for i, s in enumerate(CATALOG):
+            if s.name == name:
+                del CATALOG[i]
+                _GENERATION += 1
+                return s
+    raise KeyError(f"unknown slice {name!r}; have {[s.name for s in CATALOG]}")
 
 
 def find_slice(name: str) -> SliceType:
@@ -187,16 +227,12 @@ class CandidateTable:
         return len(self.slices)
 
 
-@functools.lru_cache(maxsize=64)
-def candidate_table(kind: str, global_batch: int) -> CandidateTable:
-    """Materialize all (slice, mesh_shape, geometry) cells as arrays.
-
-    The candidate grid depends on the workload only through
-    ``(kind, global_batch)`` — remat/microbatch options come from the
-    kind, microbatch divisibility from the global batch — so one table
-    serves every (config, shape) with that signature and is built exactly
-    once per process (lru-cached).
-    """
+def _build_table(slices: List[SliceType], si_offset: int, kind: str,
+                 global_batch: int) -> CandidateTable:
+    """Materialize (slice, mesh_shape, geometry) cells for ``slices`` as
+    arrays; ``si_offset`` is the CATALOG index of ``slices[0]`` so
+    ``slice_idx`` stays a valid index into the full catalog when a table
+    extension is built for newly registered slices only."""
     sl_rows: List[SliceType] = []
     mesh_rows: List[Tuple[int, ...]] = []
     axes_rows: List[Tuple[str, ...]] = []
@@ -206,7 +242,7 @@ def candidate_table(kind: str, global_batch: int) -> CandidateTable:
     slice_num: List[Tuple] = []
     # per-geometry numeric columns (one 7-tuple per row)
     geom_num: List[Tuple] = []
-    for si, sl in enumerate(CATALOG):
+    for si, sl in enumerate(slices, start=si_offset):
         n_before = len(geom_rows)
         for mesh_shape, mesh_axes in mesh_shapes_for(sl):
             mesh_shape, mesh_axes = tuple(mesh_shape), tuple(mesh_axes)
@@ -225,9 +261,13 @@ def candidate_table(kind: str, global_batch: int) -> CandidateTable:
         slice_num.append((si, c.peak_bf16_flops, c.hbm_bytes, c.hbm_bw,
                           c.ici_bw, c.dci_bw, c.price_per_hour,
                           sl.price_per_hour, sl.multi_pod))
-    gcols = np.asarray(geom_num, dtype=np.int64).T
-    scols = np.repeat(np.asarray(slice_num, dtype=np.float64),
-                      counts, axis=0).T
+    if not geom_rows:
+        gcols = np.zeros((8, 0), dtype=np.int64)
+        scols = np.zeros((9, 0), dtype=np.float64)
+    else:
+        gcols = np.asarray(geom_num, dtype=np.int64).T
+        scols = np.repeat(np.asarray(slice_num, dtype=np.float64),
+                          counts, axis=0).T
     return CandidateTable(
         slices=tuple(sl_rows),
         mesh_shapes=tuple(mesh_rows),
@@ -251,3 +291,87 @@ def candidate_table(kind: str, global_batch: int) -> CandidateTable:
         slice_price=scols[7],
         multi_pod=scols[8].astype(bool),
     )
+
+
+def concat_tables(a: CandidateTable, b: CandidateTable) -> CandidateTable:
+    """Row-wise concatenation — how a cached table absorbs the rows of
+    newly registered slices without rebuilding its prefix."""
+    def cat(fa, fb):
+        if isinstance(fa, tuple):
+            return fa + fb
+        return np.concatenate([fa, fb])
+
+    return CandidateTable(**{
+        f.name: cat(getattr(a, f.name), getattr(b, f.name))
+        for f in dataclasses.fields(CandidateTable)
+    })
+
+
+def table_rows(table: CandidateTable, start: int,
+               stop: Optional[int] = None) -> CandidateTable:
+    """The sub-table of rows ``start:stop`` (used to score just the rows
+    a catalog extension added)."""
+    sl = slice(start, stop)
+    return CandidateTable(**{
+        f.name: getattr(table, f.name)[sl]
+        for f in dataclasses.fields(CandidateTable)
+    })
+
+
+# (kind, global_batch) -> (generation, catalog-snapshot, table).  On an
+# append-only catalog change the cached table is *extended* with the new
+# slices' rows (row order still matches the scalar enumeration, which
+# walks CATALOG in order); any other mutation rebuilds from scratch.
+_TABLE_CACHE: Dict[Tuple[str, int],
+                   Tuple[int, Tuple[SliceType, ...], CandidateTable]] = {}
+_TABLE_CACHE_MAX = 64  # FIFO bound (matches the old lru_cache maxsize)
+_TABLE_LOCK = threading.Lock()
+
+
+def candidate_table(kind: str, global_batch: int) -> CandidateTable:
+    """Materialize all (slice, mesh_shape, geometry) cells as arrays.
+
+    The candidate grid depends on the workload only through
+    ``(kind, global_batch)`` — remat/microbatch options come from the
+    kind, microbatch divisibility from the global batch — so one table
+    serves every (config, shape) with that signature.  Tables are cached
+    per catalog generation: when the catalog *grows*
+    (:func:`register_slice`), only the new slices' rows are built and
+    appended; any other mutation rebuilds from scratch.
+    """
+    key = (kind, global_batch)
+    with _TABLE_LOCK:
+        gen = _GENERATION
+        catalog = tuple(CATALOG)
+        hit = _TABLE_CACHE.get(key)
+    if hit is not None:
+        hit_gen, snap, table = hit
+        if hit_gen == gen:
+            return table
+        if (len(catalog) > len(snap)
+                and all(catalog[i] is snap[i] for i in range(len(snap)))):
+            ext = _build_table(list(catalog[len(snap):]), len(snap), kind,
+                               global_batch)
+            table = concat_tables(table, ext)
+            _table_cache_put(key, (gen, catalog, table))
+            return table
+    table = _build_table(list(catalog), 0, kind, global_batch)
+    _table_cache_put(key, (gen, catalog, table))
+    return table
+
+
+def _table_cache_put(key, entry) -> None:
+    with _TABLE_LOCK:
+        if key not in _TABLE_CACHE and len(_TABLE_CACHE) >= _TABLE_CACHE_MAX:
+            _TABLE_CACHE.pop(next(iter(_TABLE_CACHE)))
+        _TABLE_CACHE[key] = entry
+
+
+def _table_cache_clear() -> None:
+    with _TABLE_LOCK:
+        _TABLE_CACHE.clear()
+
+
+# benchmarks/tests call candidate_table.cache_clear() (the old lru_cache
+# spelling); keep that interface on the generation-aware cache
+candidate_table.cache_clear = _table_cache_clear

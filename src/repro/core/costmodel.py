@@ -388,10 +388,24 @@ def _collective_bytes_batch(cfg: ModelConfig, shape: ShapeConfig,
     return out
 
 
+# Instrumentation: how much scoring work the process has done.  The
+# incremental re-planning tests assert on these — adding a slice type to
+# the catalog must re-score only the new rows, so ``rows_scored`` is the
+# observable that proves memoized intents were extended, not rebuilt.
+SCORING_STATS: Dict[str, int] = {"batch_calls": 0, "rows_scored": 0}
+
+
+def reset_scoring_stats() -> None:
+    SCORING_STATS["batch_calls"] = 0
+    SCORING_STATS["rows_scored"] = 0
+
+
 def estimate_batch(cfg: ModelConfig, shape: ShapeConfig,
                    table: CandidateTable,
                    moment_dtype: str = "float32") -> BatchEstimate:
     """`estimate()` over every row of a CandidateTable at once."""
+    SCORING_STATS["batch_calls"] += 1
+    SCORING_STATS["rows_scored"] += len(table)
     kind = shape.kind
     if kind == "train":
         flops = _train_flops(cfg, shape)
@@ -461,4 +475,99 @@ def estimate_batch(cfg: ModelConfig, shape: ShapeConfig,
         cost_per_step=cost_per_step, cost_per_mtok=cost_per_mtok,
         bottleneck_code=bottleneck_code, feasible=feasible,
         colls=colls, flops=flops, hbm=np.asarray(hbm, dtype=np.float64),
+    )
+
+
+def concat_batches(a: BatchEstimate, b: BatchEstimate) -> BatchEstimate:
+    """Row-wise concatenation of two BatchEstimates over the same
+    workload — how a memoized scored table absorbs the rows a catalog
+    extension added without re-scoring its prefix."""
+    def cat(x, y):
+        return np.concatenate([np.atleast_1d(np.asarray(x)),
+                               np.atleast_1d(np.asarray(y))])
+
+    return BatchEstimate(
+        compute_s=cat(a.compute_s, b.compute_s),
+        memory_s=cat(a.memory_s, b.memory_s),
+        collective_s=cat(a.collective_s, b.collective_s),
+        step_s=cat(a.step_s, b.step_s),
+        bytes_per_device=cat(a.bytes_per_device, b.bytes_per_device),
+        hbm_frac=cat(a.hbm_frac, b.hbm_frac),
+        cost_per_step=cat(a.cost_per_step, b.cost_per_step),
+        cost_per_mtok=cat(a.cost_per_mtok, b.cost_per_mtok),
+        bottleneck_code=cat(a.bottleneck_code, b.bottleneck_code),
+        feasible=cat(a.feasible, b.feasible).astype(bool),
+        colls={k: cat(a.colls[k], b.colls[k]) for k in a.colls},
+        flops=a.flops,
+        hbm=cat(a.hbm, b.hbm),
+    )
+
+
+# ===========================================================================
+# Retry-aware expected cost — folding preemption rates and restart
+# backoff budgets into a plan's $ projection (docs/cost-model.md has the
+# derivation; tests assert monotonicity in the failure rate).
+# ===========================================================================
+@dataclasses.dataclass(frozen=True)
+class RetryCost:
+    """Expected-cost projection for a run under preemptions + restarts.
+
+    ``expected_cost_usd`` is the billed projection (failure-free cost
+    plus re-done work); ``expected_hours`` is the wall-clock projection
+    (billed hours plus restart backoff, which is waited but not billed —
+    the slice is gone while we back off)."""
+
+    base_cost_usd: float        # failure-free: steps × cost_per_step
+    expected_cost_usd: float    # base + expected re-done work
+    expected_cost_per_mtok: float
+    run_hours: float            # failure-free duration
+    expected_hours: float       # run + wasted + backoff (wall clock)
+    expected_failures: float    # Poisson mean, capped at max_restarts
+    backoff_s: float            # expected total restart backoff
+    failure_rate_per_hour: float  # slice-level rate (per-chip rate × chips)
+
+
+def retry_expected_cost(est: CostEstimate, slice_: SliceType, steps: int,
+                        preempt_rate_per_chip_hour: float = 0.0,
+                        policy=None,
+                        restore_frac: float = 0.5) -> RetryCost:
+    """Fold a preemption rate and a :class:`~repro.ft.failures.RestartPolicy`
+    into a plan's cost projection.
+
+    Model: preemptions arrive Poisson at ``rate × total_chips`` per hour
+    (bigger slices expose more failure domains), so a run of
+    failure-free duration ``T`` expects ``E = min(λ·T, max_restarts)``
+    failures.  The ``E`` failures split the run into ``E + 1`` segments;
+    with checkpoint-restart, each failure re-does ``restore_frac`` of
+    its segment on average, so the expected wasted (and billed) time is
+    ``E/(E+1) · restore_frac · T`` — bounded by ``restore_frac · T``
+    however unreliable the fleet gets.  Backoff between restarts
+    (:meth:`RestartPolicy.expected_total_backoff_s`) extends the wall
+    clock but is not billed.  Every term is monotone non-decreasing in
+    the preemption rate.
+    """
+    run_hours = steps * est.step_s / 3600.0
+    base_cost = steps * est.cost_per_step
+    lam = preempt_rate_per_chip_hour * slice_.total_chips
+    expected_failures = lam * run_hours
+    if policy is not None:
+        expected_failures = min(expected_failures,
+                                float(policy.max_restarts))
+    waste_frac = (expected_failures / (expected_failures + 1.0)
+                  * restore_frac)
+    wasted_hours = waste_frac * run_hours
+    billed_hours = run_hours + wasted_hours
+    expected_cost = base_cost * (1.0 + waste_frac)
+    backoff_s = (policy.expected_total_backoff_s(expected_failures)
+                 if policy is not None else 0.0)
+    scale = expected_cost / base_cost if base_cost > 0 else 1.0
+    return RetryCost(
+        base_cost_usd=base_cost,
+        expected_cost_usd=expected_cost,
+        expected_cost_per_mtok=est.cost_per_mtok * scale,
+        run_hours=run_hours,
+        expected_hours=billed_hours + backoff_s / 3600.0,
+        expected_failures=expected_failures,
+        backoff_s=backoff_s,
+        failure_rate_per_hour=lam,
     )

@@ -27,9 +27,16 @@ for an enumeration once.  The scalar path survives as
 ``engine="scalar"`` — the parity oracle the benchmarks and property
 tests compare against.
 
+Memo entries record the catalog generation
+(:func:`repro.core.catalog.catalog_generation`): when the fleet gains a
+slice type, scored tables extend with just the new rows and memoized
+intents refresh lazily — incremental re-planning instead of wholesale
+invalidation (docs/cost-model.md §incremental re-planning).
+
 The winner's predictions are later validated against the compiled HLO in
-the dry-run; `examples/cost_explorer.py` reproduces the paper's Fig. 4
-sweep with this machinery.
+the dry-run; :mod:`repro.core.explore` drives this machinery across
+sweep grids to reproduce the paper's Fig. 4 journey (Pareto frontiers,
+scaling knees, retry-aware expected cost).
 """
 from __future__ import annotations
 
@@ -47,14 +54,17 @@ from repro.core.catalog import (
     CandidateTable,
     SliceType,
     candidate_table,
+    catalog_generation,
     find_slice,
     geometries_for,
     mesh_shapes_for,
+    table_rows,
 )
 from repro.core.costmodel import (
     BatchEstimate,
     CostEstimate,
     PlanGeometry,
+    concat_batches,
     estimate,
     estimate_batch,
 )
@@ -90,12 +100,30 @@ def intent_hash(intent: ResourceIntent) -> str:
 
 
 # ===========================================================================
-# Memoization: scored tables per (arch, shape), ranked orders per intent
+# Memoization: scored tables per (arch, shape), ranked orders per intent.
+# Entries record the catalog generation they were computed under, so a
+# catalog that *gained* slice types extends scored tables with just the
+# new rows (incremental re-scoring) and lazily refreshes memoized ranked
+# orders — instead of invalidating every memoized intent wholesale.
 # ===========================================================================
-_BATCH_CACHE: Dict[Tuple[str, str], Tuple[CandidateTable, BatchEstimate]] = {}
-_PLAN_CACHE: "Dict[str, Tuple[np.ndarray, str, str]]" = {}
+_BATCH_CACHE: "Dict[Tuple[str, str], Tuple[int, CandidateTable, BatchEstimate]]" = {}
+_BATCH_CACHE_MAX = 128  # FIFO bound: derived shapes (train_4k@gbN) can
+# mint unbounded (arch, shape) keys through the explore global-batch axis
+_PLAN_CACHE: "Dict[str, Tuple[int, np.ndarray, str, str]]" = {}
 _PLAN_CACHE_MAX = 256
 _CACHE_LOCK = threading.Lock()
+
+# Observable counters for the incremental re-planning tests and the
+# bench: memo hits, cold ranks, and generation-driven refreshes.
+PLANNER_STATS: Dict[str, int] = {
+    "plan_calls": 0, "memo_hits": 0, "cold_ranks": 0, "stale_refreshes": 0,
+    "table_extensions": 0,
+}
+
+
+def reset_planner_stats() -> None:
+    for k in PLANNER_STATS:
+        PLANNER_STATS[k] = 0
 
 
 def clear_planner_cache() -> None:
@@ -107,18 +135,32 @@ def clear_planner_cache() -> None:
 
 def _scored_table(arch: str, shape_name: str) -> Tuple[CandidateTable, BatchEstimate]:
     """The full candidate grid with batch scores, computed once per
-    (config, shape) and shared by every intent over that workload."""
+    (config, shape) and shared by every intent over that workload.
+
+    Generation-aware: when the catalog grew since the entry was scored,
+    only the appended rows go through ``estimate_batch`` and the columns
+    are concatenated (the prefix is immutable by construction — see
+    :func:`repro.core.catalog.register_slice`)."""
     key = (arch, shape_name)
+    gen = catalog_generation()
     with _CACHE_LOCK:
         hit = _BATCH_CACHE.get(key)
-    if hit is not None:
-        return hit
+    if hit is not None and hit[0] == gen:
+        return hit[1], hit[2]
     cfg = get_config(arch)
     shape = get_shape(shape_name)
     table = candidate_table(shape.kind, shape.global_batch)
-    batch = estimate_batch(cfg, shape, table)
+    if (hit is not None and len(table) > len(hit[1])
+            and table.slices[:len(hit[1])] == hit[1].slices):
+        ext = table_rows(table, len(hit[1]))
+        batch = concat_batches(hit[2], estimate_batch(cfg, shape, ext))
+        PLANNER_STATS["table_extensions"] += 1
+    else:
+        batch = estimate_batch(cfg, shape, table)
     with _CACHE_LOCK:
-        _BATCH_CACHE[key] = (table, batch)
+        if key not in _BATCH_CACHE and len(_BATCH_CACHE) >= _BATCH_CACHE_MAX:
+            _BATCH_CACHE.pop(next(iter(_BATCH_CACHE)))
+        _BATCH_CACHE[key] = (gen, table, batch)
     return table, batch
 
 
@@ -153,34 +195,36 @@ def _constraint_mask(intent: ResourceIntent, table: CandidateTable,
 # ===========================================================================
 # Dominance pruning
 # ===========================================================================
-def _dominated(step: np.ndarray, cost: np.ndarray, hbm: np.ndarray,
-               price: np.ndarray) -> np.ndarray:
-    """True where some other candidate is *strictly* better on step_s,
-    cost_per_mtok and hbm_frac simultaneously (and on slice $/h, which
-    guards the quick_test ranking key).  A strictly-dominated candidate
-    can never precede its dominator under any goal's sort key, so pruning
+def _dominated(*axes: np.ndarray) -> np.ndarray:
+    """True where some other candidate is *strictly* better on every
+    axis simultaneously (strict dominance — "lower is better" on all
+    axes).  A strictly-dominated candidate can never precede its
+    dominator under any sort key built from these axes, so pruning
     cannot perturb the ranked order of survivors.
+
+    The planner calls this with (step_s, cost_per_mtok, hbm_frac,
+    slice $/h — the fourth guards the quick_test ranking key); the
+    explore engine reuses the same semantics on (step_s, cost_per_mtok,
+    slice $/h) for exact cross-intent Pareto frontiers.
 
     Comparisons run in float32: rounding to f32 is monotone, so a strict
     f32 inequality implies the strict f64 inequality — the test can only
     under-prune, never mis-prune.  Two passes keep it off O(n²): a cheap
-    cull against the 2D (step, cost) prefix front, then an exact pass
-    whose dominator set is the rows still unmarked (strict dominance is
-    transitive, so every dominated row has an undominated dominator).
+    cull against the 2D prefix front of the first two axes, then an
+    exact pass whose dominator set is the rows still unmarked (strict
+    dominance is transitive, so every dominated row has an undominated
+    dominator).
     """
-    n = len(step)
+    n = len(axes[0])
     if n == 0:
         return np.zeros(0, dtype=bool)
-    s = step.astype(np.float32)
-    c = cost.astype(np.float32)
-    h = hbm.astype(np.float32)
-    p = price.astype(np.float32)
+    cols = [np.asarray(a).astype(np.float32) for a in axes]
+    s, c = cols[0], cols[1] if len(cols) > 1 else cols[0]
 
     def marked_by(cand: np.ndarray) -> np.ndarray:
-        worse = s[:, None] > s[None, cand]
-        worse &= c[:, None] > c[None, cand]
-        worse &= h[:, None] > h[None, cand]
-        worse &= p[:, None] > p[None, cand]
+        worse = cols[0][:, None] > cols[0][None, cand]
+        for col in cols[1:]:
+            worse &= col[:, None] > col[None, cand]
         return worse.any(axis=1)
 
     order = np.argsort(s, kind="stable")
@@ -325,28 +369,40 @@ def plan(intent: ResourceIntent, top_k: int = 5, *,
     """Ranked feasible plans for an intent: enumerate → prune dominated →
     rank by goal → top_k.  The vectorized engine memoizes the ranked
     order per canonical intent hash; ``engine="scalar"`` runs the same
-    pipeline through the scalar cost model (the parity oracle)."""
+    pipeline through the scalar cost model (the parity oracle).
+
+    Memo entries record the catalog generation.  A memoized intent whose
+    generation went stale (the catalog gained slice types) is *refreshed*
+    rather than discarded: the scored table extends with only the new
+    rows (:func:`_scored_table`), and just the cheap mask/prune/rank
+    pipeline re-runs — incremental re-planning, not a cold start."""
     _check_engine(engine)
     intent.validate()
     if engine == "scalar":
         return rank(prune_dominated(_enumerate_scalar(intent)),
                     intent.goal)[:top_k]
+    PLANNER_STATS["plan_calls"] += 1
     key = intent_hash(intent)
+    gen = catalog_generation()
     with _CACHE_LOCK:
         hit = _PLAN_CACHE.get(key)
-    if hit is None:
+    if hit is not None and hit[0] == gen:
+        PLANNER_STATS["memo_hits"] += 1
+    else:
+        PLANNER_STATS["stale_refreshes" if hit is not None
+                      else "cold_ranks"] += 1
         table, batch = _scored_table(intent.arch, intent.shape)
         idx = np.flatnonzero(_constraint_mask(intent, table, batch))
         dom = _dominated(batch.step_s[idx], batch.cost_per_mtok[idx],
                          batch.hbm_frac[idx], table.slice_price[idx])
         idx = idx[~dom]
         ranked = _rank_indices(table, batch, idx, intent.goal)
-        hit = (ranked, intent.arch, intent.shape)
+        hit = (gen, ranked, intent.arch, intent.shape)
         with _CACHE_LOCK:
-            if len(_PLAN_CACHE) >= _PLAN_CACHE_MAX:
+            if key not in _PLAN_CACHE and len(_PLAN_CACHE) >= _PLAN_CACHE_MAX:
                 _PLAN_CACHE.pop(next(iter(_PLAN_CACHE)))
             _PLAN_CACHE[key] = hit
-    ranked, arch, shape_name = hit
+    _, ranked, arch, shape_name = hit
     table, batch = _scored_table(arch, shape_name)
     return _materialize(table, batch, ranked[:top_k])
 

@@ -13,6 +13,9 @@ visualization), reusable in any :class:`~repro.core.graph.StageGraph`:
   * :class:`EvalStage`      — held-out loss of a trained state
   * :class:`ValidateStage`  — template checks over the metric history
   * :class:`VisualizeStage` — loss-curve artifact
+  * :class:`ExploreStage`   — cost-performance sweep
+                              (:mod:`repro.core.explore`) with per-cell
+                              stage-cache reuse and a Markdown artifact
 
 The check functions themselves live here too (re-exported by
 ``repro.core.workflow`` for compatibility).
@@ -397,6 +400,74 @@ class ServeStage(Stage):
         if ctx.record is not None:
             ctx.record.stage_view(self.name).log(0, stats)
         return {"final_state": completions, "completions": completions}
+
+
+# ===========================================================================
+# Explore
+# ===========================================================================
+class ExploreStage(Stage):
+    """Run a cost-performance sweep (:func:`repro.core.explore.explore`)
+    as a workflow stage.
+
+    The spec comes from the constructor or the ``explore_spec`` context
+    param (the latter wins, which is how a fan-out graph sweeps several
+    grids over one template).  When the run has a
+    :class:`~repro.core.stagecache.StageCache` attached, every grid
+    *cell* is cached under its own content-addressed key (cell
+    coordinates + constraints + catalog generation), so a re-run or a
+    resumed sweep recomputes only cells the catalog change actually
+    invalidated.  The rendered Markdown report lands in the run's
+    artifacts dir as ``explore.md`` and an ``explore`` provenance event
+    records the headline numbers.
+    """
+
+    outputs = ("explore_result", "explore_report")
+    cache_params = ("explore_spec",)
+
+    def __init__(self, name: str = "explore", spec: Any = None,
+                 report_name: str = "explore.md"):
+        super().__init__(name)
+        self.spec = spec
+        self.report_name = report_name
+
+    def signature(self) -> Dict[str, Any]:
+        """Fold the constructor spec and the catalog generation into the
+        stage identity: the base signature() keeps only primitive attrs,
+        which would let a resume skip restore a *different* spec's
+        result — and a catalog that gained a slice type must miss the
+        resume/cache hash so the sweep re-plans."""
+        from repro.core.catalog import catalog_generation
+
+        sig = super().signature()
+        sig["spec"] = (dataclasses.asdict(self.spec)
+                       if self.spec is not None else None)
+        sig["catalog_generation"] = catalog_generation()
+        return sig
+
+    def run(self, ctx: StageContext) -> Dict[str, Any]:
+        from repro.core.explore import explore, report_markdown
+
+        spec = ctx.params.get("explore_spec", self.spec)
+        if spec is None:
+            raise ValueError(
+                f"ExploreStage {self.name!r} needs an ExploreSpec (pass "
+                f"spec= to the constructor or explore_spec in ctx.params)")
+        result = explore(spec, cache=ctx.cache)
+        report = report_markdown(result)
+        if ctx.record is not None:
+            path = f"{ctx.record.artifacts_dir}/{self.report_name}"
+            with open(path, "w", encoding="utf-8") as f:
+                f.write(report)
+            ctx.record.log_event("explore", {
+                "stage": self.name,
+                "cells": len(result.cells),
+                "feasible_cells": result.feasible_cells,
+                "cells_from_cache": result.cells_from_cache,
+                "frontier_size": len(result.frontier),
+                "catalog_generation": result.catalog_generation,
+                "report": path,
+            })
+        return {"explore_result": result, "explore_report": report}
 
 
 # ===========================================================================

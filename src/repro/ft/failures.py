@@ -99,16 +99,39 @@ class RestartPolicy:
     def retryable(self, exc: BaseException) -> bool:
         return isinstance(exc, tuple(self.retry_on))
 
+    def _base_delay(self, attempt: int) -> float:
+        """The jitterless capped-exponential delay curve — single source
+        for ``delay()`` and the expected-backoff budget."""
+        return min(self.backoff_s * (2 ** attempt), self.max_backoff_s)
+
     def delay(self, attempt: int) -> float:
         """Seconds to wait before retry number ``attempt`` (0-based)."""
         if self.backoff_s <= 0:
             return 0.0
-        base = min(self.backoff_s * (2 ** attempt), self.max_backoff_s)
+        base = self._base_delay(attempt)
         if self.jitter <= 0:
             return base
         rng = random.Random((self.seed << 16) ^ attempt) \
             if self.seed is not None else random
         return base * (1.0 + self.jitter * rng.random())
+
+    def expected_total_backoff_s(self, expected_failures: float) -> float:
+        """Expected total seconds spent backing off over a run that
+        suffers ``expected_failures`` restarts (fractional values
+        interpolate the next delay).  The jitter factor is uniform in
+        ``[1, 1 + jitter]``, so its mean is ``1 + jitter/2``.  This is
+        the deterministic budget the cost projection folds into a plan's
+        expected wall clock (see
+        :func:`repro.core.costmodel.retry_expected_cost`)."""
+        if self.backoff_s <= 0 or expected_failures <= 0:
+            return 0.0
+        n = min(expected_failures, float(self.max_restarts))
+        whole = int(n)
+        total = sum(self._base_delay(i) for i in range(whole))
+        frac = n - whole
+        if frac > 0:
+            total += frac * self._base_delay(whole)
+        return total * (1.0 + max(self.jitter, 0.0) / 2.0)
 
 
 class StragglerWatch:

@@ -46,6 +46,14 @@
 
     # render each stage's resolved backend (slice + mesh)
     python -m repro.launch.cli graph train-qwen2-1.5b --placements
+
+    # cost-performance exploration: sweep a grid of (arch x shape x goal
+    # x chip-count), print the Pareto frontier, and write a deterministic
+    # Markdown report into runs/<id>/explore.md
+    python -m repro.launch.cli explore --arch glm4-9b --shape train_4k \
+        --chips 8,16,32,64
+    python -m repro.launch.cli explore --arch glm4-9b --chips 8,16,32 \
+        --preempt-rate 0.05 --steps 5000   # retry-aware expected cost
 """
 from __future__ import annotations
 
@@ -75,6 +83,69 @@ def cmd_plan(args) -> None:
     print(f"top {len(choices)} plans ({args.goal}):")
     for i, c in enumerate(choices):
         print(f"  #{i+1} {c.summary}")
+
+
+def _csv_ints(raw):
+    # argparse type= hook: a ValueError here surfaces as a clean
+    # "invalid value" usage error instead of a traceback
+    return tuple(int(x) for x in raw.split(",") if x.strip()) if raw else ()
+
+
+def cmd_explore(args) -> None:
+    from repro.core import ProvenanceStore, StageCache
+    from repro.core.explore import (
+        ExploreSpec,
+        explore,
+        frontier_table,
+        report_markdown,
+    )
+
+    spec = ExploreSpec(
+        archs=tuple(args.arch),
+        shapes=tuple(args.shape or ["train_4k"]),
+        goals=tuple(args.goal or ["production"]),
+        chip_counts=args.chips,
+        global_batches=args.global_batch,
+        budget_usd_per_hour=args.budget,
+        max_step_seconds=args.deadline_ms / 1e3 if args.deadline_ms else None,
+        chip_generation=args.chip,
+        allow_multi_pod=not args.no_multi_pod,
+        top_k=args.top_k,
+        steps=args.steps,
+        preempt_rate_per_chip_hour=args.preempt_rate,
+        max_restarts=args.max_restarts,
+        backoff_s=args.backoff,
+    )
+    cache = StageCache(args.cache_dir) if args.cache_dir else None
+    result = explore(spec, cache=cache, engine=args.engine)
+
+    print(f"explored {len(result.cells)} cells "
+          f"({result.feasible_cells} feasible, "
+          f"{result.cells_from_cache} from cache); "
+          f"frontier has {len(result.frontier)} plans")
+    print(frontier_table(result))
+
+    if not args.no_report:
+        import dataclasses as _dc
+        import os
+
+        store = ProvenanceStore(args.runs_dir)
+        rec = store.create_run(
+            template="explore", template_version="1",
+            config={"spec": _dc.asdict(spec)},
+            plan={},
+        )
+        path = os.path.join(rec.dir, "explore.md")
+        with open(path, "w", encoding="utf-8") as f:
+            f.write(report_markdown(result))
+        rec.log_event("explore", {
+            "cells": len(result.cells),
+            "feasible_cells": result.feasible_cells,
+            "frontier_size": len(result.frontier),
+            "catalog_generation": result.catalog_generation,
+            "report": path,
+        })
+        print(f"report: {path}")
 
 
 def cmd_run(args) -> None:
@@ -202,6 +273,51 @@ def build_parser() -> argparse.ArgumentParser:
     p.add_argument("--mesh", default=None, help="expert override: e.g. 16,16")
     p.add_argument("--top-k", type=int, default=5)
     p.set_defaults(fn=cmd_plan)
+
+    p = sub.add_parser("explore",
+                       help="cost-performance sweep: Pareto frontier, "
+                            "scaling report, retry-aware expected cost")
+    p.add_argument("--arch", action="append", required=True,
+                   help="architecture to sweep; repeatable")
+    p.add_argument("--shape", action="append", default=None,
+                   help="workload shape(s); repeatable (default train_4k)")
+    p.add_argument("--goal", action="append", default=None,
+                   choices=["production", "quick_test", "exploration"],
+                   help="intent goal(s); repeatable (default production)")
+    p.add_argument("--chips", type=_csv_ints, default=(),
+                   help="chip-count axis, e.g. 8,16,32,64 "
+                        "(default: planner free choice)")
+    p.add_argument("--global-batch", type=_csv_ints, default=(),
+                   help="global-batch axis, e.g. 128,256,512 "
+                        "(default: the shape's own)")
+    p.add_argument("--budget", type=float, default=None,
+                   help="$ per hour cap for every cell")
+    p.add_argument("--deadline-ms", type=float, default=None,
+                   help="max step time for every cell")
+    p.add_argument("--chip", default=None, choices=["v4", "v5e", "v5p"],
+                   help="restrict the sweep to one chip generation")
+    p.add_argument("--no-multi-pod", action="store_true")
+    p.add_argument("--top-k", type=int, default=3,
+                   help="ranked plans kept per grid cell")
+    p.add_argument("--steps", type=int, default=1000,
+                   help="projection horizon for the expected-cost column")
+    p.add_argument("--preempt-rate", type=float, default=0.0,
+                   help="preemptions per chip-hour for the retry-aware "
+                        "expected cost (0 = reliable fleet)")
+    p.add_argument("--max-restarts", type=int, default=5,
+                   help="restart budget folded into the cost projection")
+    p.add_argument("--backoff", type=float, default=30.0,
+                   help="base seconds of restart backoff in the projection")
+    p.add_argument("--engine", default="vectorized",
+                   choices=["vectorized", "scalar"],
+                   help="planner engine (scalar = the parity oracle)")
+    p.add_argument("--cache-dir", default=None,
+                   help="StageCache root for per-cell reuse across sweeps")
+    p.add_argument("--runs-dir", default="runs")
+    p.add_argument("--no-report", action="store_true",
+                   help="print the frontier only; skip the "
+                        "runs/<id>/explore.md report artifact")
+    p.set_defaults(fn=cmd_explore)
 
     p = sub.add_parser("run", help="run a workflow template")
     p.add_argument("template")

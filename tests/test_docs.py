@@ -10,7 +10,12 @@ import pytest
 ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
 sys.path.insert(0, os.path.join(ROOT, "tools"))
 
-from check_docs import check_file, check_tree, doc_files  # noqa: E402
+from check_docs import (  # noqa: E402
+    check_file,
+    check_symbols,
+    check_tree,
+    doc_files,
+)
 
 
 def test_repo_docs_exist():
@@ -56,6 +61,39 @@ def test_checker_ignores_external_and_code_fences(tmp_path):
     assert check_file(str(tmp_path / "README.md"), str(tmp_path)) == []
 
 
+def test_symbol_checker_catches_docs_rot(tmp_path):
+    """Backtick repro.* references must resolve via import — a renamed
+    symbol breaks the docs even though every link still resolves."""
+    (tmp_path / "README.md").write_text(
+        "# T\n`repro.core.plan` is real but "
+        "`repro.core.no_such_symbol` and `repro.nope.module` are not; "
+        "`optimizer.lr`, `est.step_s` and `python -m repro.launch.cli` "
+        "must not trip the matcher.\n"
+        "```\n`repro.fenced.ignored`\n```\n")
+    # resolve against the real source tree (root supplies src/)
+    errors = check_symbols(str(tmp_path / "README.md"), ROOT)
+    bad = {e.split("`")[1] for e in errors}
+    assert bad == {"repro.core.no_such_symbol", "repro.nope.module"}
+
+
+def test_repo_docs_symbols_resolve():
+    errors = []
+    for path in doc_files(ROOT):
+        errors.extend(check_symbols(path, ROOT))
+    assert errors == []
+
+
+def test_cli_reference_not_stale():
+    """docs/cli.md must match build_parser() (tools/gen_cli_docs.py)."""
+    import gen_cli_docs
+
+    with open(os.path.join(ROOT, "docs", "cli.md"), encoding="utf-8") as f:
+        on_disk = f.read()
+    assert on_disk == gen_cli_docs.render(), (
+        "docs/cli.md is stale — regenerate with: "
+        "PYTHONPATH=src python tools/gen_cli_docs.py")
+
+
 @pytest.mark.slow
 def test_check_docs_cli_exits_zero():
     proc = subprocess.run(
@@ -77,6 +115,9 @@ def test_documented_cli_flags_parse():
         ["graph", "t", "--placements", "--stage", "train"],
         ["plan", "--arch", "glm4-9b", "--shape", "train_4k",
          "--goal", "production", "--budget", "400"],
+        ["explore", "--arch", "glm4-9b", "--shape", "train_4k",
+         "--chips", "8,16,32,64", "--preempt-rate", "0.05",
+         "--steps", "5000", "--goal", "production", "--no-report"],
         ["cache", "stats"],
         ["runs", "--runs-dir", "runs"],
         ["compare", "A", "B"],

@@ -1,0 +1,410 @@
+"""Cost-performance explorer: frontier exactness vs a brute-force
+oracle, deterministic golden reports, per-cell caching, incremental
+re-planning on catalog growth, and retry-aware cost monotonicity."""
+import numpy as np
+import pytest
+
+from repro.core import (
+    ExploreSpec,
+    ExploreStage,
+    ResourceIntent,
+    StageCache,
+    StageContext,
+    StageGraph,
+    plan,
+)
+from repro.core import costmodel
+from repro.core.catalog import (
+    CHIPS,
+    SliceType,
+    catalog_generation,
+    register_slice,
+    unregister_slice,
+)
+from repro.core.costmodel import retry_expected_cost
+from repro.core.explore import (
+    derived_shape,
+    explore,
+    frontier_table,
+    report_markdown,
+)
+from repro.core.planner import (
+    PLANNER_STATS,
+    clear_planner_cache,
+    reset_planner_stats,
+)
+from repro.ft.failures import RestartPolicy
+
+SPEC = ExploreSpec(
+    archs=("qwen2-1.5b",),
+    shapes=("train_4k",),
+    goals=("production", "exploration"),
+    chip_counts=(16, 32, 64),
+    preempt_rate_per_chip_hour=0.02,
+    steps=500,
+)
+
+
+# ===========================================================================
+# Frontier exactness
+# ===========================================================================
+def _brute_force_frontier(points):
+    """O(n²) weak-Pareto-dominance oracle on (step, cost, price):
+    dominated iff another point is ≤ on every axis and < on at least
+    one."""
+    out = []
+    for i, a in enumerate(points):
+        dominated = any(
+            b[0] <= a[0] and b[1] <= a[1] and b[2] <= a[2]
+            and (b[0] < a[0] or b[1] < a[1] or b[2] < a[2])
+            for j, b in enumerate(points) if j != i
+        )
+        if not dominated:
+            out.append(i)
+    return out
+
+
+def test_frontier_matches_brute_force_oracle():
+    result = explore(SPEC)
+    # rebuild the merged, deduped candidate set exactly as the engine
+    # does: every cell's full pruned survivor set, not just its top-k
+    seen = {}
+    for cr in result.cells:
+        for c in cr.survivors:
+            key = (cr.cell.arch, cr.shape_name, c.slice.name,
+                   tuple(c.mesh_shape), c.geometry)
+            seen.setdefault(key, c)
+    pts = [(c.est.step_s, c.est.cost_per_mtok, c.slice.price_per_hour)
+           for c in seen.values()]
+    keep = _brute_force_frontier(pts)
+    oracle = {pts[i] for i in keep}
+    got = {(p.choice.est.step_s, p.choice.est.cost_per_mtok,
+            p.choice.slice.price_per_hour) for p in result.frontier}
+    assert got == oracle
+    assert len(result.frontier) == len(keep)
+
+
+def test_frontier_has_no_weakly_dominated_points():
+    """No frontier row may lose on both step and $/Mtok to another row
+    while tied on $/h — the dilution a strict-dominance frontier
+    suffers when many candidates share a slice price."""
+    result = explore(SPEC)
+    pts = [(p.choice.est.step_s, p.choice.est.cost_per_mtok,
+            p.choice.slice.price_per_hour) for p in result.frontier]
+    for i, a in enumerate(pts):
+        for j, b in enumerate(pts):
+            if i == j:
+                continue
+            assert not (b[0] <= a[0] and b[1] <= a[1] and b[2] <= a[2]
+                        and (b[0] < a[0] or b[1] < a[1] or b[2] < a[2]))
+
+
+def test_frontier_sorted_and_nonempty():
+    result = explore(SPEC)
+    assert result.frontier, "expected a non-empty frontier"
+    steps = [p.choice.est.step_s for p in result.frontier]
+    assert steps == sorted(steps)
+
+
+def test_frontier_not_truncated_to_cell_topk():
+    """True frontier points that rank below top-k under every cell's
+    goal key must still appear (the merge runs over full survivor
+    sets, not the reported top-k)."""
+    spec = ExploreSpec(archs=("qwen2-1.5b",), shapes=("train_4k",),
+                       goals=("production",), chip_counts=(16, 32, 64),
+                       top_k=1)
+    result = explore(spec)
+    topk = set()
+    for cr in result.cells:
+        for c in cr.choices:
+            topk.add((cr.cell.arch, cr.shape_name, c.slice.name,
+                      tuple(c.mesh_shape), c.geometry))
+    frontier_keys = {(p.cell.arch, p.cell.shape_name(),
+                      p.choice.slice.name, tuple(p.choice.mesh_shape),
+                      p.choice.geometry) for p in result.frontier}
+    assert frontier_keys - topk, \
+        "frontier should surface plans beyond each cell's top-k"
+
+
+# ===========================================================================
+# Determinism / golden report
+# ===========================================================================
+def test_grid_determinism_across_runs():
+    clear_planner_cache()
+    a = report_markdown(explore(SPEC))
+    clear_planner_cache()
+    b = report_markdown(explore(SPEC))
+    assert a == b, "explore.md must be byte-deterministic"
+
+
+def test_golden_report_structure():
+    md = report_markdown(explore(SPEC))
+    assert md.startswith("# Cost-performance exploration")
+    assert "## Pareto frontier (step time × $/Mtok × $/h)" in md
+    assert "## Scaling (strong scaling per chip generation)" in md
+    assert "## Cells" in md
+    # one scaling family per generation with a feasible plan; v5e must
+    # be among them for this workload
+    assert "on v5e" in md
+    # the cells table has one row per grid cell
+    cells_section = md.split("## Cells")[1]
+    rows = [ln for ln in cells_section.splitlines()
+            if ln.startswith("| qwen2-1.5b ")]
+    assert len(rows) == len(SPEC.cell_specs()) == 6
+    # fixed float formats: no raw repr floats slip through
+    assert "e-0" not in md and "e+0" not in md
+
+
+def test_frontier_table_renders():
+    txt = frontier_table(explore(SPEC))
+    assert "#1" in txt and "E[$]=" in txt
+
+
+# ===========================================================================
+# Per-cell caching
+# ===========================================================================
+def test_cells_cached_per_grid_cell(tmp_path):
+    cache = StageCache(str(tmp_path / "cells"))
+    cold = explore(SPEC, cache=cache)
+    assert cold.cells_from_cache == 0
+    reset_planner_stats()
+    warm = explore(SPEC, cache=cache)
+    assert warm.cells_from_cache == len(SPEC.cell_specs())
+    # scaling families cache too: a fully warm sweep issues zero
+    # planner queries
+    assert PLANNER_STATS["plan_calls"] == 0
+    assert report_markdown(warm) == report_markdown(cold)
+    assert len(warm.scaling) == len(cold.scaling)
+
+
+def test_cell_cache_keys_include_catalog_generation(tmp_path):
+    cache = StageCache(str(tmp_path / "cells"))
+    explore(SPEC, cache=cache)
+    sl = register_slice(SliceType("v5e-gen-test", CHIPS["v5e"], 24, 1))
+    try:
+        again = explore(SPEC, cache=cache)
+        # catalog changed -> every cell must be re-planned, not restored
+        assert again.cells_from_cache == 0
+    finally:
+        unregister_slice(sl.name)
+
+
+# ===========================================================================
+# Incremental re-planning on catalog growth
+# ===========================================================================
+def test_catalog_growth_rescores_only_new_columns():
+    intent = ResourceIntent(arch="qwen2-1.5b", shape="train_4k",
+                            goal="production")
+    clear_planner_cache()
+    reset_planner_stats()
+    costmodel.reset_scoring_stats()
+    plan(intent, top_k=3)
+    full_rows = costmodel.SCORING_STATS["rows_scored"]
+    assert full_rows > 1000
+    assert PLANNER_STATS["cold_ranks"] == 1
+
+    # memo hit: no scoring at all
+    costmodel.reset_scoring_stats()
+    plan(intent, top_k=3)
+    assert costmodel.SCORING_STATS["rows_scored"] == 0
+    assert PLANNER_STATS["memo_hits"] == 1
+
+    sl = register_slice(SliceType("v5e-grow", CHIPS["v5e"], 24, 1))
+    try:
+        costmodel.reset_scoring_stats()
+        got = plan(intent, top_k=3)
+        new_rows = costmodel.SCORING_STATS["rows_scored"]
+        # only the new slice's (mesh x geometry) cells were scored
+        assert 0 < new_rows < full_rows / 10
+        assert PLANNER_STATS["stale_refreshes"] == 1
+        assert PLANNER_STATS["table_extensions"] == 1
+        # and the refreshed ranking matches a from-scratch scalar plan
+        oracle = plan(intent, top_k=3, engine="scalar")
+        assert ([(c.slice.name, c.mesh_shape, c.geometry) for c in got]
+                == [(c.slice.name, c.mesh_shape, c.geometry)
+                    for c in oracle])
+    finally:
+        unregister_slice(sl.name)
+        clear_planner_cache()
+
+
+def test_catalog_generation_bumps_on_mutation():
+    g0 = catalog_generation()
+    sl = register_slice(SliceType("v4-gen-probe", CHIPS["v4"], 24, 1))
+    try:
+        assert catalog_generation() == g0 + 1
+    finally:
+        unregister_slice(sl.name)
+    assert catalog_generation() == g0 + 2
+
+
+def test_register_slice_rejects_duplicates():
+    with pytest.raises(ValueError):
+        register_slice(SliceType("v5e-64", CHIPS["v5e"], 64, 1))
+
+
+# ===========================================================================
+# Retry-aware expected cost
+# ===========================================================================
+def test_retry_cost_monotone_in_failure_rate():
+    choice = plan(ResourceIntent(arch="qwen2-1.5b", shape="train_4k"),
+                  top_k=1)[0]
+    policy = RestartPolicy(max_restarts=5, backoff_s=30.0)
+    rates = [0.0, 0.001, 0.01, 0.05, 0.2, 1.0]
+    costs, hours, fails = [], [], []
+    for r in rates:
+        rc = retry_expected_cost(choice.est, choice.slice, 1000, r, policy)
+        costs.append(rc.expected_cost_usd)
+        hours.append(rc.expected_hours)
+        fails.append(rc.expected_failures)
+    assert costs == sorted(costs)
+    assert hours == sorted(hours)
+    assert fails == sorted(fails)
+    # rate 0 degenerates to the failure-free projection
+    rc0 = retry_expected_cost(choice.est, choice.slice, 1000, 0.0, policy)
+    assert rc0.expected_cost_usd == pytest.approx(rc0.base_cost_usd)
+    assert rc0.expected_failures == 0.0
+    assert rc0.backoff_s == 0.0
+
+
+def test_retry_cost_bounded_by_restore_frac():
+    choice = plan(ResourceIntent(arch="qwen2-1.5b", shape="train_4k"),
+                  top_k=1)[0]
+    rc = retry_expected_cost(choice.est, choice.slice, 1000,
+                             preempt_rate_per_chip_hour=1e9,
+                             restore_frac=0.5)
+    # wasted work saturates: E/(E+1) -> 1, so cost <= base * 1.5
+    assert rc.expected_cost_usd <= rc.base_cost_usd * 1.5 + 1e-9
+
+
+def test_expected_backoff_budget():
+    p = RestartPolicy(max_restarts=5, backoff_s=10.0, max_backoff_s=35.0,
+                      jitter=0.0)
+    assert p.expected_total_backoff_s(0.0) == 0.0
+    # 10 + 20 + 35(capped) = 65 for three failures
+    assert p.expected_total_backoff_s(3.0) == pytest.approx(65.0)
+    # fractional failures interpolate the next delay
+    assert p.expected_total_backoff_s(2.5) == pytest.approx(30.0 + 0.5 * 35)
+    # jitter scales by its mean factor
+    pj = RestartPolicy(max_restarts=5, backoff_s=10.0, max_backoff_s=35.0,
+                      jitter=0.2)
+    assert pj.expected_total_backoff_s(3.0) == pytest.approx(65.0 * 1.1)
+
+
+# ===========================================================================
+# Axes
+# ===========================================================================
+def test_global_batch_axis_derives_shapes():
+    name = derived_shape("train_4k", 128)
+    assert name == "train_4k@gb128"
+    from repro.configs import get_shape
+
+    s = get_shape(name)
+    assert s.global_batch == 128 and s.seq_len == 4096
+    # identity when the batch already matches
+    assert derived_shape("train_4k", 256) == "train_4k"
+
+    spec = ExploreSpec(archs=("qwen2-1.5b",), shapes=("train_4k",),
+                       goals=("production",), chip_counts=(32,),
+                       global_batches=(128, 256))
+    r = explore(spec)
+    assert len(r.cells) == 2
+    assert {c.shape_name for c in r.cells} == {"train_4k@gb128", "train_4k"}
+
+
+def test_scaling_report_efficiency_and_knee():
+    r = explore(ExploreSpec(archs=("qwen2-1.5b",), shapes=("train_4k",),
+                            goals=("exploration",),
+                            chip_counts=(16, 32, 64, 128),
+                            chip_generation="v5e"))
+    fams = [f for f in r.scaling if f.generation == "v5e"]
+    assert len(fams) == 1
+    rows = fams[0].rows
+    assert rows[0].efficiency == pytest.approx(1.0)
+    assert all(0 < x.efficiency <= 1.0 + 1e-9 for x in rows)
+    assert fams[0].knee_chips in [x.chips for x in rows]
+
+
+# ===========================================================================
+# ExploreStage
+# ===========================================================================
+def test_explore_stage_in_graph(tmp_path):
+    from repro.core import ProvenanceStore
+
+    store = ProvenanceStore(str(tmp_path / "runs"))
+    rec = store.create_run(template="explore-test", template_version="1",
+                           config={}, plan={})
+    g = StageGraph("explore-test")
+    g.add(ExploreStage(spec=SPEC))
+    ctx = StageContext(record=rec,
+                       cache=StageCache(str(tmp_path / "cells")))
+    results = g.execute(ctx, max_workers=1)
+    assert results["explore"].ok
+    report = ctx.get("explore_report")
+    assert report.startswith("# Cost-performance exploration")
+    import os
+
+    assert os.path.exists(os.path.join(rec.artifacts_dir, "explore.md"))
+    kinds = [e["kind"] for e in rec.events()]
+    assert "explore" in kinds
+
+    # second execution restores every cell from the stage cache
+    rec2 = store.create_run(template="explore-test", template_version="1",
+                            config={}, plan={})
+    ctx2 = StageContext(record=rec2,
+                        cache=StageCache(str(tmp_path / "cells")))
+    g2 = StageGraph("explore-test-2")
+    g2.add(ExploreStage(spec=SPEC))
+    g2.execute(ctx2, max_workers=1)
+    assert ctx2.get("explore_result").cells_from_cache == \
+        len(SPEC.cell_specs())
+
+
+def test_explore_stage_signature_sees_spec_and_generation():
+    """Two differently-specced ExploreStages must not share a resume/
+    cache hash, and a catalog mutation must change the identity."""
+    a = ExploreStage(spec=SPEC)
+    b = ExploreStage(spec=ExploreSpec(archs=("glm4-9b",),
+                                      chip_counts=(8,)))
+    assert a.signature() != b.signature()
+    sig0 = a.signature()
+    sl = register_slice(SliceType("v5e-sig-probe", CHIPS["v5e"], 48, 1))
+    try:
+        assert a.signature() != sig0
+    finally:
+        unregister_slice(sl.name)
+
+
+def test_explore_stage_requires_spec():
+    g = StageGraph("no-spec")
+    g.add(ExploreStage())
+    with pytest.raises(ValueError, match="ExploreSpec"):
+        g.execute(StageContext(), max_workers=1)
+
+
+# ===========================================================================
+# CLI
+# ===========================================================================
+def test_cli_explore_writes_deterministic_report(tmp_path, capsys):
+    from repro.launch.cli import build_parser
+
+    def run(runs_dir):
+        args = build_parser().parse_args([
+            "explore", "--arch", "qwen2-1.5b", "--shape", "train_4k",
+            "--chips", "16,32", "--runs-dir", str(runs_dir),
+        ])
+        args.fn(args)
+        out = capsys.readouterr().out
+        assert "frontier has" in out
+        import glob
+        import os
+
+        paths = glob.glob(str(runs_dir / "*" / "explore.md"))
+        assert len(paths) == 1
+        with open(paths[0], encoding="utf-8") as f:
+            return f.read()
+
+    a = run(tmp_path / "runs-a")
+    clear_planner_cache()
+    b = run(tmp_path / "runs-b")
+    assert a == b, "CLI explore.md must be byte-deterministic"

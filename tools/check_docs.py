@@ -1,5 +1,6 @@
-"""Docs link checker: fail on broken relative links/anchors in
-README.md and docs/*.md, so documentation can't rot silently.
+"""Docs link + symbol checker: fail on broken relative links/anchors in
+README.md and docs/*.md, and on backtick-quoted ``repro.*`` references
+that no longer resolve, so documentation can't rot silently.
 
     python tools/check_docs.py            # check the repo's docs
     python tools/check_docs.py --root X   # check another tree
@@ -11,6 +12,11 @@ Checks every markdown inline link ``[text](target)``:
     (anchors on relative targets are validated against that file's
     headings when it is markdown).
 
+Checks every inline code span that names a dotted ``repro.…`` path
+(e.g. `repro.core.explore.ExploreSpec`): the module must import and the
+trailing symbol must exist — the docs-rot class the link checker can't
+see (a renamed function leaves every link intact).
+
 Used by CI (see .github/workflows/ci.yml) and wrapped as a tier-1 test
 in tests/test_docs.py.
 """
@@ -18,6 +24,7 @@ from __future__ import annotations
 
 import argparse
 import glob
+import importlib
 import os
 import re
 import sys
@@ -29,6 +36,11 @@ _IMG_RE = re.compile(r"!\[[^\]]*\]\(([^)\s]+)(?:\s+\"[^\"]*\")?\)")
 _LINK_RE = re.compile(r"\[[^\]\[]*\]\(([^)\s]+)(?:\s+\"[^\"]*\")?\)")
 _HEADING_RE = re.compile(r"^#{1,6}\s+(.*)$", re.MULTILINE)
 _CODE_FENCE_RE = re.compile(r"```.*?```", re.DOTALL)
+# inline code spans that look like a dotted repro path: `repro.core.plan`
+# (plain dotted names only — spans with spaces, slashes, parens or
+# flags are commands/expressions, not symbol references)
+_CODE_SPAN_RE = re.compile(r"`([^`\n]+)`")
+_SYMBOL_RE = re.compile(r"^repro(\.\w+)+$")
 
 
 def _anchor_of(heading: str) -> str:
@@ -43,6 +55,45 @@ def _headings(md_path: str) -> List[str]:
     with open(md_path, encoding="utf-8") as f:
         text = _CODE_FENCE_RE.sub("", f.read())
     return [_anchor_of(h) for h in _HEADING_RE.findall(text)]
+
+
+def _resolvable(ref: str, src_dir: str) -> bool:
+    """Does dotted path ``ref`` import (as a module, or as module +
+    trailing attribute)?  ``src_dir`` is prepended to sys.path so the
+    check works without PYTHONPATH=src."""
+    if src_dir and src_dir not in sys.path:
+        sys.path.insert(0, src_dir)
+    try:
+        importlib.import_module(ref)
+        return True
+    except ImportError:
+        pass
+    except Exception:
+        return False
+    mod, _, attr = ref.rpartition(".")
+    try:
+        return hasattr(importlib.import_module(mod), attr)
+    except Exception:
+        return False
+
+
+def check_symbols(path: str, root: str) -> List[str]:
+    """Unresolvable ``repro.*`` code-span references in one file."""
+    errors: List[str] = []
+    rel = os.path.relpath(path, root)
+    with open(path, encoding="utf-8") as f:
+        text = _CODE_FENCE_RE.sub("", f.read())
+    src_dir = os.path.join(root, "src")
+    seen = set()
+    for m in _CODE_SPAN_RE.finditer(text):
+        ref = m.group(1).strip()
+        if ref in seen or not _SYMBOL_RE.match(ref):
+            continue
+        seen.add(ref)
+        if not _resolvable(ref, src_dir):
+            errors.append(f"{rel}: unresolvable reference `{ref}` "
+                          f"(import failed and no such attribute)")
+    return errors
 
 
 def doc_files(root: str) -> List[str]:
@@ -83,12 +134,14 @@ def check_file(path: str, root: str) -> List[str]:
     return errors
 
 
-def check_tree(root: str) -> Tuple[List[str], List[str]]:
+def check_tree(root: str, symbols: bool = True) -> Tuple[List[str], List[str]]:
     """(checked files, errors) for README.md + docs/*.md under root."""
     files = doc_files(root)
     errors: List[str] = []
     for path in files:
         errors.extend(check_file(path, root))
+        if symbols:
+            errors.extend(check_symbols(path, root))
     return files, errors
 
 
@@ -96,9 +149,12 @@ def main() -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--root", default=os.path.join(
         os.path.dirname(os.path.abspath(__file__)), ".."))
+    ap.add_argument("--no-symbols", action="store_true",
+                    help="skip the repro.* import-resolution check "
+                         "(links/anchors only)")
     args = ap.parse_args()
     root = os.path.abspath(args.root)
-    files, errors = check_tree(root)
+    files, errors = check_tree(root, symbols=not args.no_symbols)
     if not files:
         print(f"no docs found under {root}", file=sys.stderr)
         return 2
