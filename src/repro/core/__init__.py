@@ -57,6 +57,31 @@ from repro.core.planner import (
     rank,
     to_runtime_plan,
 )
+from repro.core.check import (
+    CODES,
+    CheckError,
+    CheckReport,
+    Diagnostic,
+    check_spec,
+    check_workflow,
+    insert_movement_stages,
+)
+from repro.core.spec import (
+    SPEC_VERSION,
+    DeclaredStage,
+    SpecError,
+    dump_spec,
+    dumps_spec,
+    from_spec,
+    load_spec,
+    load_workflow,
+    pack_template,
+    register_stage_type,
+    spec_for_template,
+    to_spec,
+    unpack_package,
+    validate_spec,
+)
 from repro.core.stagecache import RunManifest, StageCache
 from repro.core.provenance import (
     ProvenanceStore,
@@ -70,6 +95,7 @@ from repro.core.stages import (
     DataStage,
     EvalStage,
     ExploreStage,
+    MoveStage,
     PlanStage,
     ServeStage,
     TrainStage,
@@ -82,6 +108,7 @@ from repro.core.workflow import (
     WorkflowResult,
     WorkflowTemplate,
     compile_template,
+    resolve_placement_map,
     resolve_placements,
     run_workflow,
 )
@@ -105,9 +132,16 @@ __all__ = [
     "plan", "plan_stages", "prune_dominated", "rank", "to_runtime_plan",
     "ProvenanceStore", "RunRecord", "StageRecordView",
     "capture_environment", "stable_hash",
-    "CHECKS", "DataStage", "EvalStage", "ExploreStage", "PlanStage",
-    "ServeStage", "TrainStage", "ValidateStage", "VisualizeStage",
+    "CHECKS", "DataStage", "EvalStage", "ExploreStage", "MoveStage",
+    "PlanStage", "ServeStage", "TrainStage", "ValidateStage",
+    "VisualizeStage",
     "REGISTRY", "WorkflowRegistry", "WorkflowResult",
-    "WorkflowTemplate", "compile_template", "resolve_placements",
-    "run_workflow",
+    "WorkflowTemplate", "compile_template", "resolve_placement_map",
+    "resolve_placements", "run_workflow",
+    "SPEC_VERSION", "SpecError", "DeclaredStage", "register_stage_type",
+    "to_spec", "from_spec", "validate_spec", "dumps_spec", "dump_spec",
+    "load_spec", "load_workflow", "spec_for_template", "pack_template",
+    "unpack_package",
+    "CODES", "CheckError", "CheckReport", "Diagnostic", "check_spec",
+    "check_workflow", "insert_movement_stages",
 ]

@@ -52,6 +52,7 @@ from __future__ import annotations
 import dataclasses
 import threading
 import time
+from collections import deque
 from concurrent.futures import FIRST_COMPLETED, ThreadPoolExecutor, wait
 from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
@@ -91,6 +92,34 @@ def _describe(v):
 
 def _describe_outputs(out: Dict[str, Any]) -> Dict[str, Any]:
     return {k: _describe(out[k]) for k in sorted(out)}
+
+
+# attrs serialized at the spec *entry* level (ports, intent, policies) or
+# not serializable at all (name is the entry key) — everything else in
+# vars(stage) is constructor configuration and lands in the spec's
+# ``config`` block (see repro.core.spec)
+_SPEC_CONFIG_EXCLUDE = frozenset({
+    "name", "inputs", "outputs", "intent", "retry", "checks",
+    "placement_key", "resume_payload", "cacheable", "cache_params",
+    "cache_template_fields", "cache_version", "unpicklable_outputs",
+})
+
+
+def _spec_value(v: Any) -> Any:
+    """A JSON-able rendering of one constructor knob for the declarative
+    spec.  Non-JSON-able values become an explicit ``{"__opaque__":
+    <type>}`` marker instead of being dropped silently: the static
+    checker flags opaque knobs on cacheable stages (they hash by type
+    name only — see ADV008 in repro.core.check) and ``from_spec``
+    refuses to reconstruct an executable stage from them."""
+    if v is None or isinstance(v, (bool, int, float, str)):
+        return v
+    if isinstance(v, (list, tuple)):
+        return [_spec_value(x) for x in v]
+    if isinstance(v, dict):
+        return {str(k): _spec_value(v[k])
+                for k in sorted(v, key=str)}
+    return {"__opaque__": type(v).__name__}
 
 
 class CycleError(GraphError):
@@ -211,6 +240,12 @@ class Stage:
     # code-version salt: bump when the stage's implementation (or code it
     # calls into) changes output semantics, so stale entries can't hit
     cache_version: str = "1"
+    # declared output keys whose values cannot be pickled (live handles,
+    # jitted callables).  The run manifest / stage cache skip such
+    # payloads at runtime; declaring them lets the static checker warn
+    # *before* the run that resume/cache persistence will degrade
+    # (ADV009 in repro.core.check).
+    unpicklable_outputs: Tuple[str, ...] = ()
 
     def __init__(self, name: Optional[str] = None):
         if name is not None:
@@ -238,6 +273,25 @@ class Stage:
                 "version": self.cache_version,
                 "inputs": list(self.inputs), "outputs": list(self.outputs),
                 "config": _describe(cfg)}
+
+    # -- declarative spec (see repro.core.spec) -------------------------
+    def spec_config(self) -> Dict[str, Any]:
+        """This stage's constructor configuration as a JSON-able dict —
+        the ``config`` block of its spec entry.  Keys already serialized
+        at the entry level (ports, intent, retry, cache knobs) are
+        excluded; values that can't be rendered to JSON become
+        ``{"__opaque__": <type>}`` markers (see :func:`_spec_value`).
+        Override when ``vars(self)`` isn't the right inverse of
+        ``__init__`` (e.g. ExploreStage's nested spec dataclass)."""
+        return {k: _spec_value(v) for k, v in sorted(vars(self).items())
+                if not k.startswith("_") and k not in _SPEC_CONFIG_EXCLUDE}
+
+    @classmethod
+    def from_spec_config(cls, name: str, config: Dict[str, Any]) -> "Stage":
+        """Rebuild a stage from its spec entry's ``config`` block.  The
+        default assumes ``config`` keys are constructor kwargs — true
+        for every builtin stage; override alongside ``spec_config``."""
+        return cls(name, **config)
 
     def __repr__(self):
         return f"<{type(self).__name__} {self.name!r}>"
@@ -390,26 +444,48 @@ class StageGraph:
                     )
                 if d == name:
                     raise CycleError(f"stage {name!r} depends on itself")
+        producers: Dict[str, str] = {}
+        for name, stage in self._stages.items():
+            for key in stage.outputs:
+                first = producers.setdefault(key, name)
+                if first != name:
+                    raise GraphError(
+                        f"stages {first!r} and {name!r} both declare output "
+                        f"key {key!r}; the second to finish would silently "
+                        f"overwrite the first — rename one output (e.g. via "
+                        f"state_key=) or drop the duplicate stage"
+                    )
         self.topo_order()  # raises CycleError on cycles
+
+    def _successors(self) -> Dict[str, List[str]]:
+        """Successor adjacency (``dep -> [dependents...]``), dependents in
+        insertion order — built once per traversal instead of rescanning
+        every stage per completed node."""
+        succ: Dict[str, List[str]] = {n: [] for n in self._stages}
+        for m, deps in self._deps.items():
+            for d in deps:
+                if d in succ:
+                    succ[d].append(m)
+        return succ
 
     def topo_order(self) -> List[str]:
         """Kahn's algorithm; ready stages drain in insertion order, so the
         result is deterministic for a given construction sequence."""
         indeg = {n: 0 for n in self._stages}
+        succ = self._successors()
         for n, deps in self._deps.items():
             for d in deps:
                 if d in indeg:
                     indeg[n] += 1
         order: List[str] = []
-        ready = [n for n in self._stages if indeg[n] == 0]
+        ready = deque(n for n in self._stages if indeg[n] == 0)
         while ready:
-            n = ready.pop(0)
+            n = ready.popleft()
             order.append(n)
-            for m in self._stages:
-                if n in self._deps[m]:
-                    indeg[m] -= 1
-                    if indeg[m] == 0:
-                        ready.append(m)
+            for m in succ[n]:
+                indeg[m] -= 1
+                if indeg[m] == 0:
+                    ready.append(m)
         if len(order) != len(self._stages):
             stuck = sorted(set(self._stages) - set(order))
             raise CycleError(f"cycle among stages {stuck} in graph {self.name!r}")
@@ -487,6 +563,7 @@ class StageGraph:
         raised it."""
         self.validate()
         indeg = {n: sum(1 for d in self._deps[n]) for n in self._stages}
+        succ = self._successors()
         ready = [n for n in self.topo_order() if indeg[n] == 0]
         results: Dict[str, StageResult] = {}
         pending: Dict[Any, str] = {}
@@ -520,11 +597,10 @@ class StageGraph:
                     if err is not None:
                         failure = failure or err
                         continue
-                    for m in self._stages:
-                        if name in self._deps[m]:
-                            indeg[m] -= 1
-                            if indeg[m] == 0 and failure is None:
-                                _launch(pool, m)
+                    for m in succ[name]:
+                        indeg[m] -= 1
+                        if indeg[m] == 0 and failure is None:
+                            _launch(pool, m)
         if failure is not None:
             raise failure
         return results
@@ -770,6 +846,11 @@ class _SubworkflowStage(Stage):
             k for n in order for k in graph.stages[n].inputs))
         self.outputs = tuple(dict.fromkeys(
             k for n in order for k in graph.stages[n].outputs))
+
+    def spec_config(self) -> Dict[str, Any]:
+        # the inner graph serializes as a nested "graph" block in the
+        # spec entry (see repro.core.spec), not as opaque config
+        return {"max_workers": self.max_workers}
 
     def run(self, ctx: StageContext) -> Dict[str, Any]:
         # extend the prefix we were launched under, so doubly-nested

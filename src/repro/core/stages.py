@@ -430,6 +430,24 @@ class ExploreStage(Stage):
         self.spec = spec
         self.report_name = report_name
 
+    def spec_config(self) -> Dict[str, Any]:
+        """Serialize the nested ExploreSpec by field instead of letting
+        the base class emit an ``__opaque__`` marker for it."""
+        cfg = super().spec_config()
+        cfg["spec"] = (dataclasses.asdict(self.spec)
+                       if self.spec is not None else None)
+        return cfg
+
+    @classmethod
+    def from_spec_config(cls, name: str, config: Dict[str, Any]) -> "ExploreStage":
+        from repro.core.explore import ExploreSpec
+
+        config = dict(config)
+        spec = config.pop("spec", None)
+        if spec is not None:
+            spec = ExploreSpec(**spec)  # __post_init__ re-tuples the axes
+        return cls(name, spec=spec, **config)
+
     def signature(self) -> Dict[str, Any]:
         """Fold the constructor spec and the catalog generation into the
         stage identity: the base signature() keeps only primitive attrs,
@@ -468,6 +486,45 @@ class ExploreStage(Stage):
                 "report": path,
             })
         return {"explore_result": result, "explore_report": report}
+
+
+# ===========================================================================
+# Move
+# ===========================================================================
+class MoveStage(Stage):
+    """Explicit cross-backend data movement for one context key.
+
+    Inserted (by hand, or by :func:`repro.core.check.insert_movement_stages`)
+    between a producer and a consumer the planner bound to *different*
+    slices, where the implicit shared-blackboard handoff would hide a
+    real transfer.  In this single-process harness the blackboard already
+    holds the value, so the stage's job is to make the movement a
+    first-class, observable step: it verifies the key is present,
+    emits a ``data_move`` provenance event with a structural size
+    summary, and acts as an ordering barrier (consumers are rewired to
+    depend on it).  It declares no outputs — the key stays owned by its
+    producer, so inserting a move can never trip the duplicate-producer
+    validation.
+    """
+
+    def __init__(self, name: str, key: str = "", src: str = "", dst: str = ""):
+        super().__init__(name)
+        self.key = key
+        self.src = src
+        self.dst = dst
+        self.inputs = (key,) if key else ()
+
+    def run(self, ctx: StageContext) -> Dict[str, Any]:
+        from repro.core.graph import _describe
+
+        value = ctx.get(self.key)
+        if ctx.record is not None:
+            ctx.record.log_event("data_move", {
+                "stage": self.name, "key": self.key,
+                "src": self.src, "dst": self.dst,
+                "value": _describe(value),
+            })
+        return {}
 
 
 # ===========================================================================

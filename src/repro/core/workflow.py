@@ -157,6 +157,20 @@ class WorkflowRegistry:
             (n, v, t.description) for (n, v), t in self._templates.items()
         )
 
+    def register_from_spec(self, doc_or_path: Any) -> WorkflowTemplate:
+        """Register the template carried by a package document (or a
+        path to one) — how a shared ``pack`` artifact enters another
+        user's registry."""
+        from repro.core.spec import (SpecError, load_spec, unpack_package)
+
+        doc = (load_spec(doc_or_path) if isinstance(doc_or_path, str)
+               else doc_or_path)
+        template, _, _ = unpack_package(doc)
+        if template is None:
+            raise SpecError("package carries no template block")
+        self.register(template)
+        return template
+
 
 REGISTRY = WorkflowRegistry()
 
@@ -224,40 +238,63 @@ def compile_template(t: WorkflowTemplate, *, with_eval: bool = False) -> StageGr
     return g
 
 
-def resolve_placements(
-    t: WorkflowTemplate,
+def resolve_placement_map(
     graph: StageGraph,
+    *,
+    template: Optional[WorkflowTemplate] = None,
     intent: Optional[ResourceIntent] = None,
-) -> Dict[str, str]:
-    """Static preview of per-stage backend bindings (``graph
-    --placements``): the same resolution the scheduler applies at launch
-    time — a stage's entry in the PlanStage's ``stage_goals``, its own
-    ``intent``, or the main workload's plan for ``placement_key ==
-    "__main__"`` stages.  Returns render strings keyed by stage name;
-    stages with no resolvable backend are omitted (they run locally)."""
+) -> Dict[str, Optional[Placement]]:
+    """Static preview of per-stage backend bindings — the same
+    resolution the scheduler applies at launch time: a stage's entry in
+    the PlanStage's ``stage_goals``, its own ``intent``, or the main
+    workload's plan for ``placement_key == "__main__"`` stages.
+
+    Returns :class:`Placement` objects keyed by stage name; ``None``
+    marks a stage that runs on the coordinator (PlanStage); stages with
+    no resolvable backend are omitted (they run locally).  ``intent``
+    defaults to the template's; with neither, only per-stage intents
+    resolve.  This is the single source for the CLI's placement
+    rendering and the checker's placement-gap analysis (ADV005)."""
     from repro.core.planner import plan_stages
 
-    intent = intent or t.default_intent()
-    intents: Dict[str, ResourceIntent] = {"__main__": intent}
-    for s in graph.stages.values():
-        if isinstance(s, PlanStage):
-            for stage_name, goal in s.stage_goals.items():
-                intents[stage_name] = intent.with_goal(goal)
+    if intent is None and template is not None:
+        intent = template.default_intent()
+    intents: Dict[str, ResourceIntent] = {}
+    if intent is not None:
+        intents["__main__"] = intent
+        for s in graph.stages.values():
+            if isinstance(s, PlanStage):
+                for stage_name, goal in s.stage_goals.items():
+                    intents[stage_name] = intent.with_goal(goal)
     for s in graph.stages.values():
         # mirror the scheduler's order: a stage_goals entry wins over the
         # stage's own intent (which is only the runtime fallback)
         if s.intent is not None:
             intents.setdefault(s.name, s.intent)
-    plans = plan_stages(intents)
+    plans = plan_stages(intents) if intents else {}
     main = plans.pop("__main__", None)
-    out: Dict[str, str] = {}
+    out: Dict[str, Optional[Placement]] = {}
     for name, s in graph.stages.items():
         choice = main if s.placement_key == "__main__" else plans.get(name)
         if choice is not None:
-            out[name] = Placement.from_choice(name, choice).render()
+            out[name] = Placement.from_choice(name, choice)
         elif isinstance(s, PlanStage):
-            out[name] = "coordinator (local)"
+            out[name] = None  # coordinator (local)
     return out
+
+
+def resolve_placements(
+    t: WorkflowTemplate,
+    graph: StageGraph,
+    intent: Optional[ResourceIntent] = None,
+) -> Dict[str, str]:
+    """Render-string form of :func:`resolve_placement_map` (the CLI's
+    ``graph --placements``)."""
+    return {
+        name: (p.render() if p is not None else "coordinator (local)")
+        for name, p in resolve_placement_map(
+            graph, template=t, intent=intent).items()
+    }
 
 
 # ===========================================================================
@@ -295,6 +332,8 @@ def run_workflow(
     stage_retry: Optional[RestartPolicy] = None,
     resume: Optional[str] = None,
     resume_store: bool = True,
+    graph: Optional[StageGraph] = None,
+    check: bool = False,
 ) -> WorkflowResult:
     """Execute a workflow end-to-end on the local backend.
 
@@ -336,15 +375,36 @@ def run_workflow(
     again — projections are per-attempt authorizations, not metered
     usage — and the plan stage always re-authorizes on resume while a
     ledger is attached (see ``PlanStage.resume_safe``).
+
+    ``graph`` substitutes a pre-built StageGraph (e.g. one reloaded
+    from a packed workflow spec) for the canonical compiled one;
+    ``check=True`` runs the static checker
+    (:func:`repro.core.check.check_workflow`) as a pre-flight gate,
+    raising :class:`repro.core.check.CheckError` on any error-severity
+    diagnostic before a run record is created or budget authorized
+    (the CLI's ``run --check``).
     """
     t = template
-    graph = compile_template(t, with_eval=with_eval)
+    graph = graph if graph is not None else compile_template(
+        t, with_eval=with_eval)
     if stages:
         graph = graph.subgraph(stages)
 
     # resolve the intent up-front so run_id/config_hash cover it (same
     # hashing the monolith did) and PlanStage plans exactly this intent
     intent = intent or t.default_intent()
+
+    if check:
+        from repro.core.check import CheckError, check_workflow
+        from repro.core.spec import default_results, default_waivers
+
+        report = check_workflow(
+            graph, template=t, intent=intent,
+            results=default_results(graph), waivers=default_waivers(t),
+            steps=steps_override or t.num_steps,
+        )
+        if not report.ok:
+            raise CheckError(report)
     if resume is not None:
         record = store.load(resume)
         if record.manifest.get("template") != t.name:

@@ -47,6 +47,20 @@
     # render each stage's resolved backend (slice + mesh)
     python -m repro.launch.cli graph train-qwen2-1.5b --placements
 
+    # static pre-execution checking (diagnostic codes ADV001..ADV011;
+    # see docs/checking-workflows.md) and the run pre-flight gate
+    python -m repro.launch.cli check train-qwen2-1.5b
+    python -m repro.launch.cli check my-workflow.json --json
+    python -m repro.launch.cli check --all-templates
+    python -m repro.launch.cli run train-qwen2-1.5b --check --steps 20
+
+    # shareable workflow artifacts: pack a template + params into one
+    # file, check/run it anywhere, unpack to inspect the spec
+    python -m repro.launch.cli pack train-qwen2-1.5b --param steps_override=5
+    python -m repro.launch.cli check train-qwen2-1.5b.pack.json
+    python -m repro.launch.cli run train-qwen2-1.5b.pack.json
+    python -m repro.launch.cli unpack train-qwen2-1.5b.pack.json --out-dir specs
+
     # cost-performance exploration: sweep a grid of (arch x shape x goal
     # x chip-count), print the Pareto frontier, and write a deterministic
     # Markdown report into runs/<id>/explore.md
@@ -148,11 +162,36 @@ def cmd_explore(args) -> None:
         print(f"report: {path}")
 
 
+def _looks_like_spec_path(target: str) -> bool:
+    import os
+
+    return (target.endswith((".json", ".yaml", ".yml"))
+            or os.path.sep in target or os.path.exists(target))
+
+
+def _load_run_target(args):
+    """(template, graph, params) for `run`: a registry template name, or
+    a path to a packed workflow artifact (kind: package)."""
+    from repro.core import REGISTRY, SpecError, load_workflow
+
+    if _looks_like_spec_path(args.template):
+        t, graph, params, _ = load_workflow(args.template, strict=True)
+        if t is None:
+            raise SpecError(
+                f"{args.template}: workflow-kind specs carry no template; "
+                f"`run` needs a package artifact (see `pack`)")
+        return t, graph, params
+    return REGISTRY.get(args.template, args.version), None, {}
+
+
 def cmd_run(args) -> None:
-    from repro.core import REGISTRY, ProvenanceStore, StageCache, run_workflow
+    from repro.core import ProvenanceStore, StageCache, run_workflow
+    from repro.core.check import CheckError
     from repro.ft.failures import RestartPolicy
 
-    t = REGISTRY.get(args.template, args.version)
+    t, graph, params = _load_run_target(args)
+    if args.steps is None and params.get("steps_override") is not None:
+        args.steps = int(params["steps_override"])
     if args.override:
         overrides = {}
         for kv in args.override:
@@ -170,17 +209,24 @@ def cmd_run(args) -> None:
     if args.stage_retries:
         retry = RestartPolicy(max_restarts=args.stage_retries,
                               backoff_s=args.stage_backoff)
-    res = run_workflow(t, store, user=args.user, workspace=args.workspace,
-                       steps_override=args.steps,
-                       stages=args.stage or None,
-                       with_eval=args.with_eval,
-                       cache=cache,
-                       serve_engine=args.serve_engine,
-                       serve_chunk=args.serve_chunk,
-                       donate=not args.no_donate,
-                       stage_retry=retry,
-                       resume=args.resume,
-                       resume_store=not args.no_run_manifest)
+    try:
+        res = run_workflow(t, store, user=args.user, workspace=args.workspace,
+                           steps_override=args.steps,
+                           stages=args.stage or None,
+                           with_eval=args.with_eval,
+                           cache=cache,
+                           serve_engine=args.serve_engine,
+                           serve_chunk=args.serve_chunk,
+                           donate=not args.no_donate,
+                           stage_retry=retry,
+                           resume=args.resume,
+                           resume_store=not args.no_run_manifest,
+                           graph=graph,
+                           check=args.check)
+    except CheckError as e:
+        print(e.report.render())
+        print("pre-flight check failed; nothing was provisioned or run")
+        sys.exit(1)
     print(f"run {res.record.run_id}: ok={res.ok}")
     for name, sr in res.stage_results.items():
         status = "ok" if sr.ok else "FAIL"
@@ -205,6 +251,124 @@ def cmd_graph(args) -> None:
         g = g.subgraph(args.stage)
     placements = resolve_placements(t, g) if args.placements else None
     print(g.render(placements=placements))
+
+
+def cmd_check(args) -> None:
+    from repro.core import REGISTRY, load_spec, pack_template
+    from repro.core.check import check_spec
+
+    def _doc_for(target):
+        if _looks_like_spec_path(target):
+            return load_spec(target)
+        # template names check as their package (the template block is
+        # what gives the checker an intent for placement/planner passes)
+        return pack_template(REGISTRY.get(target, args.version),
+                             with_eval=args.with_eval)
+
+    if args.all_templates:
+        names = sorted({n for n, _, _ in REGISTRY.list()})
+    elif args.target:
+        names = [args.target]
+    else:
+        print("check: give a template name / spec path, "
+              "or --all-templates", file=sys.stderr)
+        sys.exit(2)
+
+    reports = []
+    for target in names:
+        report = check_spec(_doc_for(target),
+                            targets=args.stage or None,
+                            steps=args.steps,
+                            budget_usd=args.budget_usd)
+        reports.append(report)
+        if args.json:
+            print(json.dumps(report.as_doc(), indent=1))
+        else:
+            print(report.render())
+    if args.lowered_out:
+        _write_lowered(names[0], _doc_for(names[0]), args.lowered_out)
+    if not all(r.ok for r in reports):
+        sys.exit(1)
+
+
+def _write_lowered(target, doc, out_path) -> None:
+    """The ADV005 fix, applied: rebuild the checked workflow with
+    movement stages inserted and write it back out as a spec."""
+    from repro.core import dump_spec, from_spec, to_spec, unpack_package
+    from repro.core.check import insert_movement_stages
+
+    template, wf_doc = None, doc
+    if doc.get("kind") == "package":
+        template, wf_doc, _ = unpack_package(doc)
+    graph = from_spec(wf_doc, strict=False)
+    lowered = insert_movement_stages(graph, template=template)
+    dump_spec(to_spec(lowered, name=wf_doc.get("name"),
+                      results=wf_doc.get("results"),
+                      external_inputs=wf_doc.get("external_inputs", ()),
+                      budget_usd=wf_doc.get("budget_usd")), out_path)
+    moves = len(lowered.stages) - len(graph.stages)
+    print(f"lowered {target}: inserted {moves} movement stage(s) "
+          f"-> {out_path}")
+
+
+def cmd_pack(args) -> None:
+    import os
+
+    from repro.core import REGISTRY, dump_spec, pack_template
+
+    t = REGISTRY.get(args.template, args.version)
+    if args.override:
+        overrides = {}
+        for kv in args.override:
+            k, v = kv.split("=", 1)
+            try:
+                v = json.loads(v)
+            except json.JSONDecodeError:
+                pass
+            overrides[k] = v
+        t = t.with_overrides(**overrides)
+    params = {}
+    for kv in args.param:
+        k, v = kv.split("=", 1)
+        try:
+            v = json.loads(v)
+        except json.JSONDecodeError:
+            pass
+        params[k] = v
+    out = args.out or f"{t.name}.pack.json"
+    if os.path.exists(out) and not args.force:
+        print(f"{out} exists; use --force to overwrite", file=sys.stderr)
+        sys.exit(1)
+    doc = pack_template(t, with_eval=args.with_eval, params=params)
+    dump_spec(doc, out)
+    print(f"packed {t.name} v{t.version} "
+          f"({len(doc['workflow']['stages'])} stages"
+          f"{', ' + str(len(params)) + ' param(s)' if params else ''}) "
+          f"-> {out}")
+
+
+def cmd_unpack(args) -> None:
+    import os
+
+    from repro.core import dump_spec, load_spec, unpack_package
+
+    doc = load_spec(args.artifact)
+    template, wf_doc, params = unpack_package(doc)
+    os.makedirs(args.out_dir, exist_ok=True)
+    name = doc.get("name", "workflow")
+    wf_path = os.path.join(args.out_dir, f"{name}.workflow.json")
+    dump_spec(wf_doc, wf_path)
+    print(f"workflow -> {wf_path} ({len(wf_doc['stages'])} stages)")
+    if template is not None:
+        if args.register:
+            from repro.core import REGISTRY
+
+            REGISTRY.register(template)
+            print(f"registered template {template.name} v{template.version}")
+        print(f"template: {template.name} v{template.version} "
+              f"({template.kind}, arch={template.arch})")
+    if params:
+        print(f"params: {json.dumps(params, sort_keys=True)}")
 
 
 def cmd_catalog(args) -> None:
@@ -319,9 +483,15 @@ def build_parser() -> argparse.ArgumentParser:
                         "runs/<id>/explore.md report artifact")
     p.set_defaults(fn=cmd_explore)
 
-    p = sub.add_parser("run", help="run a workflow template")
-    p.add_argument("template")
+    p = sub.add_parser("run", help="run a workflow template or packed "
+                                   "artifact")
+    p.add_argument("template",
+                   help="registry template name, or path to a packed "
+                        "workflow artifact (see `pack`)")
     p.add_argument("--version", default=None)
+    p.add_argument("--check", action="store_true",
+                   help="pre-flight static check (see `check`); abort "
+                        "before provisioning on any error diagnostic")
     p.add_argument("--steps", type=int, default=None)
     p.add_argument("--override", action="append", default=[],
                    help="param injection, e.g. optimizer.lr=0.001")
@@ -376,6 +546,63 @@ def build_parser() -> argparse.ArgumentParser:
                    help="also resolve and render each stage's backend "
                         "(slice + mesh) via the planner")
     p.set_defaults(fn=cmd_graph)
+
+    p = sub.add_parser("check", help="static pre-execution workflow "
+                                     "checker (diagnostic codes ADV001+)")
+    p.add_argument("target", nargs="?", default=None,
+                   help="template name, or path to a workflow/package "
+                        "spec (.json/.yaml)")
+    p.add_argument("--version", default=None,
+                   help="template version (names only)")
+    p.add_argument("--with-eval", action="store_true",
+                   help="check the template graph with the EvalStage "
+                        "included")
+    p.add_argument("--all-templates", action="store_true",
+                   help="check every registered template (CI smoke)")
+    p.add_argument("--stage", action="append", default=[],
+                   help="check the `run --stage` subgraph of these "
+                        "targets; repeatable")
+    p.add_argument("--steps", type=int, default=None,
+                   help="projection horizon for the budget check "
+                        "(ADV007); default: the template's num_steps")
+    p.add_argument("--budget-usd", type=float, default=None,
+                   help="budget envelope for ADV007 (overrides the "
+                        "spec's budget_usd)")
+    p.add_argument("--json", action="store_true",
+                   help="emit the report as JSON instead of text")
+    p.add_argument("--lowered-out", default=None, metavar="PATH",
+                   help="also write the movement-lowered workflow spec "
+                        "(the ADV005 fix) to PATH")
+    p.set_defaults(fn=cmd_check)
+
+    p = sub.add_parser("pack", help="bundle a template + workflow + "
+                                    "params into one shareable artifact")
+    p.add_argument("template")
+    p.add_argument("--version", default=None)
+    p.add_argument("--with-eval", action="store_true",
+                   help="include the held-out EvalStage in the packed "
+                        "graph")
+    p.add_argument("-o", "--out", default=None,
+                   help="output path (default <template>.pack.json)")
+    p.add_argument("--param", action="append", default=[],
+                   help="run param default baked into the artifact, "
+                        "e.g. steps_override=5; repeatable")
+    p.add_argument("--override", action="append", default=[],
+                   help="template param injection before packing, "
+                        "e.g. optimizer.lr=0.001; repeatable")
+    p.add_argument("--force", action="store_true",
+                   help="overwrite an existing output file")
+    p.set_defaults(fn=cmd_pack)
+
+    p = sub.add_parser("unpack", help="explode a packed artifact into "
+                                      "its workflow spec + template")
+    p.add_argument("artifact", help="path to a .pack.json artifact")
+    p.add_argument("--out-dir", default=".",
+                   help="directory for the extracted workflow spec")
+    p.add_argument("--register", action="store_true",
+                   help="also register the carried template in this "
+                        "process's registry")
+    p.set_defaults(fn=cmd_unpack)
 
     p = sub.add_parser("catalog", help="list slice types")
     p.set_defaults(fn=cmd_catalog)

@@ -1,0 +1,330 @@
+"""Static workflow checking (repro.core.check): the diagnostic catalog,
+per-code unit triggers, the badspec corpus, clean bills of health for
+every registry template and shipped example, waiver semantics, the
+movement-lowering pass, and the CLI check/pack/unpack verbs."""
+import glob
+import json
+import os
+
+import pytest
+
+from repro.core import (
+    CODES,
+    REGISTRY,
+    CheckError,
+    ResourceIntent,
+    StageGraph,
+    check_spec,
+    check_workflow,
+    compile_template,
+    insert_movement_stages,
+    pack_template,
+    run_workflow,
+)
+from repro.core.spec import DeclaredStage, default_waivers, spec_for_template
+from repro.launch.cli import build_parser
+
+HERE = os.path.dirname(__file__)
+BADSPECS = sorted(glob.glob(os.path.join(HERE, "badspecs", "*.json")))
+EXAMPLES = sorted(glob.glob(os.path.join(HERE, "..", "examples", "specs",
+                                         "*.json")))
+
+
+def _codes(report):
+    return {d.code for d in report.diagnostics}
+
+
+def _graph(rows):
+    """rows: (name, deps, inputs, outputs) → DeclaredStage graph."""
+    g = StageGraph("t")
+    for name, deps, inputs, outputs in rows:
+        g.add(DeclaredStage(name, inputs=inputs, outputs=outputs),
+              depends_on=deps)
+    return g
+
+
+# ===========================================================================
+# Catalog sanity
+# ===========================================================================
+def test_catalog_is_stable():
+    assert sorted(CODES) == [f"ADV{i:03d}" for i in range(1, 12)]
+    assert all(sev in ("error", "warning") for sev, _ in CODES.values())
+
+
+# ===========================================================================
+# Per-code unit triggers
+# ===========================================================================
+def test_adv001_missing_producer():
+    g = _graph([("a", (), ("ghost",), ("x",))])
+    report = check_workflow(g, results=("x",))
+    assert _codes(report) == {"ADV001"}
+    assert not report.ok
+
+
+def test_adv001_respects_external_inputs():
+    g = _graph([("a", (), ("ghost",), ("x",))])
+    report = check_workflow(g, external_inputs=("ghost",), results=("x",))
+    assert report.ok and not report.diagnostics
+
+
+def test_adv002_dead_output():
+    g = _graph([("a", (), (), ("x", "debris"))])
+    report = check_workflow(g, results=("x",))
+    assert _codes(report) == {"ADV002"}
+    assert report.ok  # warnings don't fail the check
+
+
+def test_adv003_duplicate_producers():
+    # duplicate outputs are a hard graph error too, so build the graph
+    # behind validate()'s back the way a hand-edited spec could
+    g = _graph([("a", (), (), ("x",)), ("b", ("a",), (), ())])
+    g.stages["b"].outputs = ("x",)
+    report = check_workflow(g)
+    assert "ADV003" in _codes(report)
+    msg = next(d for d in report.diagnostics if d.code == "ADV003").message
+    assert "'a'" in msg and "'b'" in msg
+
+
+def test_adv004_non_ancestor_producer():
+    g = _graph([("a", (), (), ("x",)),
+                ("b", (), ("x",), ("y",))])  # no a→b edge
+    report = check_workflow(g, results=("y",))
+    assert _codes(report) == {"ADV004"}
+
+
+def test_adv004_clean_when_ordered():
+    g = _graph([("a", (), (), ("x",)),
+                ("b", ("a",), ("x",), ("y",))])
+    report = check_workflow(g, results=("y",))
+    assert report.ok and not report.diagnostics
+
+
+def test_adv005_cross_slice_gap_and_waiver():
+    g = _graph([("a", (), (), ("x",)),
+                ("b", ("a",), ("x",), ("y",))])
+    slices = {"a": "v5p-4", "b": "v5e-128"}
+    report = check_workflow(g, results=("y",), slices=slices)
+    assert _codes(report) == {"ADV005"}
+    waived = check_workflow(
+        g, results=("y",), slices=slices,
+        waivers=({"code": "ADV005", "stage": None, "reason": "one host"},))
+    assert not waived.diagnostics
+    assert [d.code for d in waived.waived] == ["ADV005"]
+    # a stage-scoped waiver for a different stage does not match
+    miss = check_workflow(
+        g, results=("y",), slices=slices,
+        waivers=({"code": "ADV005", "stage": "other", "reason": "no"},))
+    assert _codes(miss) == {"ADV005"}
+
+
+def test_adv006_infeasible_intent():
+    g = _graph([("a", (), (), ("x",))])
+    impossible = ResourceIntent(arch="qwen2-1.5b", shape="train_4k",
+                                goal="throughput",
+                                budget_usd_per_hour=0.0001)
+    report = check_workflow(g, results=("x",), intent=impossible)
+    assert "ADV006" in _codes(report)
+
+
+def test_adv007_over_budget():
+    t = REGISTRY.get("train-qwen2-1.5b")
+    g = compile_template(t)
+    report = check_workflow(g, template=t, waivers=default_waivers(t),
+                            budget_usd=0.000001, steps=t.num_steps)
+    assert "ADV007" in _codes(report)
+    assert not report.ok
+
+
+def test_adv008_cache_opaque_config():
+    g = StageGraph("t")
+    s = DeclaredStage("a", outputs=("x",),
+                      config={"builder": {"__opaque__": "function"}})
+    s.cacheable = True
+    g.add(s)
+    report = check_workflow(g, results=("x",))
+    assert _codes(report) == {"ADV008"}
+
+
+def test_adv009_unpicklable_under_resume():
+    g = StageGraph("t")
+    s = DeclaredStage("a", outputs=("handle",))
+    s.resume_payload = True
+    s.unpicklable_outputs = ("handle",)
+    g.add(s)
+    report = check_workflow(g, results=("handle",))
+    assert _codes(report) == {"ADV009"}
+
+
+def test_adv011_unknown_target():
+    g = _graph([("a", (), (), ("x",))])
+    report = check_workflow(g, targets=("nope",))
+    assert _codes(report) == {"ADV011"}
+    assert not report.ok
+
+
+def test_targets_subgraph_hints_excluded_producer():
+    t = REGISTRY.get("train-qwen2-1.5b")
+    g = compile_template(t)
+    report = check_workflow(g, targets=("validate",),
+                            results=("checks",))
+    # validate's ancestors (plan/data/train) ride along, so this is clean
+    assert report.ok
+
+
+# ===========================================================================
+# Templates & shipped artifacts check clean
+# ===========================================================================
+@pytest.mark.parametrize("name", sorted({n for n, _, _ in REGISTRY.list()}))
+def test_registry_template_checks_clean(name):
+    report = check_spec(pack_template(REGISTRY.get(name)))
+    assert report.ok, report.render()
+    assert not report.errors and not report.warnings
+    # the cross-slice gaps are acknowledged, not absent
+    if any(d.code == "ADV005" for d in report.waived):
+        assert all(d.code == "ADV005" for d in report.waived)
+
+
+@pytest.mark.parametrize("path", EXAMPLES,
+                         ids=[os.path.basename(p) for p in EXAMPLES])
+def test_shipped_example_checks_clean(path):
+    with open(path, encoding="utf-8") as f:
+        doc = json.load(f)
+    report = check_spec(doc)
+    assert report.ok, report.render()
+
+
+# ===========================================================================
+# Badspec corpus: every file fails with its advertised codes
+# ===========================================================================
+@pytest.mark.parametrize("path", BADSPECS,
+                         ids=[os.path.basename(p) for p in BADSPECS])
+def test_badspec_fires_expected_codes(path):
+    with open(path, encoding="utf-8") as f:
+        doc = json.load(f)
+    expect = set(doc["meta"]["expect"])
+    report = check_spec(doc)
+    got = _codes(report)
+    assert expect <= got, f"{path}: expected {expect}, got {got}"
+    if any(CODES[c][0] == "error" for c in expect):
+        assert not report.ok
+
+
+# ===========================================================================
+# Lowering pass
+# ===========================================================================
+def test_insert_movement_stages_clears_adv005():
+    t = REGISTRY.get("train-qwen2-1.5b")
+    g = compile_template(t)
+    before = check_workflow(g, template=t)
+    gap_keys = sorted({d.key for d in before.diagnostics
+                       if d.code == "ADV005"})
+    assert gap_keys == ["cfg", "shape", "stream"]
+    lowered = insert_movement_stages(g, template=t)
+    assert list(lowered.stages) == [
+        "plan", "data",
+        "move.cfg.v5p-4.v5e-128",
+        "move.shape.v5p-4.v5e-128",
+        "move.stream.v5p-4.v5e-128",
+        "train", "validate", "visualize",
+    ]
+    after = check_workflow(lowered, template=t)
+    assert not any(d.code == "ADV005" for d in after.diagnostics)
+
+
+def test_insert_movement_stages_noop_without_gaps():
+    g = _graph([("a", (), (), ("x",)), ("b", ("a",), ("x",), ("y",))])
+    assert insert_movement_stages(g, slices={}) is g
+
+
+def test_lowered_graph_still_executes(tmp_path):
+    from repro.core import ProvenanceStore
+    t = REGISTRY.get("train-qwen2-1.5b")
+    lowered = insert_movement_stages(compile_template(t), template=t)
+    store = ProvenanceStore(str(tmp_path / "runs"))
+    result = run_workflow(t, store, graph=lowered, steps_override=6)
+    assert result.final_state is not None
+    assert "move.cfg.v5p-4.v5e-128" in result.stage_results
+
+
+# ===========================================================================
+# run --check pre-flight gate
+# ===========================================================================
+def test_run_check_gate_passes_clean_template(tmp_path):
+    from repro.core import ProvenanceStore
+    t = REGISTRY.get("train-qwen2-1.5b")
+    store = ProvenanceStore(str(tmp_path / "runs"))
+    result = run_workflow(t, store, steps_override=6, check=True)
+    assert result.final_state is not None
+
+
+def test_run_check_gate_blocks_broken_graph(tmp_path):
+    from repro.core import ProvenanceStore
+    t = REGISTRY.get("train-qwen2-1.5b")
+    g = compile_template(t)
+    g.add(DeclaredStage("orphan", inputs=("no_such_key",), outputs=()))
+    store = ProvenanceStore(str(tmp_path / "runs"))
+    with pytest.raises(CheckError) as exc:
+        run_workflow(t, store, graph=g, steps_override=3, check=True)
+    assert any(d.code == "ADV001" for d in exc.value.report.diagnostics)
+
+
+# ===========================================================================
+# CLI verbs
+# ===========================================================================
+def _run_cli(argv):
+    args = build_parser().parse_args(argv)
+    try:
+        args.fn(args)
+    except SystemExit as e:
+        return int(e.code or 0)
+    return 0
+
+
+def test_cli_check_template_clean(capsys):
+    assert _run_cli(["check", "train-qwen2-1.5b"]) == 0
+    out = capsys.readouterr().out
+    assert "0 error(s)" in out and "waived" in out
+
+
+def test_cli_check_all_templates(capsys):
+    assert _run_cli(["check", "--all-templates"]) == 0
+    out = capsys.readouterr().out
+    assert "serve-qwen2-1.5b" in out
+
+
+def test_cli_check_badspec_fails(capsys):
+    path = os.path.join(HERE, "badspecs", "cycle.json")
+    assert _run_cli(["check", path]) == 1
+    assert "ADV011" in capsys.readouterr().out
+
+
+def test_cli_check_json_output(capsys):
+    path = os.path.join(HERE, "badspecs", "missing_producer.json")
+    assert _run_cli(["check", path, "--json"]) == 1
+    doc = json.loads(capsys.readouterr().out)
+    assert doc["ok"] is False
+    assert any(d["code"] == "ADV001" for d in doc["diagnostics"])
+
+
+def test_cli_pack_check_unpack_cycle(tmp_path, capsys):
+    pack = str(tmp_path / "wf.pack.json")
+    assert _run_cli(["pack", "train-qwen2-1.5b", "-o", pack,
+                     "--param", "steps_override=3"]) == 0
+    assert _run_cli(["check", pack]) == 0
+    assert _run_cli(["unpack", pack, "--out-dir", str(tmp_path)]) == 0
+    capsys.readouterr()
+    wf = tmp_path / "train-qwen2-1.5b.workflow.json"
+    assert wf.exists()
+    assert json.loads(wf.read_text())["kind"] == "workflow"
+
+
+def test_cli_check_lowered_out(tmp_path, capsys):
+    out = str(tmp_path / "lowered.json")
+    assert _run_cli(["check", "train-qwen2-1.5b",
+                     "--lowered-out", out]) == 0
+    capsys.readouterr()
+    lowered = json.loads(open(out, encoding="utf-8").read())
+    names = [e["name"] for e in lowered["stages"]]
+    assert "move.cfg.v5p-4.v5e-128" in names
+    # the lowered artifact itself checks clean as a plain workflow
+    assert _run_cli(["check", out]) == 0

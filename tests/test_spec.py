@@ -1,0 +1,297 @@
+"""Declarative workflow specs (repro.core.spec): to_spec/from_spec
+round-trips (structure and bytes), the golden canonical-template spec,
+schema validation, pack/unpack artifacts, template serialization,
+strict vs analysis-only reconstruction, and subworkflow nesting.
+The hypothesis property test is importorskip-guarded."""
+import json
+import os
+
+import pytest
+
+from repro.core import (
+    REGISTRY,
+    FnStage,
+    ResourceIntent,
+    RestartPolicy,
+    StageGraph,
+    compile_template,
+)
+from repro.core.spec import (
+    DeclaredStage,
+    SpecError,
+    default_results,
+    dump_spec,
+    dumps_spec,
+    from_spec,
+    load_spec,
+    pack_template,
+    spec_for_template,
+    template_from_spec,
+    template_to_spec,
+    to_spec,
+    unpack_package,
+    validate_spec,
+)
+
+GOLDEN = os.path.join(os.path.dirname(__file__), "golden",
+                      "train-qwen2-1.5b.spec.json")
+
+
+def _structure(g: StageGraph):
+    """The graph facts a round-trip must preserve."""
+    return {
+        "name": g.name,
+        "stages": [
+            (n, list(g.deps(n)), list(g.stages[n].inputs),
+             list(g.stages[n].outputs), g.stages[n].placement_key,
+             g.stages[n].cacheable, list(g.stages[n].cache_params))
+            for n in g.stages
+        ],
+        "order": g.topo_order(),
+    }
+
+
+# ===========================================================================
+# Round-trip: canonical template graphs
+# ===========================================================================
+@pytest.mark.parametrize("name", ["train-qwen2-1.5b", "serve-qwen2-1.5b"])
+def test_roundtrip_template_graph(name):
+    g = compile_template(REGISTRY.get(name))
+    doc = to_spec(g)
+    g2 = from_spec(doc)
+    assert _structure(g2) == _structure(g)
+    # rebuilt stages are the real executable classes, not declarations
+    assert not any(isinstance(s, DeclaredStage) for s in g2.stages.values())
+
+
+def test_to_spec_byte_deterministic():
+    t = REGISTRY.get("train-qwen2-1.5b")
+    a = dumps_spec(to_spec(compile_template(t)))
+    b = dumps_spec(to_spec(compile_template(t)))
+    assert a == b
+    # and through a full round-trip
+    c = dumps_spec(to_spec(from_spec(json.loads(a))))
+    assert c == a
+
+
+def test_golden_spec_matches():
+    """The committed golden file is byte-identical to a fresh
+    serialization — regenerating it is an explicit, reviewed act."""
+    t = REGISTRY.get("train-qwen2-1.5b")
+    with open(GOLDEN, encoding="utf-8") as f:
+        on_disk = f.read()
+    assert dumps_spec(spec_for_template(t)) == on_disk
+
+
+def test_roundtrip_preserves_entry_level_attrs():
+    g = StageGraph("wired")
+    a = FnStage("a", lambda ctx: {"x": 1}, outputs=("x",))
+    a.intent = ResourceIntent(arch="qwen2-1.5b", shape="train_4k",
+                              goal="quick_test", max_chips=8)
+    a.retry = RestartPolicy(max_restarts=3, backoff_s=1.5,
+                            max_backoff_s=9.0, jitter=0.0, seed=7)
+    g.add(a)
+    doc = to_spec(g)
+    g2 = from_spec(doc, strict=False)  # FnStage bodies don't serialize
+    s = g2.stages["a"]
+    assert s.intent == a.intent
+    assert s.retry.max_restarts == 3 and s.retry.backoff_s == 1.5
+    assert s.retry.seed == 7
+
+
+def test_results_default_to_unconsumed_outputs():
+    g = compile_template(REGISTRY.get("train-qwen2-1.5b"))
+    doc = to_spec(g)
+    assert "final_state" in doc["results"]
+    assert "checks" in doc["results"]
+    assert "cfg" not in doc["results"]  # consumed by train
+
+
+# ===========================================================================
+# Strictness
+# ===========================================================================
+def test_strict_rejects_unserializable_fn_stage():
+    g = StageGraph("fn")
+    g.add(FnStage("a", lambda ctx: {}, outputs=("x",)))
+    doc = to_spec(g)
+    with pytest.raises(SpecError, match="unknown stage type"):
+        from_spec(doc, strict=True)
+    g2 = from_spec(doc, strict=False)
+    assert isinstance(g2.stages["a"], DeclaredStage)
+    assert g2.stages["a"].outputs == ("x",)
+
+
+def test_strict_rejects_unknown_type():
+    doc = {
+        "spec_version": "1", "kind": "workflow", "name": "w",
+        "stages": [{"name": "a", "type": "no-such-type",
+                    "outputs": ["x"]}],
+    }
+    with pytest.raises(SpecError, match="unknown stage type"):
+        from_spec(doc, strict=True)
+    g = from_spec(doc, strict=False)
+    assert g.stages["a"].declared_type == "no-such-type"
+
+
+def test_declared_stage_refuses_to_run():
+    g = from_spec({
+        "spec_version": "1", "kind": "workflow", "name": "w",
+        "stages": [{"name": "a", "type": "declared", "outputs": ["x"]}],
+    })
+    with pytest.raises(SpecError, match="declaration-only"):
+        g.stages["a"].run(None)
+
+
+def test_port_drift_detected():
+    """A spec whose declared ports disagree with what the stage class
+    derives from its config fails loudly at load time."""
+    doc = to_spec(compile_template(REGISTRY.get("train-qwen2-1.5b")))
+    entry = next(e for e in doc["stages"] if e["name"] == "train")
+    entry["outputs"] = ["renamed_state"]  # config still says final_state
+    with pytest.raises(SpecError, match="drifted"):
+        from_spec(doc)
+
+
+# ===========================================================================
+# Schema validation
+# ===========================================================================
+def test_validate_spec_clean():
+    doc = to_spec(compile_template(REGISTRY.get("train-qwen2-1.5b")))
+    assert validate_spec(doc) == []
+
+
+def test_validate_spec_catches_errors():
+    errors = validate_spec({
+        "kind": "workflow", "name": "", "bogus": 1,
+        "stages": [{"name": "a", "type": "declared"},
+                   {"name": "a", "type": "declared"},
+                   {"name": "b"}],
+    })
+    text = "\n".join(errors)
+    assert "spec_version" in text
+    assert "bogus" in text
+    assert "duplicate stage name" in text
+    assert "'type' must be a string" in text
+    assert "non-empty string" in text
+
+
+def test_validate_spec_version_gate():
+    errors = validate_spec({"spec_version": "99", "kind": "workflow",
+                            "name": "w", "stages": []})
+    assert any("unsupported spec_version" in e for e in errors)
+
+
+# ===========================================================================
+# Templates & packages
+# ===========================================================================
+def test_template_roundtrip():
+    t = REGISTRY.get("train-qwen2-1.5b")
+    assert template_from_spec(template_to_spec(t)) == t
+
+
+def test_pack_unpack_roundtrip(tmp_path):
+    t = REGISTRY.get("train-qwen2-1.5b")
+    doc = pack_template(t, params={"steps_override": 5})
+    assert validate_spec(doc) == []
+    t2, wf_doc, params = unpack_package(doc)
+    assert t2 == t
+    assert params == {"steps_override": 5}
+    assert _structure(from_spec(wf_doc)) == _structure(compile_template(t))
+    # and through the filesystem
+    path = str(tmp_path / "artifact.pack.json")
+    dump_spec(doc, path)
+    assert load_spec(path) == doc
+
+
+def test_shipped_example_packs_load(tmp_path):
+    root = os.path.join(os.path.dirname(__file__), "..", "examples",
+                        "specs")
+    for fname in sorted(os.listdir(root)):
+        doc = load_spec(os.path.join(root, fname))
+        assert validate_spec(doc) == [], fname
+        if doc.get("kind") == "package":
+            t, wf_doc, _ = unpack_package(doc)
+            assert t is not None
+            from_spec(wf_doc)  # strict: packs must stay executable
+
+
+def test_yaml_spec_roundtrip(tmp_path):
+    yaml = pytest.importorskip("yaml", reason="YAML specs need PyYAML")
+    del yaml
+    doc = to_spec(compile_template(REGISTRY.get("train-qwen2-1.5b")))
+    path = str(tmp_path / "wf.yaml")
+    dump_spec(doc, path)
+    assert load_spec(path) == doc
+
+
+# ===========================================================================
+# Subworkflow nesting
+# ===========================================================================
+def test_subworkflow_roundtrip():
+    inner = StageGraph("prep")
+    inner.add(DeclaredStage("fetch", outputs=("raw",)))
+    inner.add(DeclaredStage("clean", inputs=("raw",),
+                            outputs=("clean",)),
+              depends_on=("fetch",))
+    outer = StageGraph("outer")
+    outer.add(inner.as_stage("prep", max_workers=2))
+    outer.add(DeclaredStage("use", inputs=("clean",), outputs=("done",)),
+              depends_on=("prep",))
+    doc = to_spec(outer)
+    entry = doc["stages"][0]
+    assert entry["type"] == "subworkflow"
+    assert entry["graph"]["name"] == "prep"
+    g2 = from_spec(doc)
+    assert _structure(g2) == _structure(outer)
+    assert g2.stages["prep"].max_workers == 2
+    assert list(g2.stages["prep"].graph.stages) == ["fetch", "clean"]
+    assert dumps_spec(to_spec(g2)) == dumps_spec(doc)
+
+
+# ===========================================================================
+# Property test (hypothesis, importorskip-guarded)
+# ===========================================================================
+try:
+    from hypothesis import given, settings, strategies as st
+    _HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - exercised where hypothesis is absent
+    _HAVE_HYPOTHESIS = False
+
+
+def _random_graph(spec_rows):
+    """Build a DeclaredStage DAG from draw rows; deps only point at
+    earlier stages, so the graph is acyclic by construction."""
+    g = StageGraph("prop")
+    names = []
+    for i, (dep_mask, n_in, n_out, cacheable) in enumerate(spec_rows):
+        deps = tuple(names[j] for j in range(len(names))
+                     if dep_mask & (1 << j))
+        stage = DeclaredStage(
+            f"s{i}",
+            inputs=tuple(f"k{j}" for j in range(n_in)),
+            outputs=tuple(f"k{i}.{j}" for j in range(n_out)),
+            config={"idx": i},
+        )
+        stage.cacheable = cacheable
+        g.add(stage, depends_on=deps)
+        names.append(stage.name)
+    return g
+
+
+if _HAVE_HYPOTHESIS:
+    @given(rows=st.lists(
+        st.tuples(st.integers(0, 255), st.integers(0, 3),
+                  st.integers(0, 3), st.booleans()),
+        min_size=1, max_size=8))
+    @settings(max_examples=60, deadline=None)
+    def test_spec_roundtrip_property(rows):
+        g = _random_graph(rows)
+        doc = to_spec(g)
+        g2 = from_spec(doc, strict=False)
+        assert _structure(g2) == _structure(g)
+        assert dumps_spec(to_spec(g2)) == dumps_spec(doc)
+        assert sorted(doc["results"]) == default_results(g)
+else:
+    def test_spec_roundtrip_property():
+        pytest.importorskip("hypothesis",
+                            reason="property tests need hypothesis")

@@ -291,3 +291,75 @@ def test_subgraph_without_workload_charges_nothing(tmp_path):
                        stages=["plan"])
     assert "train" not in res.stage_results
     assert ledger.get("lab").spent_usd == 0.0
+
+
+# ---------------------------------------------------------------------------
+# topo_order: the deque rewrite must reproduce the original quadratic
+# Kahn walk exactly, including its insertion-order tie-break
+# ---------------------------------------------------------------------------
+def _old_topo_order(graph):
+    """The pre-optimization algorithm: rescan every stage's dep list on
+    each completion, pop ready stages from the front in insertion order."""
+    indeg = {n: len(deps) for n, deps in
+             ((n, graph.deps(n)) for n in graph.stages)}
+    ready = [n for n in graph.stages if indeg[n] == 0]
+    order = []
+    while ready:
+        n = ready.pop(0)
+        order.append(n)
+        for m in graph.stages:
+            if n in graph.deps(m):
+                indeg[m] -= 1
+                if indeg[m] == 0:
+                    ready.append(m)
+    if len(order) != len(graph.stages):
+        raise CycleError("cycle")
+    return order
+
+
+def test_topo_order_matches_old_kahn_on_random_graphs():
+    import random
+
+    rng = random.Random(20260809)
+    for trial in range(50):
+        g = StageGraph(f"rand{trial}")
+        names = []
+        for i in range(rng.randint(1, 24)):
+            deps = tuple(n for n in names if rng.random() < 0.3)
+            name = f"s{i:02d}"
+            g.add(_noop(name), depends_on=deps)
+            names.append(name)
+        assert g.topo_order() == _old_topo_order(g)
+
+
+def test_topo_order_matches_old_kahn_on_template_graph():
+    g = compile_template(REGISTRY.get("train-qwen2-1.5b"))
+    assert g.topo_order() == _old_topo_order(g)
+
+
+def test_topo_order_tie_break_is_insertion_order():
+    g = StageGraph("ties")
+    for name in ("c", "a", "b"):  # all roots; not alphabetical
+        g.add(_noop(name))
+    g.add(_noop("z"), depends_on=("a", "b", "c"))
+    assert g.topo_order() == ["c", "a", "b", "z"]
+
+
+# ---------------------------------------------------------------------------
+# validate(): duplicate output keys are a hard error naming both stages
+# ---------------------------------------------------------------------------
+def test_validate_rejects_duplicate_output_keys():
+    g = StageGraph("dup")
+    g.add(_noop("first", outputs=("x",)))
+    g.add(_noop("second", outputs=("x",)), depends_on=("first",))
+    with pytest.raises(GraphError) as exc:
+        g.validate()
+    msg = str(exc.value)
+    assert "'first'" in msg and "'second'" in msg and "'x'" in msg
+
+
+def test_validate_allows_unique_outputs():
+    g = StageGraph("ok")
+    g.add(_noop("first", outputs=("x",)))
+    g.add(_noop("second", outputs=("y",)), depends_on=("first",))
+    g.validate()
