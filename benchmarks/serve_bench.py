@@ -14,13 +14,22 @@ PR 3 fused, on the smoke config, and writes machine-readable
   * **admission latency** — µs per admitted request: one-at-a-time
     legacy prefill+insert vs batched grouped prefill with the jitted
     slot scatter;
+  * **paged KV cache** — ``engine="paged"`` tok/s (step + chunked, token
+    parity with fused asserted), KV-HBM-bytes-per-live-token at 50% slot
+    occupancy vs the dense engine's fixed ``max_batch x max_seq``
+    reservation, and the prefix-sharing hit rate on a shared-prompt
+    workload;
   * **train step** — wall µs/step with and without state-buffer
     donation (donation is a no-op on CPU; the loss trajectory must match
-    either way).
+    either way).  Timed per-step after discarding post-compile warmup
+    steps, reported as the median — a single slow outlier (GC, page
+    faults) can no longer invert the comparison.
 
-Raises (failing the bench suite loudly) if the fused path drops below
-2x the legacy baseline — a floor far under the >=4x it achieves, so
-noisy CI machines don't flake.
+Raises (failing the bench suite loudly) if the fused or paged path drops
+below 2x the legacy baseline, if the paged engine's in-use KV HBM per
+live token exceeds its bound, or if any engine breaks greedy token
+parity — floors far under what the paths achieve, so noisy CI machines
+don't flake.
 """
 from __future__ import annotations
 
@@ -32,13 +41,22 @@ import numpy as np
 
 OUT_PATH = "BENCH_serve.json"
 SPEEDUP_FLOOR = 2.0
+# dense must cost >= this multiple of paged HBM per live token at 50%
+# occupancy (the memory-proportionality claim)
+PAGED_MEM_RATIO_FLOOR = 4.0
+# paged may hold at most this many token-slots of KV HBM per live token
+# on the occupancy workload (allocate-on-admit covers the full decode
+# budget, so ~1.6 is expected; 3.0 catches free-list leaks)
+PAGED_SLOTS_PER_TOKEN_CAP = 3.0
 
 MAX_BATCH = 16
 REQUESTS = 32
 PROMPT_LEN = 8
 MAX_NEW = 32
 CHUNK = 8
+PAGE_SIZE = 16
 TRAIN_STEPS = 8
+TRAIN_WARMUP = 2  # post-compile steps discarded from the timing
 
 
 def _setup():
@@ -65,13 +83,13 @@ def _burst(engine, cfg, uid0: int) -> None:
         ))
 
 
-def _run_engine(cfg, model, params, engine: str, chunk: int):
+def _run_engine(cfg, model, params, engine: str, chunk: int, **engine_kw):
     """Steady-state tok/s + the timed burst's {uid: tokens} for parity."""
     from repro.serve import ServeEngine
 
     eng = ServeEngine(model, params, max_batch=MAX_BATCH,
                       max_seq=PROMPT_LEN + MAX_NEW + 8, eos_id=-1,
-                      engine=engine, decode_chunk=chunk)
+                      engine=engine, decode_chunk=chunk, **engine_kw)
     _burst(eng, cfg, 0)
     eng.run()  # warmup: compiles prefill/decode/insert
     n0 = len(eng.done)
@@ -89,8 +107,10 @@ def _run_engine(cfg, model, params, engine: str, chunk: int):
             "d2h_transfers": transfers, "d2h_elems": elems}, tokens
 
 
-def bench_decode() -> dict:
-    cfg, model, params = _setup()
+def bench_decode(setup) -> tuple:
+    """Returns (section dict, greedy {uid: tokens} baseline) — the token
+    baseline anchors the paged section's parity check."""
+    cfg, model, params = setup
     legacy, tok_l = _run_engine(cfg, model, params, "legacy", 1)
     fused, tok_f = _run_engine(cfg, model, params, "fused", 1)
     chunked, tok_c = _run_engine(cfg, model, params, "fused", CHUNK)
@@ -108,13 +128,79 @@ def bench_decode() -> dict:
         "speedup_chunked": chunked["tok_per_s"] / legacy["tok_per_s"],
         "token_parity": parity,
         "fused_d2h_elems_per_transfer": per_step,
+    }, tok_l
+
+
+def bench_paged(setup, decode: dict, tok_baseline) -> dict:
+    """engine='paged': throughput at full occupancy (parity-checked
+    against the greedy baseline), HBM per live token at 50% occupancy vs
+    the dense reservation, and prefix sharing on a shared-prompt burst."""
+    from repro.serve import Request, ServeEngine
+
+    cfg, model, params = setup
+    paged, tok_p = _run_engine(cfg, model, params, "paged", 1,
+                               page_size=PAGE_SIZE)
+    pagedc, tok_pc = _run_engine(cfg, model, params, "paged", CHUNK,
+                                 page_size=PAGE_SIZE)
+    parity = tok_p == tok_baseline and tok_pc == tok_baseline
+
+    # --- KV HBM per live token at 50% slot occupancy -------------------
+    # short decode budgets so the allocate-on-admit reservation stays
+    # near the live footprint; dense reserves max_batch x max_seq no
+    # matter what
+    max_seq = PROMPT_LEN + MAX_NEW + 8
+    occupancy = {}
+    for engine in ("fused", "paged"):
+        eng = ServeEngine(model, params, max_batch=MAX_BATCH,
+                          max_seq=max_seq, eos_id=-1, engine=engine,
+                          page_size=PAGE_SIZE)
+        rng = np.random.default_rng(0)
+        for i in range(MAX_BATCH // 2):
+            eng.submit(Request(
+                uid=i, prompt=rng.integers(1, cfg.vocab_size, PROMPT_LEN),
+                max_new_tokens=PAGE_SIZE - PROMPT_LEN))
+        eng.step()
+        occupancy[engine] = eng.kv_stats()
+    dense_bpt = occupancy["fused"]["kv_bytes_per_live_token"]
+    paged_bpt = occupancy["paged"]["kv_bytes_per_live_token"]
+    per_tok = occupancy["paged"]["kv_bytes_per_token"]
+
+    # --- prefix sharing: every request extends one common prompt ------
+    eng = ServeEngine(model, params, max_batch=MAX_BATCH, max_seq=max_seq,
+                      eos_id=-1, engine="paged", page_size=PAGE_SIZE)
+    rng = np.random.default_rng(0)
+    prefix = rng.integers(1, cfg.vocab_size, 2 * PAGE_SIZE)
+    for i in range(REQUESTS):
+        eng.submit(Request(
+            uid=i,
+            prompt=np.concatenate([prefix, rng.integers(1, cfg.vocab_size, 4)]),
+            max_new_tokens=8))
+    eng.run()
+
+    return {
+        "page_size": PAGE_SIZE,
+        "paged_tok_s": paged["tok_per_s"],
+        "paged_chunked_tok_s": pagedc["tok_per_s"],
+        "speedup_paged": paged["tok_per_s"] / decode["legacy_tok_s"],
+        "chunked_vs_fused": pagedc["tok_per_s"] / decode["chunked_tok_s"],
+        "token_parity": parity,
+        "occupancy_frac": 0.5,
+        "dense_kv_bytes_per_live_token": dense_bpt,
+        "paged_kv_bytes_per_live_token": paged_bpt,
+        "mem_ratio_vs_dense": dense_bpt / paged_bpt,
+        "paged_slots_per_live_token": paged_bpt / per_tok,
+        "live_tokens": occupancy["paged"]["live_tokens"],
+        "pages_in_use": occupancy["paged"]["pages_in_use"],
+        "prefix_hit_rate": eng.pool.hit_rate,
+        "prefix_hits": eng.pool.prefix_hits,
+        "prefix_lookups": eng.pool.prefix_lookups,
     }
 
 
-def bench_admission() -> dict:
+def bench_admission(setup) -> dict:
     from repro.serve import ServeEngine
 
-    cfg, model, params = _setup()
+    cfg, model, params = setup
 
     def admit_us(engine: str) -> float:
         eng = ServeEngine(model, params, max_batch=MAX_BATCH,
@@ -138,7 +224,7 @@ def bench_admission() -> dict:
             "speedup": legacy_us / max(batched_us, 1e-9)}
 
 
-def bench_train_donation() -> dict:
+def bench_train_donation(setup) -> dict:
     import jax
     import jax.numpy as jnp
 
@@ -148,7 +234,7 @@ def bench_train_donation() -> dict:
                              jit_train_step, make_train_step)
     from repro.parallel import Plan
 
-    cfg, model, _ = _setup()
+    cfg, model, _ = setup
     shape = ShapeConfig("bench", 32, 4, "train")
     opt = OptimizerConfig(lr=1e-3, warmup_steps=1, total_steps=100)
     plan = Plan(remat="none")
@@ -157,31 +243,37 @@ def bench_train_donation() -> dict:
                for s in range(TRAIN_STEPS)]
 
     def run(donate: bool):
+        """Median per-step wall time over the steady-state steps: the
+        compile step and TRAIN_WARMUP post-compile steps are excluded,
+        and the median (not the mean of one pass) keeps a single GC or
+        page-fault stall from inverting the donate/no-donate ranking."""
         step = jit_train_step(make_train_step(model, opt, plan), donate=donate)
         state = init_train_state(model, jax.random.PRNGKey(0), opt, plan)
         state, m = step(state, batches[0])  # compile
-        jax.block_until_ready(m["loss"])
-        losses = [float(m["loss"])]
-        t0 = time.perf_counter()
+        losses = [float(m["loss"])]  # float() blocks on the step
+        times = []
         for b in batches[1:]:
+            t0 = time.perf_counter()
             state, m = step(state, b)
             losses.append(float(m["loss"]))
-        jax.block_until_ready(m["loss"])
-        dt = (time.perf_counter() - t0) / (TRAIN_STEPS - 1)
-        return dt, losses
+            times.append(time.perf_counter() - t0)
+        return float(np.median(times[TRAIN_WARMUP:])), losses
 
     dt_d, loss_d = run(True)
     dt_n, loss_n = run(False)
     return {"step_us_donate": dt_d * 1e6, "step_us_no_donate": dt_n * 1e6,
             "loss_parity": bool(np.allclose(loss_d, loss_n)),
-            "steps": TRAIN_STEPS}
+            "steps": TRAIN_STEPS, "warmup_steps": TRAIN_WARMUP,
+            "timing": "median"}
 
 
 def main() -> None:
-    decode = bench_decode()
-    admission = bench_admission()
-    train = bench_train_donation()
-    doc = {"generated_at": time.time(), "decode": decode,
+    setup = _setup()
+    decode, tok_baseline = bench_decode(setup)
+    paged = bench_paged(setup, decode, tok_baseline)
+    admission = bench_admission(setup)
+    train = bench_train_donation(setup)
+    doc = {"generated_at": time.time(), "decode": decode, "paged": paged,
            "admission": admission, "train": train}
     tmp = OUT_PATH + ".tmp"  # atomic: a killed run never truncates the baseline
     with open(tmp, "w") as f:
@@ -197,6 +289,17 @@ def main() -> None:
           f"tok_per_s={d['chunked_tok_s']:,.0f};"
           f"speedup={d['speedup_chunked']:.1f}x;chunk={d['chunk']}")
     print(f"serve/token_parity,0.0,ok={d['token_parity']}")
+    p = paged
+    print(f"serve/paged_tok_s,{1e6/p['paged_tok_s']:.1f},"
+          f"tok_per_s={p['paged_tok_s']:,.0f};"
+          f"speedup={p['speedup_paged']:.1f}x;"
+          f"chunked_tok_per_s={p['paged_chunked_tok_s']:,.0f}")
+    print(f"serve/paged_kv_hbm,{p['paged_kv_bytes_per_live_token']:.1f},"
+          f"bytes_per_live_token;dense={p['dense_kv_bytes_per_live_token']:.1f};"
+          f"ratio={p['mem_ratio_vs_dense']:.1f}x;"
+          f"occupancy={p['occupancy_frac']}")
+    print(f"serve/paged_prefix_sharing,{p['prefix_hit_rate']:.3f},"
+          f"hits={p['prefix_hits']}/{p['prefix_lookups']}")
     print(f"serve/admission_legacy,{admission['legacy_us_per_request']:.1f},"
           f"per_request")
     print(f"serve/admission_batched,{admission['batched_us_per_request']:.1f},"
@@ -208,6 +311,9 @@ def main() -> None:
     if not d["token_parity"]:
         raise RuntimeError("fused/chunked serving diverged from the "
                            "legacy greedy baseline")
+    if not p["token_parity"]:
+        raise RuntimeError("paged serving diverged from the greedy "
+                           "baseline")
     if d["fused_d2h_elems_per_transfer"] > MAX_BATCH:
         raise RuntimeError(
             f"fused step() transferred "
@@ -220,6 +326,23 @@ def main() -> None:
         raise RuntimeError(
             f"fused serving regressed: {d['speedup_fused']:.1f}x < "
             f"{SPEEDUP_FLOOR}x floor over the per-slot baseline"
+        )
+    if p["speedup_paged"] < SPEEDUP_FLOOR:
+        raise RuntimeError(
+            f"paged serving regressed: {p['speedup_paged']:.1f}x < "
+            f"{SPEEDUP_FLOOR}x floor over the per-slot baseline"
+        )
+    if p["mem_ratio_vs_dense"] < PAGED_MEM_RATIO_FLOOR:
+        raise RuntimeError(
+            f"paged KV memory advantage regressed: "
+            f"{p['mem_ratio_vs_dense']:.1f}x < {PAGED_MEM_RATIO_FLOOR}x "
+            f"vs dense at {p['occupancy_frac']:.0%} occupancy"
+        )
+    if p["paged_slots_per_live_token"] > PAGED_SLOTS_PER_TOKEN_CAP:
+        raise RuntimeError(
+            f"paged KV HBM per live token exceeded its bound: "
+            f"{p['paged_slots_per_live_token']:.2f} token-slots > "
+            f"{PAGED_SLOTS_PER_TOKEN_CAP} cap — page accounting leak?"
         )
 
 

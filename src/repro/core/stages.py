@@ -364,7 +364,9 @@ class ServeStage(Stage):
     per run via the ``serve_engine`` / ``serve_chunk`` context params
     (the CLI's ``--serve-engine`` / ``--serve-chunk``).  ``fused`` is the
     on-device batched-sampling fast path; ``legacy`` keeps the per-slot
-    host-sampling baseline around for A/B runs."""
+    host-sampling baseline around for A/B runs; ``paged`` serves from
+    the paged KV pool (prefix sharing, HBM proportional to live
+    tokens — see docs/serving.md)."""
 
     inputs = ("cfg",)
     outputs = ("final_state", "completions")

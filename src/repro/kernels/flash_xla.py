@@ -164,3 +164,47 @@ def _bwd_vjp(causal, window, q_offset, block_q, block_k, res, do):
 
 
 flash_attention_xla.defvjp(_fwd_vjp, _bwd_vjp)
+
+
+def paged_attention_xla(q, k_pool, v_pool, page_table, kv_len):
+    """Paged decode attention without materializing a dense cache: scan
+    over page-table columns, gathering one ``(B, page, D)`` page block
+    per KV head per step and folding it into an online softmax.  Peak
+    memory is O(B·page) per step instead of O(B·max_pages·page) for the
+    full gather — the CPU/XLA stand-in for the Pallas kernel's
+    prefetch-driven page DMA.
+
+    q: (B, 1, H, D); pools: (KH, P, page, D); page_table: (B, max_pages);
+    kv_len: (B,).  Returns (B, 1, H, D).
+    """
+    B, _, H, D = q.shape
+    KH, _, page, _ = k_pool.shape
+    G = H // KH
+    max_pages = page_table.shape[1]
+    pt = jnp.maximum(page_table, 0)
+
+    qf = q.astype(jnp.float32).reshape(B, KH, G, D) * (D ** -0.5)
+    offs = jnp.arange(page)
+
+    def step(carry, j):
+        m_p, l_p, acc = carry
+        pid = pt[:, j]                          # (B,)
+        kb = k_pool[:, pid].astype(jnp.float32)  # (KH, B, page, D)
+        vb = v_pool[:, pid].astype(jnp.float32)
+        s = jnp.einsum("bkgd,kbtd->bkgt", qf, kb)  # (B, KH, G, page)
+        kpos = j * page + offs
+        mask = kpos[None, :] < kv_len[:, None]     # (B, page)
+        s = jnp.where(mask[:, None, None, :], s, NEG_INF)
+        m_c = jnp.maximum(m_p, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_c[..., None])
+        alpha = jnp.exp(m_p - m_c)
+        l_c = l_p * alpha + jnp.sum(p, axis=-1)
+        acc = acc * alpha[..., None] + jnp.einsum("bkgt,kbtd->bkgd", p, vb)
+        return (m_c, l_c, acc), None
+
+    m0 = jnp.full((B, KH, G), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, KH, G), jnp.float32)
+    a0 = jnp.zeros((B, KH, G, D), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(step, (m0, l0, a0), jnp.arange(max_pages))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]   # (B, KH, G, D)
+    return out.reshape(B, 1, H, D).astype(q.dtype)

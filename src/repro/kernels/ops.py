@@ -140,6 +140,46 @@ def decode_attention(
     return ref.attention(q, k, v, causal=False, window=0, kv_len=kv_len)
 
 
+def paged_decode_attention(
+    q: jax.Array,           # (B, 1, H, D)
+    k_pool: jax.Array,      # (KH, P, page, D) global page pool
+    v_pool: jax.Array,
+    page_table: jax.Array,  # (B, max_pages) int32, -1 = unmapped
+    *,
+    kv_len: jax.Array,      # (B,) live lengths
+) -> jax.Array:
+    """Single-token attention through a page-table indirection.
+
+    ``ref`` backend: the dense-gather oracle for small tables, the
+    scanned XLA online-softmax fallback for big ones (never materializes
+    the gathered cache).  ``interpret``/``tpu``: the Pallas kernel
+    (``paged_attention_bkgd``) with the page table as scalar prefetch.
+    """
+    B, _, H, D = q.shape
+    KH, _, page, _ = k_pool.shape
+    max_pages = page_table.shape[1]
+    if _BACKEND == "ref":
+        if B * max_pages * page <= 256 * 1024:
+            return ref.paged_attention(q, k_pool, v_pool, page_table, kv_len)
+        from repro.kernels.flash_xla import paged_attention_xla
+
+        return paged_attention_xla(q, k_pool, v_pool, page_table, kv_len)
+
+    from repro.kernels.paged_attention import paged_attention_bkgd
+
+    G = H // KH
+    qt = q.reshape(B, 1, KH, G, D)[:, 0]         # (B, KH, G, D)
+    qt, _ = _pad_to(qt, 3, 128)
+    kp, _ = _pad_to(k_pool, 3, 128)
+    vp, _ = _pad_to(v_pool, 3, 128)
+    out = paged_attention_bkgd(
+        qt, kp, vp, page_table, kv_len,
+        scale=D ** -0.5, page=page,
+        interpret=(_BACKEND == "interpret"),
+    )
+    return out[..., :D].reshape(B, 1, H, D)
+
+
 # --------------------------------------------------------------------------
 def mlstm_scan(
     q: jax.Array,  # (B, H, S, D)

@@ -1,0 +1,151 @@
+"""Paged-attention decode kernel for TPU (Pallas, block-table indirection).
+
+The serving engine's paged KV cache stores K/V in a *global page pool*
+shared by every slot — per layer, ``(KH, num_pages, page, Dh)`` — and
+each slot owns a row of a *page table* ``(B, max_pages)`` mapping its
+logical page index ``j`` (token positions ``[j*page, (j+1)*page)``) to a
+physical pool page.  Unused entries are ``-1``.  Decode attention then
+reads a slot's KV through the indirection, so HBM scales with *live*
+tokens (allocated pages) instead of ``max_batch × max_seq`` reservation.
+
+Kernel structure mirrors ``flash_attention.py``: grid
+``(B, KH, max_pages)`` with the page dimension innermost (TPU grids run
+the last axis sequentially, so the online-softmax accumulators live in
+VMEM scratch across page steps).  The page table and per-slot KV lengths
+ride in as **scalar prefetch** operands
+(:class:`pltpu.PrefetchScalarGridSpec`): the BlockSpec index maps
+dereference ``page_table[b, j]`` to pick which physical page the next
+K/V block is DMA'd from — vLLM-style gather without materializing a
+dense cache.  Pages past a slot's live length are skipped with
+``pl.when`` (their DMA still targets a clamped valid page, but no FLOPs
+or accumulator updates happen).
+
+Layout notes: queries arrive as ``(B, KH, G, Dh)`` (one token per slot,
+``G = H // KH`` queries per KV head) and the pool's trailing block dims
+are ``(page, Dh)`` — both MXU/VPU-friendly with ``Dh`` padded to 128 by
+the ``ops.py`` wrapper and ``page`` a power of two ≥ 8.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _paged_kernel(
+    pt_ref,    # SMEM (B, max_pages) int32 page table (scalar prefetch)
+    len_ref,   # SMEM (B,) int32 live kv length per slot (scalar prefetch)
+    q_ref,     # (1, 1, G, D)
+    k_ref,     # (1, 1, page, D) — the physical page picked by the index map
+    v_ref,     # (1, 1, page, D)
+    o_ref,     # (1, 1, G, D)
+    m_scr,     # VMEM (G, 128) running max
+    l_scr,     # VMEM (G, 128) running denom
+    acc_scr,   # VMEM (G, D) accumulator
+    *,
+    scale: float,
+    page: int,
+    max_pages: int,
+):
+    b = pl.program_id(0)
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    kv_len = len_ref[b]
+
+    # Dead-page skip: the page holds no live token for this slot.  (Its
+    # DMA was clamped to a valid pool page by the index map; we just
+    # never touch the accumulators.)
+    @pl.when(j * page < kv_len)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32) * scale  # (G, D)
+        k = k_ref[0, 0].astype(jnp.float32)          # (page, D)
+        v = v_ref[0, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        )  # (G, page)
+        kpos = j * page + jax.lax.broadcasted_iota(
+            jnp.int32, (q.shape[0], page), 1
+        )
+        s = jnp.where(kpos < kv_len, s, NEG_INF)
+
+        m_prev = m_scr[:, 0]
+        m_cur = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_cur[:, None])
+        alpha = jnp.exp(m_prev - m_cur)
+        l_new = l_scr[:, 0] * alpha + jnp.sum(p, axis=-1)
+        l_scr[...] = jnp.broadcast_to(l_new[:, None], l_scr.shape)
+        acc_scr[...] = acc_scr[...] * alpha[:, None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+        )
+        m_scr[...] = jnp.broadcast_to(m_cur[:, None], m_scr.shape)
+
+    @pl.when(j == max_pages - 1)
+    def _finalize():
+        denom = jnp.maximum(l_scr[:, 0], 1e-30)
+        o_ref[0, 0] = (acc_scr[...] / denom[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("scale", "page", "interpret")
+)
+def paged_attention_bkgd(
+    q: jax.Array,           # (B, KH, G, D)   D % 128 == 0
+    k_pool: jax.Array,      # (KH, P, page, D) global page pool
+    v_pool: jax.Array,
+    page_table: jax.Array,  # (B, max_pages) int32, -1 = unmapped
+    kv_len: jax.Array,      # (B,) int32 live length per slot
+    *,
+    scale: float,
+    page: int,
+    interpret: bool = False,
+) -> jax.Array:
+    B, KH, G, D = q.shape
+    max_pages = page_table.shape[1]
+    grid = (B, KH, max_pages)
+
+    # Clamp dead entries (-1) to page 0 so the prefetch-driven DMA always
+    # targets a valid pool page; the kernel masks their contribution.
+    pt = jnp.maximum(page_table, 0).astype(jnp.int32)
+    lens = kv_len.astype(jnp.int32)
+
+    kernel = functools.partial(
+        _paged_kernel, scale=scale, page=page, max_pages=max_pages
+    )
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, G, D), lambda b, h, j, pt, ln: (b, h, 0, 0)),
+            pl.BlockSpec(
+                (1, 1, page, D),
+                lambda b, h, j, pt, ln: (h, pt[b, j], 0, 0),
+            ),
+            pl.BlockSpec(
+                (1, 1, page, D),
+                lambda b, h, j, pt, ln: (h, pt[b, j], 0, 0),
+            ),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, D), lambda b, h, j, pt, ln: (b, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((G, 128), jnp.float32),
+            pltpu.VMEM((G, 128), jnp.float32),
+            pltpu.VMEM((G, D), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, KH, G, D), q.dtype),
+        interpret=interpret,
+    )(pt, lens, q, k_pool, v_pool)

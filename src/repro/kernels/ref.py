@@ -57,6 +57,30 @@ def attention(
     return out.reshape(B, S, H, D).astype(q.dtype)
 
 
+def paged_attention(
+    q: jax.Array,           # (B, 1, H, D) — one decode token per slot
+    k_pool: jax.Array,      # (KH, P, page, D) global page pool
+    v_pool: jax.Array,
+    page_table: jax.Array,  # (B, max_pages) int32 pool page per logical page; -1 = unmapped
+    kv_len: jax.Array,      # (B,) live tokens per slot
+) -> jax.Array:
+    """Reference paged decode attention: gather each slot's pages into a
+    dense ``(B, max_pages*page, KH, D)`` view and run the masked dense
+    oracle.  Token position ``t`` of slot ``b`` lives at
+    ``pool[:, page_table[b, t // page], t % page]``; positions at or past
+    ``kv_len[b]`` (including every dead ``-1`` page, clamped to page 0)
+    are masked out, so the result is bit-comparable to dense decode
+    attention over the same K/V values."""
+    B = q.shape[0]
+    KH, _, page, D = k_pool.shape
+    max_pages = page_table.shape[1]
+    pt = jnp.maximum(page_table, 0)
+    # (KH, B, max_pages, page, D) -> (B, T, KH, D)
+    k = k_pool[:, pt].transpose(1, 2, 3, 0, 4).reshape(B, max_pages * page, KH, D)
+    v = v_pool[:, pt].transpose(1, 2, 3, 0, 4).reshape(B, max_pages * page, KH, D)
+    return attention(q, k, v, causal=False, window=0, kv_len=kv_len)
+
+
 def attention_chunked(
     q: jax.Array,  # (B, S, H, D)
     k: jax.Array,  # (B, T, KH, D)

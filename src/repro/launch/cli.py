@@ -511,9 +511,11 @@ def build_parser() -> argparse.ArgumentParser:
                    help="LRU bound for the stage cache (default "
                         "$REPRO_CACHE_MAX_BYTES or unbounded)")
     p.add_argument("--serve-engine", default="fused",
-                   choices=["fused", "legacy"],
-                   help="serving path: fused on-device sampling or the "
-                        "per-slot legacy baseline")
+                   choices=["fused", "legacy", "paged"],
+                   help="serving path: fused on-device sampling, the "
+                        "per-slot legacy baseline, or the paged KV cache "
+                        "(prefix sharing, memory proportional to live "
+                        "tokens)")
     p.add_argument("--serve-chunk", type=int, default=1,
                    help="decode this many tokens per serving dispatch "
                         "(lax.scan chunk; 1 = step-by-step)")

@@ -8,6 +8,9 @@
 
     # A/B the old per-slot host-sampling path
     PYTHONPATH=src python -m repro.launch.serve --engine legacy
+
+    # paged KV cache: pool pages + prefix sharing (HBM ~ live tokens)
+    PYTHONPATH=src python -m repro.launch.serve --engine paged --page-size 16
 """
 from __future__ import annotations
 
@@ -31,10 +34,14 @@ def main() -> None:
     ap.add_argument("--prompt-len", type=int, default=12)
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--seed", type=int, default=0)
-    ap.add_argument("--engine", default="fused", choices=["fused", "legacy"],
-                    help="fused on-device sampling vs the per-slot baseline")
+    ap.add_argument("--engine", default="fused",
+                    choices=["fused", "legacy", "paged"],
+                    help="fused on-device sampling, the per-slot "
+                         "baseline, or the paged KV cache")
     ap.add_argument("--chunk", type=int, default=1,
                     help="tokens decoded per dispatch (lax.scan chunk)")
+    ap.add_argument("--page-size", type=int, default=16,
+                    help="tokens per KV page (engine=paged; power of two)")
     args = ap.parse_args()
 
     cfg = reduced(get_config(args.arch))
@@ -42,7 +49,8 @@ def main() -> None:
     params, _ = model.init(jax.random.PRNGKey(args.seed))
     engine = ServeEngine(model, params, max_batch=args.max_batch,
                          max_seq=args.prompt_len + args.max_new + 8,
-                         engine=args.engine, decode_chunk=args.chunk)
+                         engine=args.engine, decode_chunk=args.chunk,
+                         page_size=args.page_size)
     rng = np.random.default_rng(args.seed)
     for i in range(args.requests):
         engine.submit(Request(
@@ -59,6 +67,10 @@ def main() -> None:
           f"requests={len(done)} tokens={toks} "
           f"wall={dt:.2f}s throughput={toks/dt:,.1f} tok/s "
           f"d2h_transfers={engine.d2h_transfers}")
+    if args.engine == "paged":
+        print(f"  pages={engine.pool.capacity} page_size={args.page_size} "
+              f"prefix_hit_rate={engine.pool.hit_rate:.3f} "
+              f"({engine.pool.prefix_hits}/{engine.pool.prefix_lookups})")
     for c in done[:3]:
         print(f"  uid={c.uid} reason={c.finished_reason} tokens={c.tokens[:8]}...")
 

@@ -110,6 +110,23 @@ class Model:
             return encdec.init_cache(self.cfg, batch, max_seq)
         return lm.init_cache(self.cfg, batch, max_seq)
 
+    def supports_paged_cache(self) -> bool:
+        """Whether this model's decode cache can be paged (dense
+        ``{k, v, pos}`` attention caches only): K/V pages are relocatable
+        and prompt-prefix pages shareable because position ``t``'s K/V
+        depends only on tokens ``<= t``."""
+        return lm.supports_paged_cache(self.cfg)
+
+    def init_paged_cache(self, batch: int, num_pages: int, page_size: int,
+                         max_pages: int) -> Pytree:
+        """Paged decode cache: global ``(L, KH, num_pages, page, Dh)``
+        K/V pools + per-slot ``(batch, max_pages)`` page tables (see
+        :func:`repro.models.lm.init_paged_cache`).  ``decode_step`` /
+        ``decode_and_sample`` dispatch on the cache layout, so the
+        serving fast path (fused sampling, chunked scans) is unchanged."""
+        return lm.init_paged_cache(self.cfg, batch, num_pages, page_size,
+                                   max_pages)
+
     def cache_specs(self, batch: int, max_seq: int) -> Pytree:
         return jax.eval_shape(lambda: self.init_cache(batch, max_seq))
 

@@ -133,6 +133,51 @@ def attend_decode(
     return out_proj(p, out, prefix), new_k, new_v, None
 
 
+def attend_decode_paged(
+    p: Dict[str, Any],
+    x: jax.Array,           # (B, 1, D) normed
+    k_pool: jax.Array,      # (KH, P, page, Dh) this layer's global page pool
+    v_pool: jax.Array,
+    page_table: jax.Array,  # (B, max_pages) pool page per logical page; -1 = unmapped
+    pos: jax.Array,         # (B,) current write position
+    cfg: ModelConfig,
+    *,
+    use_rope: bool = True,
+    prefix: str = "attn",
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """One-token attention against a paged KV pool.  Returns
+    ``(out, new_k_pool, new_v_pool)``.
+
+    The new token's K/V is scattered into physical page
+    ``page_table[b, pos[b] // page]`` at offset ``pos[b] % page``; the
+    attention read goes through :func:`repro.kernels.ops.paged_decode_attention`
+    (page-table-indirected, masked by ``kv_len = pos + 1``).  Slots whose
+    position has run past their mapped pages (retired-but-parked rows,
+    all ``-1``) clamp to pool page 0 — the engine reserves it as a
+    write-absorbing null page, so dead slots can never corrupt live
+    allocations.
+    """
+    B = x.shape[0]
+    page = k_pool.shape[2]
+    max_pages = page_table.shape[1]
+    q, k, v = qkv(p, x, cfg, prefix)  # (B,1,*,Dh)
+    if use_rope:
+        cos, sin = rope_angles(pos[:, None], cfg.head_dim, cfg.rope_theta)
+        q = apply_rope(q, cos, sin)
+        k = apply_rope(k, cos, sin)
+
+    bidx = jnp.arange(B)
+    slot = jnp.clip(pos // page, 0, max_pages - 1)
+    pid = jnp.maximum(page_table[bidx, slot], 0)  # -1 -> null page 0
+    off = pos % page
+    # pool is (KH, P, page, Dh); write (B, KH, Dh) token K/V at [*, pid, off]
+    new_k = k_pool.at[:, pid, off].set(k[:, 0].astype(k_pool.dtype).transpose(1, 0, 2))
+    new_v = v_pool.at[:, pid, off].set(v[:, 0].astype(v_pool.dtype).transpose(1, 0, 2))
+
+    out = ops.paged_decode_attention(q, new_k, new_v, page_table, kv_len=pos + 1)
+    return out_proj(p, out, prefix), new_k, new_v
+
+
 def _masked_decode_attention(q, k, v, valid):
     """q: (B,1,H,Dh); k/v: (B,T,KH,Dh); valid: (B,T) bool."""
     B, _, H, Dh = q.shape

@@ -19,7 +19,13 @@ import jax.numpy as jnp
 from repro.configs.base import ModelConfig
 from repro.kernels import ops, ref as kref
 from repro.models import recurrent as rec
-from repro.models.attention import attend_decode, attend_train, qkv, out_proj
+from repro.models.attention import (
+    attend_decode,
+    attend_decode_paged,
+    attend_train,
+    qkv,
+    out_proj,
+)
 from repro.models.common import (
     ParamBuilder,
     activation,
@@ -307,6 +313,39 @@ def init_cache(cfg: ModelConfig, batch: int, max_seq: int) -> Pytree:
     }
 
 
+def supports_paged_cache(cfg: ModelConfig) -> bool:
+    """Families whose decode cache is the plain dense ``{k, v, pos}``
+    pytree can be paged: K/V at position t is a pure function of tokens
+    ``<= t``, so pages are relocatable and prompt-prefix pages are
+    shareable.  Recurrent/hybrid state and the encoder-decoder cross
+    cache have no per-position pages to relocate."""
+    return not cfg.is_encoder_decoder and cfg.family not in ("ssm", "hybrid")
+
+
+def init_paged_cache(cfg: ModelConfig, batch: int, num_pages: int,
+                     page_size: int, max_pages: int) -> Pytree:
+    """Paged decode cache: one global KV pool shared by all slots plus a
+    per-slot page table.  Pool layout is ``(L, KH, num_pages, page, Dh)``
+    — KV-head-major so the Pallas kernel's page blocks are
+    ``(page, Dh)`` tiles.  ``page_table[b, j] = -1`` marks an unmapped
+    logical page; pool page 0 is reserved by the engine as the null
+    (parking) page and never allocated."""
+    if not supports_paged_cache(cfg):
+        raise ValueError(
+            f"paged KV cache unsupported for family {cfg.family!r}"
+            f"{' (encoder-decoder)' if cfg.is_encoder_decoder else ''}: "
+            f"only dense-attention caches page"
+        )
+    dt = jnp.dtype(cfg.dtype)
+    KH, Dh, L = cfg.num_kv_heads, cfg.head_dim, cfg.num_layers
+    return {
+        "k_pool": jnp.zeros((L, KH, num_pages, page_size, Dh), dt),
+        "v_pool": jnp.zeros((L, KH, num_pages, page_size, Dh), dt),
+        "page_table": jnp.full((batch, max_pages), -1, jnp.int32),
+        "pos": jnp.zeros((batch,), jnp.int32),
+    }
+
+
 def prefill(params: Pytree, cfg: ModelConfig, tokens: jax.Array,
             extra: Optional[Dict[str, jax.Array]] = None,
             max_seq: Optional[int] = None,
@@ -509,10 +548,41 @@ def _hybrid_block_prefill(cfg, p, x, is_global: bool, max_seq: int):
 
 def decode_step(params: Pytree, cfg: ModelConfig, cache: Pytree,
                 tokens: jax.Array) -> Tuple[jax.Array, Pytree]:
-    """tokens: (B, 1). Returns (logits (B, V), new cache)."""
+    """tokens: (B, 1). Returns (logits (B, V), new cache).
+
+    Dispatches on the cache layout: a ``k_pool`` key marks the paged
+    cache (:func:`init_paged_cache`) and routes through
+    :func:`repro.models.attention.attend_decode_paged`; otherwise the
+    dense per-slot cache paths run unchanged."""
     pos = cache["pos"]  # (B,)
     x = embed_tokens(params, cfg, tokens)
     blocks = params["blocks"]
+
+    if "k_pool" in cache:
+        page_table = cache["page_table"]
+
+        def body(xx, xs):
+            pl_, kp, vp = xs
+            xx = hints.act(xx)
+            h = apply_norm(pl_, "norm1", xx, cfg.norm)
+            attn_out, nkp, nvp = attend_decode_paged(
+                pl_, h, kp, vp, page_table, pos, cfg
+            )
+            xx = xx + attn_out
+            h2 = apply_norm(pl_, "norm2", xx, cfg.norm)
+            if cfg.num_experts > 0:
+                out, _ = apply_moe(pl_, h2, cfg)
+                xx = xx + out
+            elif cfg.d_ff > 0:
+                xx = xx + apply_mlp(pl_, h2, cfg)
+            return xx, (nkp, nvp)
+
+        x, (nk, nv) = jax.lax.scan(
+            body, x, (blocks, cache["k_pool"], cache["v_pool"])
+        )
+        logits = lm_logits(params, cfg, x)[:, 0]
+        return logits, {"k_pool": nk, "v_pool": nv,
+                        "page_table": page_table, "pos": pos + 1}
 
     if cfg.family == "ssm":
         x, new_cache = _xlstm_decode(cfg, blocks, cache, x)

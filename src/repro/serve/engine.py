@@ -36,6 +36,34 @@ state or routing would absorb pad steps).
 benchmark baseline (`benchmarks/serve_bench.py` asserts greedy token
 parity between the two).
 
+``engine="paged"`` swaps the dense per-slot ``(max_seq,)`` KV rectangles
+for a global page pool (``models.api.Model.init_paged_cache``): K/V live
+in ``(L, KH, num_pages, page, Dh)`` pools and each slot maps logical
+pages to physical ones through a ``(max_batch, max_pages)`` page table.
+HBM then scales with *live tokens*, not ``max_batch x max_seq``:
+
+  * pages are allocated at admission for the request's full budget
+    (``ceil((plen + max_new_tokens - 1) / page)`` — no mid-decode OOM)
+    and freed at retirement through a host-side free list
+    (:class:`PagePool`);
+  * full prompt pages are deduplicated across requests by a chain hash
+    of the token prefix they cover: two requests sharing a prompt prefix
+    map the same physical pages (refcounted, read-only — decode only
+    ever writes at ``pos >= plen``, past every shared page);
+  * pool page 0 is reserved as a write-absorbing null page: retired
+    slots keep decoding inside the static batch, so their table rows
+    are parked at ``-1`` (clamped to page 0 by the attention update)
+    and they can never corrupt live allocations;
+  * admission is prompt-length-aware for every non-legacy engine: pass 0
+    pulls all queued requests sharing the head-of-queue's shape bucket
+    (bigger groups, fewer prefill dispatches), pass 1 fills the
+    remaining slots FIFO — the head is always admitted first, so no
+    request starves.
+
+The decode hot loop is unchanged — ``decode_step`` dispatches on the
+cache layout, so fused sampling and chunked decode run identically over
+paged caches, and greedy tokens agree bit-for-bit with ``fused``.
+
 Determinism: a slot's sample stream is keyed by ``fold_in(fold_in(seed,
 slot), position)`` — reproducible run-to-run, and identical between
 step-by-step and chunked decode for a given slot assignment (chunked
@@ -48,6 +76,7 @@ engines; greedy tokens agree bit-for-bit.
 from __future__ import annotations
 
 import dataclasses
+import hashlib
 from collections import deque
 from typing import Any, Deque, Dict, List, Optional, Tuple
 
@@ -85,6 +114,91 @@ def _pow2_bucket(n: int, cap: int) -> int:
     while b < n:
         b *= 2
     return min(b, cap)
+
+
+class PagePool:
+    """Host-side allocator for the global K/V page pool.
+
+    Page 0 is reserved as the null/parking page (never handed out):
+    retired slots' table rows clamp to it, so a stale write can never
+    land in a live allocation.  Full prompt pages are deduplicated by a
+    *chain hash* — a digest of every prompt token the page and its
+    predecessors cover — so identical prefixes map identical physical
+    pages.  Sharing is sound because a causal model's K/V at position
+    ``t`` depends only on tokens ``<= t``, and shared pages are
+    read-only (decode writes start at ``pos >= plen``, past them).
+    Registry entries are refcounted with the pages themselves and drop
+    out when the last owner frees the page.
+    """
+
+    def __init__(self, num_pages: int, page_size: int):
+        if num_pages < 2:
+            raise ValueError(f"num_pages must be >= 2 (page 0 is the "
+                             f"reserved null page), got {num_pages}")
+        self.num_pages = num_pages
+        self.page = page_size
+        self.refs = np.zeros(num_pages, np.int32)
+        self._free = list(range(num_pages - 1, 0, -1))  # stack: pop() -> 1 first
+        self._registry: Dict[bytes, int] = {}   # chain hash -> physical page
+        self._page_hash: Dict[int, bytes] = {}  # physical page -> chain hash
+        self.prefix_hits = 0
+        self.prefix_lookups = 0
+
+    @property
+    def capacity(self) -> int:
+        """Allocatable pages (excludes the reserved null page)."""
+        return self.num_pages - 1
+
+    @property
+    def pages_free(self) -> int:
+        return len(self._free)
+
+    @property
+    def pages_in_use(self) -> int:
+        return self.capacity - len(self._free)
+
+    @property
+    def hit_rate(self) -> float:
+        return self.prefix_hits / max(1, self.prefix_lookups)
+
+    def lookup(self, chain_hash: bytes) -> Optional[int]:
+        """Find a shared prompt page; increfs and returns it on a hit."""
+        self.prefix_lookups += 1
+        pid = self._registry.get(chain_hash)
+        if pid is None:
+            return None
+        self.prefix_hits += 1
+        self.refs[pid] += 1
+        return pid
+
+    def alloc(self, chain_hash: Optional[bytes] = None) -> Optional[int]:
+        """Pop a free page (ref = 1), registering it for prefix sharing
+        when a chain hash is given.  Returns None when the pool is dry."""
+        if not self._free:
+            return None
+        pid = self._free.pop()
+        self.refs[pid] = 1
+        if chain_hash is not None:
+            self._registry[chain_hash] = pid
+            self._page_hash[pid] = chain_hash
+        return pid
+
+    def free(self, pid: int) -> None:
+        """Decref; the page returns to the free list (and leaves the
+        sharing registry) when its last owner lets go."""
+        self.refs[pid] -= 1
+        if self.refs[pid] == 0:
+            h = self._page_hash.pop(pid, None)
+            if h is not None:
+                self._registry.pop(h, None)
+            self._free.append(pid)
+
+
+def _chain_hash(prompt: np.ndarray, end: int) -> bytes:
+    """Digest of ``prompt[:end]`` — the sharing key for the page whose
+    last covered position is ``end - 1``."""
+    return hashlib.sha1(np.ascontiguousarray(
+        prompt[:end], dtype=np.int32).tobytes()).digest()
 
 
 def _cache_batch_axes(model: Model, max_seq: int) -> Pytree:
@@ -146,6 +260,59 @@ def _make_prefill_insert(model: Model, max_seq: int, axes: Pytree,
     return fn
 
 
+def _make_paged_prefill_insert(model: Model, page: int, use_lens: bool):
+    """Jittable batched admission for the paged cache: prefill a request
+    group densely (a throwaway ``(n_pad, S)`` mini-cache), sample each
+    row's first token on device, then scatter the prompt K/V into the
+    global pool one page at a time.
+
+    The copy list (``src_row``/``src_page`` -> ``dst_page``) is built on
+    the host from the admission plan: shared prefix pages already hold
+    their data and are simply skipped, so a full prefix hit costs zero
+    page copies.  ``n_copy``/``n_valid`` are traced (bounded by the
+    pow-of-two padding of the arrays), so one compiled program serves
+    every admission batch of the same bucket shape."""
+    from repro.models import sampling
+
+    def fn(params, k_pool, v_pool, pos, tokens, extra, lens, slots, n_valid,
+           src_row, src_page, dst_page, n_copy, base_key, temps):
+        # the mini-cache is padded to a page multiple so every prompt
+        # page slices in bounds (pad K/V is garbage but masked by kv_len
+        # until decode overwrites it, exactly like the dense engine)
+        s_cache = -(-tokens.shape[1] // page) * page
+        logits, cache1 = model.prefill(
+            params, tokens, extra, max_seq=s_cache,
+            lens=lens if use_lens else None,
+        )
+        keys = sampling.slot_keys(base_key, slots, lens - 1)
+        toks = sampling.sample_tokens(logits, keys, temps)
+        kd, vd = cache1["k"], cache1["v"]  # (L, n_pad, s_cache, KH, Dh)
+        L, _, _, KH, Dh = kd.shape
+
+        def copy(i, pools):
+            kp, vp = pools
+            r, lp, dp = src_row[i], src_page[i], dst_page[i]
+            blk_k = jax.lax.dynamic_slice(
+                kd, (0, r, lp * page, 0, 0), (L, 1, page, KH, Dh))
+            blk_v = jax.lax.dynamic_slice(
+                vd, (0, r, lp * page, 0, 0), (L, 1, page, KH, Dh))
+            # (L, page, KH, Dh) -> pool block (L, KH, 1, page, Dh)
+            blk_k = blk_k[:, 0].transpose(0, 2, 1, 3)[:, :, None]
+            blk_v = blk_v[:, 0].transpose(0, 2, 1, 3)[:, :, None]
+            kp = jax.lax.dynamic_update_slice(
+                kp, blk_k.astype(kp.dtype), (0, 0, dp, 0, 0))
+            vp = jax.lax.dynamic_update_slice(
+                vp, blk_v.astype(vp.dtype), (0, 0, dp, 0, 0))
+            return kp, vp
+
+        k_pool, v_pool = jax.lax.fori_loop(0, n_copy, copy, (k_pool, v_pool))
+        pos = jax.lax.fori_loop(
+            0, n_valid, lambda i, p: p.at[slots[i]].set(lens[i]), pos)
+        return toks, k_pool, v_pool, pos
+
+    return fn
+
+
 def _make_decode_chunk(model: Model, steps: int):
     """Jittable chunked decode: ``steps`` fused decode+sample iterations
     under ``lax.scan``, masking slots that finish (EOS or budget) so
@@ -177,9 +344,11 @@ def _make_decode_chunk(model: Model, steps: int):
 class ServeEngine:
     def __init__(self, model: Model, params: Pytree, *, max_batch: int = 8,
                  max_seq: int = 256, eos_id: int = 2, seed: int = 0,
-                 engine: str = "fused", decode_chunk: int = 1):
-        if engine not in ("fused", "legacy"):
-            raise ValueError(f"engine must be 'fused' or 'legacy', got {engine!r}")
+                 engine: str = "fused", decode_chunk: int = 1,
+                 page_size: int = 16, num_pages: Optional[int] = None):
+        if engine not in ("fused", "legacy", "paged"):
+            raise ValueError(f"engine must be 'fused', 'legacy' or 'paged', "
+                             f"got {engine!r}")
         if decode_chunk < 1:
             raise ValueError(f"decode_chunk must be >= 1, got {decode_chunk}")
         if engine == "legacy" and decode_chunk > 1:
@@ -195,7 +364,35 @@ class ServeEngine:
         self.rng = jax.random.PRNGKey(seed)      # legacy serial sampling
         self.base_key = jax.random.PRNGKey(seed)  # fused per-slot fold-in
 
-        self.cache = model.init_cache(max_batch, max_seq)
+        self.pool: Optional[PagePool] = None
+        if engine == "paged":
+            if not model.supports_paged_cache():
+                raise ValueError(
+                    f"engine='paged' requires a dense attention decode "
+                    f"cache; family {model.cfg.family!r} "
+                    f"(encdec={model.cfg.is_encoder_decoder}) keeps "
+                    f"recurrent state that cannot be paged"
+                )
+            if page_size < 1 or page_size & (page_size - 1):
+                raise ValueError(f"page_size must be a power of two, "
+                                 f"got {page_size}")
+            self.page_size = page_size
+            self._max_pages = -(-max_seq // page_size)  # table width / slot
+            if num_pages is None:
+                # full-occupancy capacity + the reserved null page; pass a
+                # smaller pool to make HBM proportional to live tokens
+                num_pages = 1 + max_batch * self._max_pages
+            self.num_pages = num_pages
+            self.pool = PagePool(num_pages, page_size)
+            self.cache = model.init_paged_cache(
+                max_batch, num_pages=num_pages, page_size=page_size,
+                max_pages=self._max_pages)
+            # host mirror of the device page table; synced before decode
+            self._ptable = np.full((max_batch, self._max_pages), -1, np.int32)
+            self._ptable_dirty = False
+            self._slot_pages: List[List[int]] = [[] for _ in range(max_batch)]
+        else:
+            self.cache = model.init_cache(max_batch, max_seq)
         self.active = np.zeros(max_batch, dtype=bool)
         self.req: List[Optional[Request]] = [None] * max_batch
         self.emitted: List[List[int]] = [[] for _ in range(max_batch)]
@@ -228,10 +425,17 @@ class ServeEngine:
         self._prefill_insert_pad = jax.jit(
             _make_prefill_insert(model, max_seq, self._axes, use_lens=True)
         )
+        if engine == "paged":
+            self._paged_insert_exact = jax.jit(
+                _make_paged_prefill_insert(model, page_size, use_lens=False)
+            )
+            self._paged_insert_pad = jax.jit(
+                _make_paged_prefill_insert(model, page_size, use_lens=True)
+            )
         self._decode_chunk = (
             jax.jit(_make_decode_chunk(model, decode_chunk),
                     static_argnames=("greedy_only",))
-            if engine == "fused" and decode_chunk > 1 else None
+            if engine in ("fused", "paged") and decode_chunk > 1 else None
         )
 
     # ------------------------------------------------------------------
@@ -249,7 +453,20 @@ class ServeEngine:
         # worst case the request decodes its full budget: the last decode
         # writes K/V at position plen + max_new_tokens - 2, which must
         # stay inside the cache or the scatter silently clamps/drops
-        if plen + req.max_new_tokens - 1 > self.max_seq:
+        if self.engine == "paged":
+            need = -(-(plen + req.max_new_tokens - 1) // self.page_size)
+            limit = min(self.pool.capacity, self._max_pages)
+            if need > limit:
+                raise ValueError(
+                    f"prompt ({plen}) + max_new_tokens "
+                    f"({req.max_new_tokens}) needs {need} KV pages but "
+                    f"engine='paged' can map at most {limit} pages per "
+                    f"request ({self.pool.capacity} allocatable pages of "
+                    f"page_size={self.page_size} in the pool, "
+                    f"{self._max_pages} page-table entries per slot): "
+                    f"the request could never be admitted"
+                )
+        elif plen + req.max_new_tokens - 1 > self.max_seq:
             raise ValueError(
                 f"prompt ({plen}) + max_new_tokens ({req.max_new_tokens}) "
                 f"- 1 exceeds max_seq={self.max_seq}: the decode would "
@@ -280,27 +497,57 @@ class ServeEngine:
             for k, v in extra.items()
         ))
 
+    def _group_key(self, req: Request) -> Tuple:
+        """Admission-group key: requests sharing it prefill in one jitted
+        dispatch.  Paged groups bucket to at least one page so the
+        page-granular scatter slices in bounds."""
+        plen = len(req.prompt)
+        sig = self._extra_sig(req.extra)
+        if self._padded_admission:
+            seq = _pow2_bucket(max(plen, _MIN_SEQ_BUCKET), self.max_seq)
+            if self.engine == "paged":
+                seq = max(seq, self.page_size)
+            return ("pad", seq, sig)
+        return ("exact", plen, sig)
+
+    def _select(self, n_slots: int) -> List[Request]:
+        """Prompt-length-aware two-pass selection: pass 0 pulls every
+        queued request sharing the head request's shape bucket forward
+        (bigger admission groups, fewer prefill dispatches); pass 1
+        fills the remaining slots FIFO.  The head of the queue is always
+        selected first, so reordering never starves a request."""
+        if not self.queue or n_slots <= 0:
+            return []
+        head_key = self._group_key(self.queue[0])
+        picked: List[Request] = []
+        rest: List[Request] = []
+        for r in self.queue:
+            if len(picked) < n_slots and self._group_key(r) == head_key:
+                picked.append(r)
+            else:
+                rest.append(r)
+        while rest and len(picked) < n_slots:
+            picked.append(rest.pop(0))
+        self.queue = deque(rest)
+        return picked
+
     def _admit(self) -> None:
         if self.engine == "legacy":
             self._admit_legacy()
+            return
+        if self.engine == "paged":
+            self._admit_paged()
             return
         if not self.queue:
             return
         free = np.flatnonzero(~self.active)
         if free.size == 0:
             return
-        n = min(int(free.size), len(self.queue))
-        pairs = [(int(free[i]), self.queue.popleft()) for i in range(n)]
+        selected = self._select(int(free.size))
+        pairs = [(int(free[i]), req) for i, req in enumerate(selected)]
         groups: Dict[Tuple, List[Tuple[int, Request]]] = {}
         for slot, req in pairs:
-            plen = len(req.prompt)
-            sig = self._extra_sig(req.extra)
-            if self._padded_admission:
-                key = ("pad", _pow2_bucket(max(plen, _MIN_SEQ_BUCKET),
-                                           self.max_seq), sig)
-            else:
-                key = ("exact", plen, sig)
-            groups.setdefault(key, []).append((slot, req))
+            groups.setdefault(self._group_key(req), []).append((slot, req))
         for (kind, seq_len, _), members in groups.items():
             self._admit_group(kind, seq_len, members)
 
@@ -335,6 +582,127 @@ class ServeEngine:
         first = np.asarray(first)
         for i, (slot, req) in enumerate(members):
             self._place(slot, req, int(first[i]))
+
+    # ---- paged admission ---------------------------------------------
+    def _plan_pages(self, req: Request):
+        """Reserve the request's full page budget (prompt + decode room,
+        so decode can never OOM), sharing full prompt pages through the
+        chain-hash registry.  Returns ``(pages, copy_lps)`` — physical
+        pages per logical page, plus which logical pages need their K/V
+        copied from the prefill (shared hits need none) — or None with
+        every reservation rolled back when the pool can't fit it."""
+        plen = len(req.prompt)
+        n_total = -(-(plen + req.max_new_tokens - 1) // self.page_size)
+        n_prompt = -(-plen // self.page_size)
+        n_full = plen // self.page_size  # only fully-covered pages share
+        prompt = np.asarray(req.prompt, np.int32)
+        pages: List[int] = []
+        copies: List[int] = []
+        for k in range(n_total):
+            h = None
+            pid = None
+            if k < n_full:
+                h = _chain_hash(prompt, (k + 1) * self.page_size)
+                pid = self.pool.lookup(h)
+            if pid is None:
+                pid = self.pool.alloc(h)
+                if pid is None:
+                    for p in pages:
+                        self.pool.free(p)
+                    return None
+                if k < n_prompt:
+                    copies.append(k)
+            pages.append(pid)
+        return pages, copies
+
+    def _admit_paged(self) -> None:
+        if not self.queue:
+            return
+        free = np.flatnonzero(~self.active)
+        if free.size == 0:
+            return
+        selected = self._select(int(free.size))
+        admitted: List[Tuple[int, Request, List[int], List[int]]] = []
+        for i, req in enumerate(selected):
+            plan = self._plan_pages(req)
+            if plan is None:
+                # pool exhausted: requeue this and everything behind it
+                # at the front, order preserved — retirements will free
+                # pages and the next admission retries
+                self.queue.extendleft(reversed(selected[i:]))
+                break
+            admitted.append((int(free[len(admitted)]), req, *plan))
+        if not admitted:
+            return
+        groups: Dict[Tuple, List[Tuple[int, Request, List[int], List[int]]]] = {}
+        for entry in admitted:
+            groups.setdefault(self._group_key(entry[1]), []).append(entry)
+        for (kind, seq_len, _), members in groups.items():
+            self._admit_group_paged(kind, seq_len, members)
+
+    def _admit_group_paged(self, kind: str, seq_len: int, members) -> None:
+        n = len(members)
+        n_pad = _pow2_bucket(n, self.max_batch)
+        tokens = np.zeros((n_pad, seq_len), np.int32)
+        lens = np.ones(n_pad, np.int32)
+        temps = np.zeros(n_pad, np.float32)
+        slots = np.zeros(n_pad, np.int32)
+        src_row: List[int] = []
+        src_page: List[int] = []
+        dst_page: List[int] = []
+        for i, (slot, req, pages, copies) in enumerate(members):
+            plen = len(req.prompt)
+            tokens[i, :plen] = np.asarray(req.prompt, np.int32)
+            lens[i] = plen
+            temps[i] = req.temperature
+            slots[i] = slot
+            row = np.full(self._max_pages, -1, np.int32)
+            row[:len(pages)] = pages
+            self._ptable[slot] = row
+            self._slot_pages[slot] = pages
+            for lp in copies:
+                src_row.append(i)
+                src_page.append(lp)
+                dst_page.append(pages[lp])
+        self._ptable_dirty = True
+        n_copy = len(src_row)
+        c_pad = _pow2_bucket(max(n_copy, 1), 1 << 30)
+        sr = np.zeros(c_pad, np.int32)
+        sp = np.zeros(c_pad, np.int32)
+        dp = np.zeros(c_pad, np.int32)
+        sr[:n_copy] = src_row
+        sp[:n_copy] = src_page
+        dp[:n_copy] = dst_page
+        extra = None
+        if members[0][1].extra:
+            extra = {}
+            for k in sorted(members[0][1].extra):
+                rows = [np.asarray(req.extra[k]) for _, req, _, _ in members]
+                rows += [rows[0]] * (n_pad - n)
+                extra[k] = jnp.asarray(np.stack(rows))
+        fn = (self._paged_insert_pad if kind == "pad"
+              else self._paged_insert_exact)
+        toks, nk, nv, npos = fn(
+            self.params, self.cache["k_pool"], self.cache["v_pool"],
+            self.cache["pos"], jnp.asarray(tokens), extra,
+            jnp.asarray(lens), jnp.asarray(slots), jnp.int32(n),
+            jnp.asarray(sr), jnp.asarray(sp), jnp.asarray(dp),
+            jnp.int32(n_copy), self.base_key, jnp.asarray(temps),
+        )
+        self.cache = {"k_pool": nk, "v_pool": nv,
+                      "page_table": self.cache["page_table"], "pos": npos}
+        first = np.asarray(toks)
+        for i, (slot, req, _, _) in enumerate(members):
+            self._place(slot, req, int(first[i]))
+
+    def _sync_ptable(self) -> None:
+        """Upload the host page-table mirror before a decode dispatch.
+        Rows parked at -1 (retired slots) clamp to the null page, so a
+        freed-and-reallocated page can never be written by its old
+        owner."""
+        if self.engine == "paged" and self._ptable_dirty:
+            self.cache["page_table"] = jnp.asarray(self._ptable)
+            self._ptable_dirty = False
 
     def _admit_legacy(self) -> None:
         while self.queue and not self.active.all():
@@ -378,6 +746,12 @@ class ServeEngine:
         self.active[slot] = False
         self.req[slot] = None
         self.emitted[slot] = []
+        if self.engine == "paged":
+            for p in self._slot_pages[slot]:
+                self.pool.free(p)
+            self._slot_pages[slot] = []
+            self._ptable[slot] = -1  # park: dead writes go to the null page
+            self._ptable_dirty = True
 
     # ------------------------------------------------------------------
     # decode
@@ -406,6 +780,7 @@ class ServeEngine:
         active slot, retire finished slots.  On the fused path this is one
         device dispatch and one (B,) host transfer."""
         self._admit()
+        self._sync_ptable()
         if not self.active.any():
             return
         if self.engine == "legacy":
@@ -438,6 +813,7 @@ class ServeEngine:
             self.step()
             return 1
         self._admit()
+        self._sync_ptable()
         if not self.active.any():
             return 0
         budgets = np.asarray(
@@ -456,7 +832,7 @@ class ServeEngine:
 
     def run(self, max_steps: int = 10_000) -> List[Completion]:
         steps = 0
-        chunked = self.engine == "fused" and self.decode_chunk > 1
+        chunked = self.engine in ("fused", "paged") and self.decode_chunk > 1
         while (self.queue or self.active.any()) and steps < max_steps:
             if chunked:
                 steps += self.step_chunk() or 1
@@ -470,21 +846,68 @@ class ServeEngine:
     def utilization(self) -> float:
         return float(self.active.mean())
 
+    @property
+    def live_tokens(self) -> int:
+        """Tokens currently resident in the KV cache across active slots
+        (prompt + emitted so far)."""
+        return sum(
+            len(self.req[s].prompt) + len(self.emitted[s])
+            for s in range(self.max_batch) if self.active[s]
+        )
+
+    def kv_stats(self) -> Dict[str, float]:
+        """KV-memory accounting for the capacity claims in the bench: a
+        dense engine reserves the full ``max_batch x max_seq`` rectangle
+        up front, a paged engine holds ``pages_in_use x page`` tokens of
+        HBM (plus whatever the pool was sized to) — memory proportional
+        to live tokens, not to worst-case shape."""
+        cfg = self.model.cfg
+        per_tok = (2 * cfg.num_layers * cfg.num_kv_heads * cfg.head_dim
+                   * jnp.dtype(cfg.dtype).itemsize)
+        live = self.live_tokens
+        stats: Dict[str, float] = {
+            "kv_bytes_per_token": per_tok,
+            "live_tokens": live,
+        }
+        if self.engine == "paged":
+            in_use = self.pool.pages_in_use * self.page_size * per_tok
+            stats.update(
+                kv_bytes_allocated=self.num_pages * self.page_size * per_tok,
+                kv_bytes_in_use=in_use,
+                kv_bytes_per_live_token=in_use / max(1, live),
+                pages_in_use=self.pool.pages_in_use,
+                pages_total=self.pool.capacity,
+                prefix_hits=self.pool.prefix_hits,
+                prefix_lookups=self.pool.prefix_lookups,
+                prefix_hit_rate=self.pool.hit_rate,
+            )
+        else:
+            alloc = self.max_batch * self.max_seq * per_tok
+            stats.update(
+                kv_bytes_allocated=alloc,
+                kv_bytes_in_use=alloc,  # dense: reserved whether live or not
+                kv_bytes_per_live_token=alloc / max(1, live),
+            )
+        return stats
+
 
 def smoke_serve(model: Model, params: Pytree, *, num_requests: int,
                 vocab_size: int, max_batch: int = 8, max_seq: int = 96,
                 prompt_len: int = 8, max_new_tokens: int = 8,
                 seed: int = 0, engine: str = "fused", decode_chunk: int = 1,
-                temperature: float = 0.0
+                temperature: float = 0.0, page_size: int = 16,
+                num_pages: Optional[int] = None
                 ) -> Tuple[List[Completion], Dict[str, float]]:
     """Drive one engine through a synthetic request burst and report
     throughput stats — the serving smoke used by ServeStage and quick
     engine checks.  Returns (completions, stats) where stats carries
-    request/token counts and tokens/s for the metric log."""
+    request/token counts and tokens/s for the metric log (plus prefix
+    sharing counters when ``engine='paged'``)."""
     import time
 
     eng = ServeEngine(model, params, max_batch=max_batch, max_seq=max_seq,
-                      seed=seed, engine=engine, decode_chunk=decode_chunk)
+                      seed=seed, engine=engine, decode_chunk=decode_chunk,
+                      page_size=page_size, num_pages=num_pages)
     rng = np.random.default_rng(seed)
     t0 = time.perf_counter()
     for i in range(num_requests):
@@ -499,4 +922,8 @@ def smoke_serve(model: Model, params: Pytree, *, num_requests: int,
              "step_time_s": dt, "tok_per_s": toks / max(dt, 1e-9),
              "engine": engine, "decode_chunk": decode_chunk,
              "d2h_transfers": eng.d2h_transfers}
+    if engine == "paged":
+        stats["prefix_hit_rate"] = eng.pool.hit_rate
+        stats["prefix_hits"] = eng.pool.prefix_hits
+        stats["pages_total"] = eng.pool.capacity
     return completions, stats

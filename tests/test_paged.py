@@ -1,0 +1,314 @@
+"""Paged KV cache: Pallas paged-attention kernel vs oracle, the XLA
+scan fallback, the page-pool allocator (refcounts + prefix registry),
+and the engine-level contract — ``engine="paged"`` is token-identical
+to ``engine="fused"`` while holding HBM proportional to live tokens."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, reduced
+from repro.kernels import ops, ref
+from repro.kernels.flash_xla import paged_attention_xla
+from repro.models import build_model
+from repro.serve.engine import PagePool, Request, ServeEngine
+
+TOL = {jnp.float32: 2e-5, jnp.bfloat16: 2e-2}
+
+
+def _rand(rng, shape, dtype):
+    return jnp.asarray(rng.normal(size=shape).astype(np.float32), dtype)
+
+
+def _paged_setup(rng, B, KH, G, D, page, max_pages, num_pages, kv_len,
+                 dtype=jnp.float32):
+    """Random pools + a valid page table: each row maps ceil(kv_len/page)
+    distinct physical pages (never page 0, the engine's null page) and
+    leaves the rest unmapped (-1)."""
+    H = KH * G
+    q = _rand(rng, (B, 1, H, D), dtype)
+    k_pool = _rand(rng, (KH, num_pages, page, D), dtype)
+    v_pool = _rand(rng, (KH, num_pages, page, D), dtype)
+    lens = np.asarray(kv_len, np.int32)
+    table = np.full((B, max_pages), -1, np.int32)
+    free = list(rng.permutation(np.arange(1, num_pages)))
+    for b in range(B):
+        for lp in range(-(-int(lens[b]) // page)):
+            table[b, lp] = free.pop()
+    return q, k_pool, v_pool, jnp.asarray(table), jnp.asarray(lens)
+
+
+# ===========================================================================
+# kernel: Pallas (interpret) and XLA fallback vs gather oracle
+# ===========================================================================
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize(
+    "B,KH,G,D,page,max_pages",
+    [
+        (1, 4, 1, 32, 16, 4),   # MHA
+        (4, 2, 4, 32, 16, 4),   # GQA
+        (2, 1, 8, 16, 8, 8),    # MQA, small pages
+        (2, 2, 2, 48, 16, 4),   # head_dim padded to the 128 lane
+    ],
+)
+def test_paged_kernel_matches_oracle(rng, B, KH, G, D, page, max_pages, dtype):
+    num_pages = 1 + B * max_pages
+    kv_len = rng.integers(1, page * max_pages + 1, B)
+    q, kp, vp, table, lens = _paged_setup(
+        rng, B, KH, G, D, page, max_pages, num_pages, kv_len, dtype)
+    want = ref.paged_attention(q, kp, vp, table, lens)
+    ops.set_backend("interpret")
+    try:
+        got = ops.paged_decode_attention(q, kp, vp, table, kv_len=lens)
+    finally:
+        ops.set_backend("ref")
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32),
+        atol=TOL[dtype], rtol=TOL[dtype])
+
+
+@pytest.mark.parametrize("kv_len", [1, 7, 16, 64])
+def test_paged_xla_fallback_matches_oracle(rng, kv_len):
+    B, KH, G, D, page, max_pages = 3, 2, 2, 32, 16, 4
+    q, kp, vp, table, lens = _paged_setup(
+        rng, B, KH, G, D, page, max_pages, 1 + B * max_pages,
+        np.full(B, kv_len))
+    got = paged_attention_xla(q, kp, vp, table, lens)
+    want = ref.paged_attention(q, kp, vp, table, lens)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=2e-5)
+
+
+def test_paged_oracle_equals_dense_gather(rng):
+    """Gathering the mapped pages into a dense cache and running the
+    dense decode attention is bit-identical to the paged oracle — the
+    foundation of the paged==fused engine parity."""
+    B, KH, G, D, page, max_pages = 2, 2, 2, 32, 8, 4
+    q, kp, vp, table, lens = _paged_setup(
+        rng, B, KH, G, D, page, max_pages, 1 + B * max_pages,
+        np.asarray([13, 29]))
+    pt = np.maximum(np.asarray(table), 0)
+    k = np.asarray(kp)[:, pt].transpose(1, 2, 3, 0, 4).reshape(
+        B, max_pages * page, KH, D)
+    v = np.asarray(vp)[:, pt].transpose(1, 2, 3, 0, 4).reshape(
+        B, max_pages * page, KH, D)
+    dense = ops.decode_attention(q, jnp.asarray(k), jnp.asarray(v),
+                                 kv_len=lens)
+    paged = ref.paged_attention(q, kp, vp, table, lens)
+    np.testing.assert_array_equal(np.asarray(dense), np.asarray(paged))
+
+
+def test_paged_kernel_ignores_dead_pages(rng):
+    """Entries past kv_len (including -1/unmapped) must not contribute:
+    scribbling over every unmapped page leaves the output unchanged."""
+    B, KH, G, D, page, max_pages = 2, 2, 2, 32, 8, 4
+    q, kp, vp, table, lens = _paged_setup(
+        rng, B, KH, G, D, page, max_pages, 1 + B * max_pages,
+        np.asarray([9, 20]))
+    want = ref.paged_attention(q, kp, vp, table, lens)
+    mapped = set(np.asarray(table)[np.asarray(table) >= 0].tolist())
+    unmapped = [p for p in range(kp.shape[1]) if p not in mapped]
+    kp2 = kp.at[:, jnp.asarray(unmapped)].set(1e4)
+    vp2 = vp.at[:, jnp.asarray(unmapped)].set(-1e4)
+    got = ref.paged_attention(q, kp2, vp2, table, lens)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    got_xla = paged_attention_xla(q, kp2, vp2, table, lens)
+    np.testing.assert_allclose(np.asarray(got_xla), np.asarray(want),
+                               atol=2e-5)
+
+
+# ===========================================================================
+# PagePool allocator
+# ===========================================================================
+def test_page_pool_alloc_free_refcount():
+    pool = PagePool(num_pages=5, page_size=8)
+    assert pool.capacity == 4 and pool.pages_free == 4
+    a, b = pool.alloc(), pool.alloc()
+    assert 0 not in (a, b) and a != b  # page 0 reserved
+    assert pool.pages_in_use == 2
+    pool.free(a)
+    assert pool.pages_free == 3
+    c = pool.alloc(chain_hash=b"h1")
+    assert pool.lookup(b"h1") == c  # hit increfs
+    assert pool.refs[c] == 2
+    pool.free(c)
+    assert pool.lookup(b"h1") == c and pool.refs[c] == 2  # still registered
+    pool.free(c)
+    pool.free(c)
+    assert pool.refs[c] == 0 and pool.lookup(b"h1") is None  # registry drops
+    assert pool.prefix_hits == 2 and pool.prefix_lookups == 3
+    pool.free(b)
+    assert pool.pages_free == 4
+    with pytest.raises(ValueError, match="num_pages"):
+        PagePool(num_pages=1, page_size=8)
+
+
+def test_page_pool_exhaustion_returns_none():
+    pool = PagePool(num_pages=3, page_size=8)
+    assert pool.alloc() is not None and pool.alloc() is not None
+    assert pool.alloc() is None  # dry, not an exception
+
+
+# ===========================================================================
+# engine: paged == fused, across attention-family configs
+# ===========================================================================
+@pytest.fixture(scope="module")
+def qwen2_setup():
+    cfg = reduced(get_config("qwen2-1.5b"))
+    model = build_model(cfg)
+    params, _ = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+def _run_burst(setup, *, engine, decode_chunk=1, max_batch=3, seed=0,
+               temperature=0.0, prompt_lens=(6, 9, 6, 11, 7), max_new=5,
+               shared_prefix=0, **engine_kw):
+    cfg, model, params = setup
+    eng = ServeEngine(model, params, max_batch=max_batch, max_seq=64,
+                      eos_id=-1, seed=seed, engine=engine,
+                      decode_chunk=decode_chunk, **engine_kw)
+    rng = np.random.default_rng(7)
+    prefix = rng.integers(1, cfg.vocab_size, shared_prefix).astype(np.int32)
+    for i, plen in enumerate(prompt_lens):
+        tail = rng.integers(1, cfg.vocab_size, plen).astype(np.int32)
+        eng.submit(Request(uid=i, prompt=np.concatenate([prefix, tail]),
+                           max_new_tokens=max_new + (i % 3),
+                           temperature=temperature))
+    done = eng.run()
+    assert len(done) == len(prompt_lens)
+    return {c.uid: (tuple(c.tokens), c.finished_reason) for c in done}, eng
+
+
+@pytest.mark.parametrize("arch", ["qwen2-1.5b", "glm4-9b", "qwen3-moe"])
+def test_paged_greedy_parity_with_fused(arch):
+    """engine='paged' emits bit-identical greedy tokens to engine='fused'
+    across attention families: GQA+bias (qwen2), dense GQA (glm4), and
+    MoE (qwen3-moe — exact-length admission, no padded prefill)."""
+    cfg = reduced(get_config(arch))
+    model = build_model(cfg)
+    params, _ = model.init(jax.random.PRNGKey(0))
+    setup = (cfg, model, params)
+    fused, _ = _run_burst(setup, engine="fused")
+    paged, eng = _run_burst(setup, engine="paged", page_size=8)
+    assert paged == fused
+    assert eng.pool.pages_in_use == 0  # every page returned at retire
+
+
+def test_paged_chunked_matches_step(qwen2_setup):
+    step, _ = _run_burst(qwen2_setup, engine="paged", page_size=8)
+    for chunk in (2, 4):
+        chunked, _ = _run_burst(qwen2_setup, engine="paged", page_size=8,
+                                decode_chunk=chunk)
+        assert chunked == step
+
+
+def test_paged_temperature_parity_with_fused(qwen2_setup):
+    """With a fixed slot assignment (requests == slots) the per-slot
+    sample streams are keyed by (seed, slot, pos) — identical between
+    the dense fused cache and the paged pool."""
+    kw = dict(max_batch=4, prompt_lens=(6, 8, 7, 9), temperature=1.5,
+              seed=3)
+    fused, _ = _run_burst(qwen2_setup, engine="fused", **kw)
+    paged, _ = _run_burst(qwen2_setup, engine="paged", page_size=8, **kw)
+    assert paged == fused
+
+
+def test_paged_parity_under_pool_pressure(qwen2_setup):
+    """A pool too small for every request at once forces the
+    requeue-at-admission path; completions still match fused exactly."""
+    fused, _ = _run_burst(qwen2_setup, engine="fused")
+    paged, eng = _run_burst(qwen2_setup, engine="paged", page_size=8,
+                            num_pages=9)  # 8 allocatable pages
+    assert paged == fused
+    assert eng.pool.pages_in_use == 0
+
+
+def test_paged_prefix_sharing_hits_and_refcounts(qwen2_setup):
+    """Requests sharing a long prompt prefix map the same physical pages:
+    the registry reports hits, fewer pages are allocated than the
+    unshared sum, and outputs still match fused bit-for-bit."""
+    kw = dict(max_batch=4, prompt_lens=(3, 5, 3, 4), shared_prefix=16,
+              max_new=4)
+    fused, _ = _run_burst(qwen2_setup, engine="fused", **kw)
+    paged, eng = _run_burst(qwen2_setup, engine="paged", page_size=8, **kw)
+    assert paged == fused
+    assert eng.pool.prefix_hits > 0
+    assert eng.pool.hit_rate > 0
+    assert eng.pool.pages_in_use == 0
+    assert (eng.pool.refs == 0).all()
+
+
+def test_paged_prefix_pages_shared_not_copied(qwen2_setup):
+    """Two identical prompts admitted together: the second request's full
+    prompt pages are all registry hits, so its page table aliases the
+    first's physical pages."""
+    cfg, model, params = qwen2_setup
+    eng = ServeEngine(model, params, max_batch=2, max_seq=64, eos_id=-1,
+                      engine="paged", page_size=8)
+    prompt = np.arange(1, 17, dtype=np.int32)  # exactly two full pages
+    eng.submit(Request(uid=0, prompt=prompt, max_new_tokens=3))
+    eng.submit(Request(uid=1, prompt=prompt, max_new_tokens=3))
+    eng.step()
+    assert eng.pool.prefix_hits == 2
+    table = eng._ptable
+    np.testing.assert_array_equal(table[0, :2], table[1, :2])  # aliased
+    assert table[0, 2] != table[1, 2]  # private decode pages
+    assert (eng.pool.refs[table[0, :2]] == 2).all()
+    done = eng.run()
+    toks = {c.uid: c.tokens for c in done}
+    assert toks[0] == toks[1]  # identical prompts, identical greedy tails
+
+
+def test_paged_memory_proportional_to_live_tokens(qwen2_setup):
+    """At partial occupancy the paged engine holds pages for live tokens
+    only, while dense reserves the full max_batch x max_seq rectangle —
+    the ISSUE's memory-proportionality claim, in miniature."""
+    cfg, model, params = qwen2_setup
+    dense = ServeEngine(model, params, max_batch=8, max_seq=64, eos_id=-1,
+                        engine="fused")
+    paged = ServeEngine(model, params, max_batch=8, max_seq=64, eos_id=-1,
+                        engine="paged", page_size=8)
+    rng = np.random.default_rng(0)
+    for eng in (dense, paged):
+        for i in range(2):  # 25% slot occupancy
+            eng.submit(Request(uid=i,
+                               prompt=rng.integers(1, cfg.vocab_size, 8),
+                               max_new_tokens=8))
+        eng.step()
+    ds, ps = dense.kv_stats(), paged.kv_stats()
+    assert ds["live_tokens"] == ps["live_tokens"] > 0
+    # 2 slots x 2 pages (8 prompt + 8 new - 1 -> 15 positions) of 8 tokens
+    assert ps["pages_in_use"] == 4
+    assert ps["kv_bytes_in_use"] == 4 * 8 * ps["kv_bytes_per_token"]
+    assert ds["kv_bytes_per_live_token"] >= 4 * ps["kv_bytes_per_live_token"]
+
+
+def test_paged_submit_rejects_unservable_request(qwen2_setup):
+    """A request that could never fit the pool fails at submit() with the
+    paged limit in the message — not later, mid-admission."""
+    cfg, model, params = qwen2_setup
+    eng = ServeEngine(model, params, max_batch=2, max_seq=64, eos_id=-1,
+                      engine="paged", page_size=8, num_pages=4)
+    with pytest.raises(ValueError, match=r"KV pages.*3 allocatable"):
+        eng.submit(Request(uid=0, prompt=np.arange(1, 30, dtype=np.int32),
+                           max_new_tokens=8))
+    assert not eng.queue  # rejected, not queued
+    # a servable request on the same engine still runs to completion
+    eng.submit(Request(uid=1, prompt=np.arange(1, 9, dtype=np.int32),
+                       max_new_tokens=4))
+    done = eng.run()
+    assert len(done) == 1 and len(done[0].tokens) == 4
+
+
+def test_paged_rejects_recurrent_families():
+    cfg = reduced(get_config("xlstm-125m"))
+    model = build_model(cfg)
+    params, _ = model.init(jax.random.PRNGKey(0))
+    assert not model.supports_paged_cache()
+    with pytest.raises(ValueError, match="paged"):
+        ServeEngine(model, params, engine="paged")
+
+
+def test_paged_requires_pow2_page_size(qwen2_setup):
+    cfg, model, params = qwen2_setup
+    with pytest.raises(ValueError, match="power of two"):
+        ServeEngine(model, params, engine="paged", page_size=12)

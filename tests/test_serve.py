@@ -227,6 +227,72 @@ def test_submit_validates_requests(engine_setup):
     assert len(eng.run()) == 1
 
 
+# ---------------------------------------------------------------------------
+# admission bucketing + windowed decode building blocks
+# ---------------------------------------------------------------------------
+def test_pow2_bucket_boundaries():
+    """Exact powers map to themselves, everything else rounds up, and the
+    cap clamps — the retrace-bounding contract admission relies on."""
+    from repro.serve.engine import _pow2_bucket
+
+    assert _pow2_bucket(1, 256) == 1
+    assert _pow2_bucket(2, 256) == 2
+    assert _pow2_bucket(3, 256) == 4
+    assert _pow2_bucket(8, 256) == 8      # exact power stays put
+    assert _pow2_bucket(9, 256) == 16
+    assert _pow2_bucket(255, 256) == 256
+    assert _pow2_bucket(256, 256) == 256  # == cap
+    assert _pow2_bucket(300, 256) == 256  # over cap clamps
+    assert _pow2_bucket(7, 4) == 4        # cap below the natural bucket
+
+
+def test_windowed_ring_decode_matches_masked_dense(engine_setup):
+    """attend_decode with window > 0 keeps a width-W ring buffer; once the
+    ring has wrapped (t >= W - 1) its output must equal dense attention
+    over exactly the last W positions, computed here independently."""
+    import jax.numpy as jnp
+    from repro.models import attention
+    from repro.models.common import apply_rope, rope_angles
+
+    cfg, model, params = engine_setup
+    p = {k: v[0] for k, v in params["blocks"].items()
+         if k.startswith("attn_")}
+    D, H, KH, Dh = (cfg.d_model, cfg.num_heads, cfg.num_kv_heads,
+                    cfg.head_dim)
+    B, W, T = 2, 8, 20
+    rng = np.random.default_rng(0)
+
+    ck = jnp.zeros((B, W, KH, Dh), jnp.float32)
+    cv = jnp.zeros((B, W, KH, Dh), jnp.float32)
+    sp = jnp.full((B, W), -1, jnp.int32)
+    k_hist, v_hist = [], []
+    for t in range(T):
+        x = jnp.asarray(rng.normal(size=(B, 1, D)).astype(np.float32))
+        pos = jnp.full((B,), t, jnp.int32)
+        out, ck, cv, sp = attention.attend_decode(
+            p, x, ck, cv, pos, cfg, window=W, slot_pos=sp)
+
+        # dense masked reference from the same q/k/v projections
+        q, k, v = attention.qkv(p, x, cfg)
+        cos, sin = rope_angles(pos[:, None], Dh, cfg.rope_theta)
+        q, k = apply_rope(q, cos, sin), apply_rope(k, cos, sin)
+        k_hist.append(np.asarray(k[:, 0], np.float32))
+        v_hist.append(np.asarray(v[:, 0], np.float32))
+        if t < W - 1:
+            continue  # ring still holds unwritten (-1) slots
+        kd = np.stack(k_hist[t - W + 1:t + 1], axis=1)  # (B, W, KH, Dh)
+        vd = np.stack(v_hist[t - W + 1:t + 1], axis=1)
+        qf = np.asarray(q, np.float32).reshape(B, KH, H // KH, Dh)
+        scores = np.einsum("bkgd,btkd->bkgt", qf * Dh ** -0.5, kd)
+        probs = np.exp(scores - scores.max(-1, keepdims=True))
+        probs /= probs.sum(-1, keepdims=True)
+        ctx = np.einsum("bkgt,btkd->bkgd", probs, vd)
+        want = attention.out_proj(
+            p, jnp.asarray(ctx.reshape(B, 1, H, Dh)))
+        np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                                   atol=2e-5, rtol=2e-5)
+
+
 def test_single_slot_engine_inserts_cache(engine_setup):
     """max_batch=1: the axes-based slot writer must still scatter the
     prefilled cache (the old shape-diff heuristic silently no-opped)."""
