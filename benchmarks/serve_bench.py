@@ -19,6 +19,19 @@ PR 3 fused, on the smoke config, and writes machine-readable
     occupancy vs the dense engine's fixed ``max_batch x max_seq``
     reservation, and the prefix-sharing hit rate on a shared-prompt
     workload;
+  * **speculative decoding** — ``spec_k=4`` n-gram draft/verify on a
+    repetitive-motif workload (where prompt-lookup proposals shine) vs
+    the non-speculative chunked engines on the *same* workload, for both
+    ``fused`` and ``paged``.  Greedy token parity with the plain engine
+    is asserted (speculation is lossless by construction), acceptance
+    rate is reported, and the paged variant's page accounting is
+    leak-checked mid-flight and after the drain — rollback must never
+    strand a page;
+  * **open-loop serving** — Poisson arrivals (deterministically seeded,
+    like ``repro.ft.failures``) at ~60% of the chunked engine's measured
+    capacity: sustained tok/s plus p50/p99 *admission* latency (arrival
+    to slot placement — the queueing delay a closed-loop burst never
+    shows);
   * **train step** — wall µs/step with and without state-buffer
     donation (donation is a no-op on CPU; the loss trajectory must match
     either way).  Timed per-step after discarding post-compile warmup
@@ -26,10 +39,11 @@ PR 3 fused, on the smoke config, and writes machine-readable
     faults) can no longer invert the comparison.
 
 Raises (failing the bench suite loudly) if the fused or paged path drops
-below 2x the legacy baseline, if the paged engine's in-use KV HBM per
-live token exceeds its bound, or if any engine breaks greedy token
-parity — floors far under what the paths achieve, so noisy CI machines
-don't flake.
+below 2x the legacy baseline, if speculative decoding fails to clear
+1.3x its non-speculative chunked baseline (or breaks parity, or leaks
+pages), if the paged engine's in-use KV HBM per live token exceeds its
+bound, or if any engine breaks greedy token parity — floors far under
+what the paths achieve, so noisy CI machines don't flake.
 """
 from __future__ import annotations
 
@@ -57,6 +71,12 @@ CHUNK = 8
 PAGE_SIZE = 16
 TRAIN_STEPS = 8
 TRAIN_WARMUP = 2  # post-compile steps discarded from the timing
+SPEC_K = 4
+# speculative must beat the non-speculative chunked engine by this much
+# on the repetitive workload (it measures ~acceptance x on CPU)
+SPEC_SPEEDUP_FLOOR = 1.3
+# open-loop arrival rate as a fraction of measured chunked capacity
+OPEN_LOOP_UTIL = 0.6
 
 
 def _setup():
@@ -83,18 +103,36 @@ def _burst(engine, cfg, uid0: int) -> None:
         ))
 
 
-def _run_engine(cfg, model, params, engine: str, chunk: int, **engine_kw):
-    """Steady-state tok/s + the timed burst's {uid: tokens} for parity."""
+def _burst_motif(engine, cfg, uid0: int) -> None:
+    """Repetitive-motif prompts: each is a short random motif tiled to
+    PROMPT_LEN — the workload where n-gram prompt lookup should draft
+    with high acceptance."""
+    from repro.serve import Request
+
+    rng = np.random.default_rng(0)
+    for i in range(REQUESTS):
+        motif = rng.integers(1, cfg.vocab_size, 4)
+        engine.submit(Request(
+            uid=uid0 + i,
+            prompt=np.tile(motif, PROMPT_LEN // 4),
+            max_new_tokens=MAX_NEW,
+        ))
+
+
+def _run_engine(cfg, model, params, engine: str, chunk: int, burst=_burst,
+                **engine_kw):
+    """Steady-state tok/s + the timed burst's {uid: tokens} for parity
+    (plus the drained engine, for counter inspection)."""
     from repro.serve import ServeEngine
 
     eng = ServeEngine(model, params, max_batch=MAX_BATCH,
                       max_seq=PROMPT_LEN + MAX_NEW + 8, eos_id=-1,
                       engine=engine, decode_chunk=chunk, **engine_kw)
-    _burst(eng, cfg, 0)
+    burst(eng, cfg, 0)
     eng.run()  # warmup: compiles prefill/decode/insert
     n0 = len(eng.done)
     d2h0 = (eng.d2h_transfers, eng.d2h_elems)
-    _burst(eng, cfg, 10_000)
+    burst(eng, cfg, 10_000)
     t0 = time.perf_counter()
     eng.run()
     dt = time.perf_counter() - t0
@@ -104,16 +142,16 @@ def _run_engine(cfg, model, params, engine: str, chunk: int, **engine_kw):
     elems = eng.d2h_elems - d2h0[1]
     tokens = {c.uid - 10_000: tuple(c.tokens) for c in done}
     return {"tok_per_s": toks / dt, "wall_s": dt, "tokens": toks,
-            "d2h_transfers": transfers, "d2h_elems": elems}, tokens
+            "d2h_transfers": transfers, "d2h_elems": elems}, tokens, eng
 
 
 def bench_decode(setup) -> tuple:
     """Returns (section dict, greedy {uid: tokens} baseline) — the token
     baseline anchors the paged section's parity check."""
     cfg, model, params = setup
-    legacy, tok_l = _run_engine(cfg, model, params, "legacy", 1)
-    fused, tok_f = _run_engine(cfg, model, params, "fused", 1)
-    chunked, tok_c = _run_engine(cfg, model, params, "fused", CHUNK)
+    legacy, tok_l, _ = _run_engine(cfg, model, params, "legacy", 1)
+    fused, tok_f, _ = _run_engine(cfg, model, params, "fused", 1)
+    chunked, tok_c, _ = _run_engine(cfg, model, params, "fused", CHUNK)
     parity = tok_l == tok_f == tok_c
     # fused step() contract: one (B,) transfer per decode step
     per_step = fused["d2h_elems"] / max(fused["d2h_transfers"], 1)
@@ -138,10 +176,10 @@ def bench_paged(setup, decode: dict, tok_baseline) -> dict:
     from repro.serve import Request, ServeEngine
 
     cfg, model, params = setup
-    paged, tok_p = _run_engine(cfg, model, params, "paged", 1,
-                               page_size=PAGE_SIZE)
-    pagedc, tok_pc = _run_engine(cfg, model, params, "paged", CHUNK,
-                                 page_size=PAGE_SIZE)
+    paged, tok_p, _ = _run_engine(cfg, model, params, "paged", 1,
+                                  page_size=PAGE_SIZE)
+    pagedc, tok_pc, _ = _run_engine(cfg, model, params, "paged", CHUNK,
+                                    page_size=PAGE_SIZE)
     parity = tok_p == tok_baseline and tok_pc == tok_baseline
 
     # --- KV HBM per live token at 50% slot occupancy -------------------
@@ -194,6 +232,148 @@ def bench_paged(setup, decode: dict, tok_baseline) -> dict:
         "prefix_hit_rate": eng.pool.hit_rate,
         "prefix_hits": eng.pool.prefix_hits,
         "prefix_lookups": eng.pool.prefix_lookups,
+    }
+
+
+def bench_speculative(setup) -> dict:
+    """n-gram speculative decoding (``spec_k=4``) vs the non-speculative
+    chunked engines on a repetitive-motif workload, fused and paged.
+    Parity is asserted in main(); the paged variant is additionally
+    leak-checked: page accounting must be exact mid-flight (reservations
+    only — rollback may never strand a page) and zero after the drain."""
+    from repro.serve import Request, ServeEngine
+
+    cfg, model, params = setup
+    base_f, tok_bf, _ = _run_engine(cfg, model, params, "fused", CHUNK,
+                                    burst=_burst_motif)
+    base_p, tok_bp, _ = _run_engine(cfg, model, params, "paged", CHUNK,
+                                    burst=_burst_motif, page_size=PAGE_SIZE)
+    spec_f, tok_sf, eng_sf = _run_engine(cfg, model, params, "fused", CHUNK,
+                                         burst=_burst_motif, spec_k=SPEC_K)
+    spec_p, tok_sp, eng_sp = _run_engine(cfg, model, params, "paged", CHUNK,
+                                         burst=_burst_motif, spec_k=SPEC_K,
+                                         page_size=PAGE_SIZE)
+    parity = tok_bp == tok_bf and tok_sf == tok_bf and tok_sp == tok_bf
+
+    # draft-model proposer: a same-vocab reduced config with independent
+    # random weights — reported, not gated (an untrained draft shares no
+    # distribution with an untrained target, so acceptance is ~0; the
+    # interesting numbers are that it *runs* and that parity still holds)
+    import jax
+
+    from repro.configs import get_config, reduced
+    from repro.models import build_model
+
+    dcfg = reduced(get_config("qwen1.5-4b"))
+    draft = build_model(dcfg)
+    dparams, _ = draft.init(jax.random.PRNGKey(7))
+    spec_d, tok_sd, eng_sd = _run_engine(cfg, model, params, "fused", CHUNK,
+                                         burst=_burst_motif, spec_k=SPEC_K,
+                                         draft=draft, draft_params=dparams)
+    draft_parity = tok_sd == tok_bf
+
+    # --- paged rollback page accounting (leak check) -------------------
+    # mid-flight: every active slot holds exactly its reservation; after
+    # the drain every page is back on the free list.  A rollback that
+    # freed or leaked pages would break either count.
+    probe_new = 16
+    eng = ServeEngine(model, params, max_batch=MAX_BATCH,
+                      max_seq=PROMPT_LEN + MAX_NEW + 8, eos_id=-1,
+                      engine="paged", page_size=PAGE_SIZE, spec_k=SPEC_K)
+    rng = np.random.default_rng(0)
+    n_occ = MAX_BATCH // 2
+    for i in range(n_occ):
+        motif = rng.integers(1, cfg.vocab_size, 4)
+        eng.submit(Request(uid=i, prompt=np.tile(motif, PROMPT_LEN // 4),
+                           max_new_tokens=probe_new))
+    eng.step_spec()
+    eng.step_spec()
+    st = eng.kv_stats()
+    pages_expected = n_occ * (
+        -(-(PROMPT_LEN + probe_new - 1 + SPEC_K) // PAGE_SIZE))
+    pages_mid = int(eng.pool.pages_in_use)
+    slots_per_live = st["kv_bytes_per_live_token"] / st["kv_bytes_per_token"]
+    eng.run()
+    pages_after = int(eng.pool.pages_in_use)
+
+    return {
+        "spec_k": SPEC_K, "chunk": CHUNK, "proposer": "ngram",
+        "chunked_fused_tok_s": base_f["tok_per_s"],
+        "chunked_paged_tok_s": base_p["tok_per_s"],
+        "spec_fused_tok_s": spec_f["tok_per_s"],
+        "spec_paged_tok_s": spec_p["tok_per_s"],
+        "speedup_fused": spec_f["tok_per_s"] / base_f["tok_per_s"],
+        "speedup_paged": spec_p["tok_per_s"] / base_p["tok_per_s"],
+        "accept_rate_fused": eng_sf.spec_accepted / max(1, eng_sf.spec_proposed),
+        "accept_rate_paged": eng_sp.spec_accepted / max(1, eng_sp.spec_proposed),
+        "tokens_per_round_fused": eng_sf.spec_tokens / max(1, eng_sf.spec_rounds),
+        "token_parity": parity,
+        "draft_tok_s": spec_d["tok_per_s"],
+        "draft_accept_rate": eng_sd.spec_accepted / max(1, eng_sd.spec_proposed),
+        "draft_token_parity": draft_parity,
+        "pages_mid_flight": pages_mid,
+        "pages_expected_mid_flight": pages_expected,
+        "pages_after_drain": pages_after,
+        "spec_slots_per_live_token": slots_per_live,
+    }
+
+
+def bench_open_loop(setup, decode: dict) -> dict:
+    """Open-loop serving: requests arrive on a deterministic Poisson
+    clock (seeded like ``repro.ft.failures`` schedules) at
+    ``OPEN_LOOP_UTIL`` of the chunked engine's measured capacity, instead
+    of all at once.  Reports sustained tok/s and the admission-latency
+    tail — arrival to slot placement, the queueing delay closed-loop
+    bursts can't see."""
+    from repro.serve import Request, ServeEngine
+
+    cfg, model, params = setup
+    eng = ServeEngine(model, params, max_batch=MAX_BATCH,
+                      max_seq=PROMPT_LEN + MAX_NEW + 8, eos_id=-1,
+                      engine="fused", decode_chunk=CHUNK)
+    _burst(eng, cfg, 50_000)
+    eng.run()  # warmup: compile everything before the clock starts
+    n0 = len(eng.done)
+
+    rate = OPEN_LOOP_UTIL * decode["chunked_tok_s"] / MAX_NEW  # req/s
+    rng = np.random.default_rng(0)
+    arrivals = np.cumsum(rng.exponential(1.0 / rate, REQUESTS))
+    prompts = [rng.integers(1, cfg.vocab_size, PROMPT_LEN)
+               for _ in range(REQUESTS)]
+
+    placed: dict = {}
+    nxt = 0
+    t0 = time.perf_counter()
+    while nxt < REQUESTS or eng.queue or eng.active.any():
+        now = time.perf_counter() - t0
+        while nxt < REQUESTS and arrivals[nxt] <= now:
+            eng.submit(Request(uid=nxt, prompt=prompts[nxt],
+                               max_new_tokens=MAX_NEW))
+            nxt += 1
+        if not eng.queue and not eng.active.any():
+            # idle: nothing to decode until the next arrival
+            time.sleep(min(1e-3, max(0.0, arrivals[nxt] - now)))
+            continue
+        eng.step_chunk()
+        now = time.perf_counter() - t0
+        for s in range(MAX_BATCH):
+            r = eng.req[s]
+            if r is not None and r.uid not in placed:
+                placed[r.uid] = now
+        for c in eng.done[n0:]:  # admitted and retired inside one chunk
+            placed.setdefault(c.uid, now)
+    end = time.perf_counter() - t0
+    toks = sum(len(c.tokens) for c in eng.done[n0:])
+    lat_ms = np.array([placed[u] - arrivals[u] for u in range(REQUESTS)]) * 1e3
+    return {
+        "requests": REQUESTS,
+        "arrival_rate_rps": rate,
+        "utilization_target": OPEN_LOOP_UTIL,
+        "sustained_tok_s": toks / max(end - arrivals[0], 1e-9),
+        "admission_p50_ms": float(np.percentile(lat_ms, 50)),
+        "admission_p99_ms": float(np.percentile(lat_ms, 99)),
+        "admission_max_ms": float(lat_ms.max()),
+        "chunk_utilization": eng.chunk_steps_used / max(1, eng.chunk_steps_total),
     }
 
 
@@ -271,9 +451,12 @@ def main() -> None:
     setup = _setup()
     decode, tok_baseline = bench_decode(setup)
     paged = bench_paged(setup, decode, tok_baseline)
+    speculative = bench_speculative(setup)
+    open_loop = bench_open_loop(setup, decode)
     admission = bench_admission(setup)
     train = bench_train_donation(setup)
     doc = {"generated_at": time.time(), "decode": decode, "paged": paged,
+           "speculative": speculative, "open_loop": open_loop,
            "admission": admission, "train": train}
     tmp = OUT_PATH + ".tmp"  # atomic: a killed run never truncates the baseline
     with open(tmp, "w") as f:
@@ -300,6 +483,28 @@ def main() -> None:
           f"occupancy={p['occupancy_frac']}")
     print(f"serve/paged_prefix_sharing,{p['prefix_hit_rate']:.3f},"
           f"hits={p['prefix_hits']}/{p['prefix_lookups']}")
+    s = speculative
+    print(f"serve/spec_fused_tok_s,{1e6/s['spec_fused_tok_s']:.1f},"
+          f"tok_per_s={s['spec_fused_tok_s']:,.0f};"
+          f"speedup={s['speedup_fused']:.2f}x;"
+          f"accept={s['accept_rate_fused']:.2f};k={s['spec_k']}")
+    print(f"serve/spec_paged_tok_s,{1e6/s['spec_paged_tok_s']:.1f},"
+          f"tok_per_s={s['spec_paged_tok_s']:,.0f};"
+          f"speedup={s['speedup_paged']:.2f}x;"
+          f"accept={s['accept_rate_paged']:.2f}")
+    print(f"serve/spec_draft,{1e6/s['draft_tok_s']:.1f},"
+          f"tok_per_s={s['draft_tok_s']:,.0f};"
+          f"accept={s['draft_accept_rate']:.2f};"
+          f"parity={s['draft_token_parity']}")
+    print(f"serve/spec_pages,{s['pages_mid_flight']},"
+          f"expected={s['pages_expected_mid_flight']};"
+          f"after_drain={s['pages_after_drain']};"
+          f"slots_per_live_token={s['spec_slots_per_live_token']:.2f}")
+    o = open_loop
+    print(f"serve/open_loop,{o['admission_p99_ms']:.1f},"
+          f"p99_admission_ms;p50={o['admission_p50_ms']:.1f};"
+          f"sustained_tok_s={o['sustained_tok_s']:,.0f};"
+          f"rate_rps={o['arrival_rate_rps']:.2f}")
     print(f"serve/admission_legacy,{admission['legacy_us_per_request']:.1f},"
           f"per_request")
     print(f"serve/admission_batched,{admission['batched_us_per_request']:.1f},"
@@ -343,6 +548,45 @@ def main() -> None:
             f"paged KV HBM per live token exceeded its bound: "
             f"{p['paged_slots_per_live_token']:.2f} token-slots > "
             f"{PAGED_SLOTS_PER_TOKEN_CAP} cap — page accounting leak?"
+        )
+    if not s["token_parity"]:
+        raise RuntimeError("speculative decoding diverged from the "
+                           "non-speculative greedy baseline — it must be "
+                           "lossless")
+    if not s["draft_token_parity"]:
+        raise RuntimeError("draft-model speculation diverged from the "
+                           "non-speculative greedy baseline — it must be "
+                           "lossless for ANY proposer")
+    if s["speedup_fused"] < SPEC_SPEEDUP_FLOOR:
+        raise RuntimeError(
+            f"speculative fused regressed: {s['speedup_fused']:.2f}x < "
+            f"{SPEC_SPEEDUP_FLOOR}x floor over chunked fused on the "
+            f"repetitive workload (accept={s['accept_rate_fused']:.2f})"
+        )
+    if s["speedup_paged"] < SPEC_SPEEDUP_FLOOR:
+        raise RuntimeError(
+            f"speculative paged regressed: {s['speedup_paged']:.2f}x < "
+            f"{SPEC_SPEEDUP_FLOOR}x floor over chunked paged on the "
+            f"repetitive workload (accept={s['accept_rate_paged']:.2f})"
+        )
+    if s["pages_mid_flight"] != s["pages_expected_mid_flight"]:
+        raise RuntimeError(
+            f"speculative paged page accounting drifted mid-flight: "
+            f"{s['pages_mid_flight']} pages in use, expected "
+            f"{s['pages_expected_mid_flight']} — rollback leaked or freed "
+            f"a reservation"
+        )
+    if s["pages_after_drain"] != 0:
+        raise RuntimeError(
+            f"speculative paged leaked {s['pages_after_drain']} pages "
+            f"after the drain — retirement must free the full "
+            f"reservation, over-reserved speculative tail included"
+        )
+    if s["spec_slots_per_live_token"] > PAGED_SLOTS_PER_TOKEN_CAP:
+        raise RuntimeError(
+            f"speculative paged KV HBM per live token exceeded its "
+            f"bound: {s['spec_slots_per_live_token']:.2f} token-slots > "
+            f"{PAGED_SLOTS_PER_TOKEN_CAP} cap"
         )
 
 

@@ -366,12 +366,16 @@ class ServeStage(Stage):
     on-device batched-sampling fast path; ``legacy`` keeps the per-slot
     host-sampling baseline around for A/B runs; ``paged`` serves from
     the paged KV pool (prefix sharing, HBM proportional to live
-    tokens — see docs/serving.md)."""
+    tokens — see docs/serving.md).  ``serve_spec_k`` / ``serve_draft``
+    (the CLI's ``--serve-spec-k`` / ``--serve-draft``) turn on lossless
+    speculative decoding: k drafts per verify round from the n-gram
+    proposer, or from a reduced draft model named by arch."""
 
     inputs = ("cfg",)
     outputs = ("final_state", "completions")
     placement_key = "__main__"
-    cache_params = ("serve_engine", "serve_chunk", "smoke_batch", "smoke_seq")
+    cache_params = ("serve_engine", "serve_chunk", "serve_spec_k",
+                    "serve_draft", "smoke_batch", "smoke_seq")
 
     def __init__(self, name: str = "serve", engine: str = "fused",
                  decode_chunk: int = 1):
@@ -391,13 +395,21 @@ class ServeStage(Stage):
         smoke_seq = ctx.params.get("smoke_seq", 32)
         engine = ctx.params.get("serve_engine", self.engine)
         decode_chunk = ctx.params.get("serve_chunk", self.decode_chunk)
+        spec_k = ctx.params.get("serve_spec_k", 0)
+        draft_arch = ctx.params.get("serve_draft", "")
         model = build_model(cfg)
         params, _ = model.init(jax.random.PRNGKey(t.data.seed))
+        draft = draft_params = None
+        if draft_arch:
+            from repro.configs import get_config, reduced
+            draft = build_model(reduced(get_config(draft_arch)))
+            draft_params, _ = draft.init(jax.random.PRNGKey(t.data.seed + 1))
         completions, stats = smoke_serve(
             model, params, num_requests=smoke_batch * 2,
             max_batch=smoke_batch, max_seq=smoke_seq + 64,
             vocab_size=cfg.vocab_size, seed=t.data.seed,
             engine=engine, decode_chunk=decode_chunk,
+            spec_k=spec_k, draft=draft, draft_params=draft_params,
         )
         if ctx.record is not None:
             ctx.record.stage_view(self.name).log(0, stats)

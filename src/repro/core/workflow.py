@@ -328,6 +328,8 @@ def run_workflow(
     cache: Optional["StageCache"] = None,
     serve_engine: str = "fused",
     serve_chunk: int = 1,
+    serve_spec_k: int = 0,
+    serve_draft: str = "",
     donate: bool = True,
     stage_retry: Optional[RestartPolicy] = None,
     resume: Optional[str] = None,
@@ -430,6 +432,7 @@ def run_workflow(
             "steps_override": steps_override,
             "smoke_batch": smoke_batch, "smoke_seq": smoke_seq,
             "serve_engine": serve_engine, "serve_chunk": serve_chunk,
+            "serve_spec_k": serve_spec_k, "serve_draft": serve_draft,
             "donate": donate,
         },
     )

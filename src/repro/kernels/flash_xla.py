@@ -166,6 +166,92 @@ def _bwd_vjp(causal, window, q_offset, block_q, block_k, res, do):
 flash_attention_xla.defvjp(_fwd_vjp, _bwd_vjp)
 
 
+def decode_attention_mq_xla(q, k, v, base_len, block_k=1024):
+    """Multi-query decode attention (speculative verify) as an online-
+    softmax scan over cache blocks: the ``T = k+1`` query rows of each
+    slot share every K/V block read, and peak memory is O(B·T·block)
+    instead of the O(B·T·S_max) dense score tensor.  Query row ``t``
+    attends cache positions ``< base_len[b] + t`` — the per-row causal
+    limit of ``ref.decode_attention_mq``, which this must match.
+
+    q: (B, T, H, D); k/v: (B, S_max, KH, D); base_len: (B,).
+    """
+    B, S, H, D = q.shape
+    T, KH = k.shape[1], k.shape[2]
+    G = H // KH
+    bk = min(block_k, T)
+    kb, _ = _blockify(k.astype(jnp.float32), bk)   # (B, nk, bk, KH, D)
+    vb, _ = _blockify(v.astype(jnp.float32), bk)
+    nk = kb.shape[1]
+    qf = q.astype(jnp.float32).reshape(B, S, KH, G, D) * (D ** -0.5)
+    limit = base_len[:, None] + jnp.arange(S)[None]           # (B, S)
+    kpos = jnp.arange(nk * bk).reshape(nk, bk)
+
+    def kv_step(carry, idx):
+        m_p, l_p, acc = carry
+        kblk, vblk, kpb = kb[:, idx], vb[:, idx], kpos[idx]
+        s = jnp.einsum("bskgd,btkd->bkgst", qf, kblk)  # (B,KH,G,S,bk)
+        mask = kpb[None, None, :] < limit[:, :, None]  # (B, S, bk)
+        s = jnp.where(mask[:, None, None], s, NEG_INF)
+        m_c = jnp.maximum(m_p, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_c[..., None])
+        alpha = jnp.exp(m_p - m_c)
+        l_c = l_p * alpha + jnp.sum(p, axis=-1)
+        acc = acc * alpha[..., None] + jnp.einsum("bkgst,btkd->bkgsd", p, vblk)
+        return (m_c, l_c, acc), None
+
+    m0 = jnp.full((B, KH, G, S), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, KH, G, S), jnp.float32)
+    a0 = jnp.zeros((B, KH, G, S, D), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(kv_step, (m0, l0, a0), jnp.arange(nk))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]  # (B, KH, G, S, D)
+    return out.transpose(0, 3, 1, 2, 4).reshape(B, S, H, D).astype(q.dtype)
+
+
+def paged_attention_mq_xla(q, k_pool, v_pool, page_table, base_len):
+    """Paged verify attention without materializing a dense cache: the
+    multi-query sibling of :func:`paged_attention_xla`.  One page block
+    is gathered per scan step and folded into the online softmax of all
+    ``T = k+1`` query rows at once, with query row ``t`` masked to
+    positions ``< base_len[b] + t``.
+
+    q: (B, T, H, D); pools: (KH, P, page, D); page_table: (B, max_pages);
+    base_len: (B,).  Returns (B, T, H, D).
+    """
+    B, S, H, D = q.shape
+    KH, _, page, _ = k_pool.shape
+    G = H // KH
+    max_pages = page_table.shape[1]
+    pt = jnp.maximum(page_table, 0)
+
+    qf = q.astype(jnp.float32).reshape(B, S, KH, G, D) * (D ** -0.5)
+    limit = base_len[:, None] + jnp.arange(S)[None]           # (B, S)
+    offs = jnp.arange(page)
+
+    def step(carry, j):
+        m_p, l_p, acc = carry
+        pid = pt[:, j]                           # (B,)
+        kb = k_pool[:, pid].astype(jnp.float32)  # (KH, B, page, D)
+        vb = v_pool[:, pid].astype(jnp.float32)
+        s = jnp.einsum("bskgd,kbtd->bkgst", qf, kb)  # (B, KH, G, S, page)
+        kpos = j * page + offs
+        mask = kpos[None, None, :] < limit[:, :, None]  # (B, S, page)
+        s = jnp.where(mask[:, None, None], s, NEG_INF)
+        m_c = jnp.maximum(m_p, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_c[..., None])
+        alpha = jnp.exp(m_p - m_c)
+        l_c = l_p * alpha + jnp.sum(p, axis=-1)
+        acc = acc * alpha[..., None] + jnp.einsum("bkgst,kbtd->bkgsd", p, vb)
+        return (m_c, l_c, acc), None
+
+    m0 = jnp.full((B, KH, G, S), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, KH, G, S), jnp.float32)
+    a0 = jnp.zeros((B, KH, G, S, D), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(step, (m0, l0, a0), jnp.arange(max_pages))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]   # (B, KH, G, S, D)
+    return out.transpose(0, 3, 1, 2, 4).reshape(B, S, H, D).astype(q.dtype)
+
+
 def paged_attention_xla(q, k_pool, v_pool, page_table, kv_len):
     """Paged decode attention without materializing a dense cache: scan
     over page-table columns, gathering one ``(B, page, D)`` page block

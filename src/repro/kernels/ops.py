@@ -140,6 +140,72 @@ def decode_attention(
     return ref.attention(q, k, v, causal=False, window=0, kv_len=kv_len)
 
 
+def decode_attention_mq(
+    q: jax.Array,         # (B, T, H, D) — T = k+1 speculative positions
+    k: jax.Array,         # (B, S_max, KH, D) — cache (draft rows written)
+    v: jax.Array,
+    *,
+    base_len: jax.Array,  # (B,) kv length visible to query row 0
+) -> jax.Array:
+    """Multi-query decode attention for speculative verify: query row
+    ``t`` attends cache positions ``< base_len[b] + t`` (per-row causal
+    limits).  Small caches take the dense oracle; big ones the XLA
+    online-softmax scan (``flash_xla.decode_attention_mq_xla``) so the
+    ``(B, T, S_max)`` score tensor is never materialized."""
+    B, S, _, _ = q.shape
+    T = k.shape[1]
+    if B * S * T <= 256 * 1024:
+        return ref.decode_attention_mq(q, k, v, base_len)
+    from repro.kernels.flash_xla import decode_attention_mq_xla
+
+    return decode_attention_mq_xla(q, k, v, base_len)
+
+
+def paged_decode_attention_mq(
+    q: jax.Array,           # (B, T, H, D) — T = k+1 speculative positions
+    k_pool: jax.Array,      # (KH, P, page, D) global page pool
+    v_pool: jax.Array,
+    page_table: jax.Array,  # (B, max_pages) int32, -1 = unmapped
+    *,
+    base_len: jax.Array,    # (B,) kv length visible to query row 0
+) -> jax.Array:
+    """Speculative verify through the page-table indirection.
+
+    ``ref`` backend: dense-gather oracle for small tables, the scanned
+    XLA online-softmax fallback for big ones.  ``interpret``/``tpu``:
+    the Pallas multi-query kernel
+    (``paged_attention.paged_attention_mq_bkgd``) — same block-table
+    scalar prefetch as the single-token kernel, q tile widened over the
+    ``k+1`` draft positions."""
+    B, T, H, D = q.shape
+    KH, _, page, _ = k_pool.shape
+    max_pages = page_table.shape[1]
+    if _BACKEND == "ref":
+        if B * max_pages * page <= 256 * 1024:
+            return ref.paged_attention_mq(q, k_pool, v_pool, page_table,
+                                          base_len)
+        from repro.kernels.flash_xla import paged_attention_mq_xla
+
+        return paged_attention_mq_xla(q, k_pool, v_pool, page_table, base_len)
+
+    from repro.kernels.paged_attention import paged_attention_mq_bkgd
+
+    G = H // KH
+    # rows = t*G + g so the kernel recovers the draft position as row//G
+    qt = q.reshape(B, T, KH, G, D).transpose(0, 2, 1, 3, 4)
+    qt = qt.reshape(B, KH, T * G, D)
+    qt, _ = _pad_to(qt, 3, 128)
+    kp, _ = _pad_to(k_pool, 3, 128)
+    vp, _ = _pad_to(v_pool, 3, 128)
+    out = paged_attention_mq_bkgd(
+        qt, kp, vp, page_table, base_len,
+        scale=D ** -0.5, page=page, group=G,
+        interpret=(_BACKEND == "interpret"),
+    )
+    out = out[..., :D].reshape(B, KH, T, G, D).transpose(0, 2, 1, 3, 4)
+    return out.reshape(B, T, H, D)
+
+
 def paged_decode_attention(
     q: jax.Array,           # (B, 1, H, D)
     k_pool: jax.Array,      # (KH, P, page, D) global page pool

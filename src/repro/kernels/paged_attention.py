@@ -96,6 +96,134 @@ def _paged_kernel(
         o_ref[0, 0] = (acc_scr[...] / denom[:, None]).astype(o_ref.dtype)
 
 
+def _paged_mq_kernel(
+    pt_ref,    # SMEM (B, max_pages) int32 page table (scalar prefetch)
+    len_ref,   # SMEM (B,) int32 base kv length per slot (scalar prefetch)
+    q_ref,     # (1, 1, T*G, D) — T draft positions x G queries per KV head
+    k_ref,     # (1, 1, page, D) — the physical page picked by the index map
+    v_ref,     # (1, 1, page, D)
+    o_ref,     # (1, 1, T*G, D)
+    m_scr,     # VMEM (T*G, 128) running max
+    l_scr,     # VMEM (T*G, 128) running denom
+    acc_scr,   # VMEM (T*G, D) accumulator
+    *,
+    scale: float,
+    page: int,
+    max_pages: int,
+    group: int,
+):
+    """Multi-query sibling of :func:`_paged_kernel` for speculative
+    verify: the ``T = k+1`` draft positions of each slot ride in as
+    extra q rows (row ``r`` = draft position ``r // G``, query head
+    ``r % G``), so the page walk — the bandwidth cost — is shared by all
+    of them.  Query row ``r`` may attend kv positions
+    ``< len_ref[b] + r // G``: per-*row* causal limits, the one thing
+    the single-token kernel's ``kv_len`` mask cannot express."""
+    b = pl.program_id(0)
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    base_len = len_ref[b]
+    rows = q_ref.shape[2]
+    t_of_row = jax.lax.broadcasted_iota(jnp.int32, (rows, page), 0) // group
+    # the furthest-ahead draft row sees base_len + T - 1 positions
+    kv_hi = base_len + rows // group - 1
+
+    @pl.when(j * page < kv_hi)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32) * scale  # (T*G, D)
+        k = k_ref[0, 0].astype(jnp.float32)          # (page, D)
+        v = v_ref[0, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        )  # (T*G, page)
+        kpos = j * page + jax.lax.broadcasted_iota(
+            jnp.int32, (rows, page), 1
+        )
+        s = jnp.where(kpos < base_len + t_of_row, s, NEG_INF)
+
+        m_prev = m_scr[:, 0]
+        m_cur = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_cur[:, None])
+        alpha = jnp.exp(m_prev - m_cur)
+        l_new = l_scr[:, 0] * alpha + jnp.sum(p, axis=-1)
+        l_scr[...] = jnp.broadcast_to(l_new[:, None], l_scr.shape)
+        acc_scr[...] = acc_scr[...] * alpha[:, None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+        )
+        m_scr[...] = jnp.broadcast_to(m_cur[:, None], m_scr.shape)
+
+    @pl.when(j == max_pages - 1)
+    def _finalize():
+        denom = jnp.maximum(l_scr[:, 0], 1e-30)
+        o_ref[0, 0] = (acc_scr[...] / denom[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("scale", "page", "group", "interpret")
+)
+def paged_attention_mq_bkgd(
+    q: jax.Array,           # (B, KH, T*G, D)   D % 128 == 0
+    k_pool: jax.Array,      # (KH, P, page, D) global page pool
+    v_pool: jax.Array,
+    page_table: jax.Array,  # (B, max_pages) int32, -1 = unmapped
+    base_len: jax.Array,    # (B,) int32 kv length visible to draft row 0
+    *,
+    scale: float,
+    page: int,
+    group: int,
+    interpret: bool = False,
+) -> jax.Array:
+    """Speculative-verify paged attention: same block-table scalar
+    prefetch and page walk as :func:`paged_attention_bkgd`, with the
+    q tile widened over the ``k+1`` draft positions and per-row causal
+    masking (see :func:`_paged_mq_kernel`)."""
+    B, KH, rows, D = q.shape
+    max_pages = page_table.shape[1]
+    grid = (B, KH, max_pages)
+
+    pt = jnp.maximum(page_table, 0).astype(jnp.int32)
+    lens = base_len.astype(jnp.int32)
+
+    kernel = functools.partial(
+        _paged_mq_kernel, scale=scale, page=page, max_pages=max_pages,
+        group=group,
+    )
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, rows, D), lambda b, h, j, pt, ln: (b, h, 0, 0)),
+            pl.BlockSpec(
+                (1, 1, page, D),
+                lambda b, h, j, pt, ln: (h, pt[b, j], 0, 0),
+            ),
+            pl.BlockSpec(
+                (1, 1, page, D),
+                lambda b, h, j, pt, ln: (h, pt[b, j], 0, 0),
+            ),
+        ],
+        out_specs=pl.BlockSpec((1, 1, rows, D),
+                               lambda b, h, j, pt, ln: (b, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((rows, 128), jnp.float32),
+            pltpu.VMEM((rows, 128), jnp.float32),
+            pltpu.VMEM((rows, D), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, KH, rows, D), q.dtype),
+        interpret=interpret,
+    )(pt, lens, q, k_pool, v_pool)
+
+
 @functools.partial(
     jax.jit, static_argnames=("scale", "page", "interpret")
 )

@@ -81,6 +81,54 @@ def paged_attention(
     return attention(q, k, v, causal=False, window=0, kv_len=kv_len)
 
 
+def decode_attention_mq(
+    q: jax.Array,         # (B, T, H, D) — T = k+1 draft positions
+    k: jax.Array,         # (B, S_max, KH, D) cache (draft rows written)
+    v: jax.Array,
+    base_len: jax.Array,  # (B,) kv length visible to query row 0
+) -> jax.Array:
+    """Multi-query decode attention oracle for speculative verify.
+
+    Query row ``t`` sits at absolute position ``base_len[b] - 1 + t`` and
+    may attend cache positions ``< base_len[b] + t`` — causal w.r.t. a
+    per-*row* offset, which neither ``attention``'s static ``q_offset``
+    nor its ``(B,)`` ``kv_len`` can express.  Row 0 reproduces
+    single-token decode attention exactly (same masked-softmax math), so
+    verify at ``k = 0`` is bit-comparable to the decode path."""
+    B, S, H, D = q.shape
+    T, KH = k.shape[1], k.shape[2]
+    G = H // KH
+    qf = q.astype(jnp.float32) * (D ** -0.5)
+    qf = qf.reshape(B, S, KH, G, D)
+    scores = jnp.einsum("bskgd,btkd->bkgst", qf, k.astype(jnp.float32))
+    kpos = jnp.arange(T)
+    limit = base_len[:, None] + jnp.arange(S)[None]           # (B, S)
+    mask = kpos[None, None, :] < limit[:, :, None]            # (B, S, T)
+    scores = jnp.where(mask[:, None, None], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgst,btkd->bskgd", probs, v.astype(jnp.float32))
+    return out.reshape(B, S, H, D).astype(q.dtype)
+
+
+def paged_attention_mq(
+    q: jax.Array,           # (B, T, H, D) — T = k+1 draft positions
+    k_pool: jax.Array,      # (KH, P, page, D) global page pool
+    v_pool: jax.Array,
+    page_table: jax.Array,  # (B, max_pages) int32; -1 = unmapped
+    base_len: jax.Array,    # (B,) kv length visible to query row 0
+) -> jax.Array:
+    """Reference paged verify attention: dense-gather each slot's pages
+    (exactly like :func:`paged_attention`) and apply the per-row causal
+    limits of :func:`decode_attention_mq`."""
+    B = q.shape[0]
+    KH, _, page, D = k_pool.shape
+    max_pages = page_table.shape[1]
+    pt = jnp.maximum(page_table, 0)
+    k = k_pool[:, pt].transpose(1, 2, 3, 0, 4).reshape(B, max_pages * page, KH, D)
+    v = v_pool[:, pt].transpose(1, 2, 3, 0, 4).reshape(B, max_pages * page, KH, D)
+    return decode_attention_mq(q, k, v, base_len)
+
+
 def attention_chunked(
     q: jax.Array,  # (B, S, H, D)
     k: jax.Array,  # (B, T, KH, D)

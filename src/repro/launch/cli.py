@@ -217,6 +217,8 @@ def cmd_run(args) -> None:
                            cache=cache,
                            serve_engine=args.serve_engine,
                            serve_chunk=args.serve_chunk,
+                           serve_spec_k=args.serve_spec_k,
+                           serve_draft=args.serve_draft,
                            donate=not args.no_donate,
                            stage_retry=retry,
                            resume=args.resume,
@@ -519,6 +521,12 @@ def build_parser() -> argparse.ArgumentParser:
     p.add_argument("--serve-chunk", type=int, default=1,
                    help="decode this many tokens per serving dispatch "
                         "(lax.scan chunk; 1 = step-by-step)")
+    p.add_argument("--serve-spec-k", type=int, default=0,
+                   help="speculative drafts per verify round (0 = off; "
+                        "lossless draft/verify, see docs/serving.md)")
+    p.add_argument("--serve-draft", default="",
+                   help="draft model arch for speculative decoding "
+                        "(same vocab; empty = n-gram proposer)")
     p.add_argument("--no-donate", action="store_true",
                    help="disable train-state buffer donation")
     p.add_argument("--stage-retries", type=int, default=0,

@@ -11,6 +11,12 @@
 
     # paged KV cache: pool pages + prefix sharing (HBM ~ live tokens)
     PYTHONPATH=src python -m repro.launch.serve --engine paged --page-size 16
+
+    # lossless speculative decoding: n-gram drafts, one verify dispatch
+    PYTHONPATH=src python -m repro.launch.serve --spec-k 4
+
+    # ... or draft with a smaller same-vocab model
+    PYTHONPATH=src python -m repro.launch.serve --spec-k 4 --draft qwen1.5-4b
 """
 from __future__ import annotations
 
@@ -42,15 +48,29 @@ def main() -> None:
                     help="tokens decoded per dispatch (lax.scan chunk)")
     ap.add_argument("--page-size", type=int, default=16,
                     help="tokens per KV page (engine=paged; power of two)")
+    ap.add_argument("--spec-k", type=int, default=0,
+                    help="speculative drafts per verify round (0 = off)")
+    ap.add_argument("--ngram-n", type=int, default=3,
+                    help="n-gram order for the prompt-lookup proposer")
+    ap.add_argument("--draft", default="",
+                    help="draft model arch name (same vocab); empty = "
+                         "n-gram proposer")
     args = ap.parse_args()
 
     cfg = reduced(get_config(args.arch))
     model = build_model(cfg)
     params, _ = model.init(jax.random.PRNGKey(args.seed))
+    draft = dparams = None
+    if args.draft:
+        dcfg = reduced(get_config(args.draft))
+        draft = build_model(dcfg)
+        dparams, _ = draft.init(jax.random.PRNGKey(args.seed + 1))
     engine = ServeEngine(model, params, max_batch=args.max_batch,
                          max_seq=args.prompt_len + args.max_new + 8,
                          engine=args.engine, decode_chunk=args.chunk,
-                         page_size=args.page_size)
+                         page_size=args.page_size, spec_k=args.spec_k,
+                         spec_ngram_n=args.ngram_n, draft=draft,
+                         draft_params=dparams)
     rng = np.random.default_rng(args.seed)
     for i in range(args.requests):
         engine.submit(Request(
@@ -71,6 +91,12 @@ def main() -> None:
         print(f"  pages={engine.pool.capacity} page_size={args.page_size} "
               f"prefix_hit_rate={engine.pool.hit_rate:.3f} "
               f"({engine.pool.prefix_hits}/{engine.pool.prefix_lookups})")
+    if args.spec_k > 0:
+        stats = engine.kv_stats()
+        print(f"  spec_k={args.spec_k} "
+              f"proposer={'draft:' + args.draft if args.draft else 'ngram'} "
+              f"accept_rate={stats['spec_accept_rate']:.3f} "
+              f"tokens_per_round={stats['spec_tokens_per_round']:.2f}")
     for c in done[:3]:
         print(f"  uid={c.uid} reason={c.finished_reason} tokens={c.tokens[:8]}...")
 

@@ -105,6 +105,26 @@ class Model:
                                       greedy_only=greedy_only)
         return toks, new_cache
 
+    def verify_step(self, params: Pytree, cache: Pytree, tokens: jax.Array):
+        """Speculative verify: score ``tokens`` (B, k+1) — the last
+        committed token plus k drafts — in one dispatch, returning
+        ``(logits (B, k+1, V), new cache)`` with ``pos`` advanced by
+        k+1.  The engine rewinds ``pos`` after acceptance; see
+        :func:`repro.models.lm.verify_step` for rollback semantics."""
+        if self.cfg.is_encoder_decoder:
+            raise ValueError("speculative verify is not supported for "
+                             "encoder-decoder models")
+        return lm.verify_step(params, self.cfg, cache, tokens)
+
+    def supports_speculative(self) -> bool:
+        """Whether draft/verify speculative decoding is exact for this
+        model: the decode cache must be position-addressable (dense or
+        paged attention K/V) so rejected drafts roll back by a pos
+        rewind.  Recurrent state (ssm/hybrid) folds every step into an
+        unsplittable carry and cannot rewind."""
+        return (not self.cfg.is_encoder_decoder
+                and self.cfg.family not in ("ssm", "hybrid"))
+
     def init_cache(self, batch: int, max_seq: int) -> Pytree:
         if self.cfg.is_encoder_decoder:
             return encdec.init_cache(self.cfg, batch, max_seq)

@@ -133,6 +133,93 @@ def attend_decode(
     return out_proj(p, out, prefix), new_k, new_v, None
 
 
+def attend_verify(
+    p: Dict[str, Any],
+    x: jax.Array,  # (B, T, D) normed — T = k+1 speculative positions
+    cache_k: jax.Array,  # (B, S_max, KH, Dh)
+    cache_v: jax.Array,
+    pos: jax.Array,  # (B,) write position of row 0 (the last known token)
+    cfg: ModelConfig,
+    *,
+    use_rope: bool = True,
+    prefix: str = "attn",
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Speculative-verify attention: score ``T = k+1`` draft positions
+    of every slot in one dispatch.  The T new K/V rows land at
+    ``pos[b] .. pos[b]+T-1`` (RoPE'd per row at their absolute
+    positions) and query row ``t`` attends kv positions
+    ``< pos[b]+t+1`` — so each draft is scored against exactly the
+    prefix it would have seen in sequential decode.  Returns
+    ``(out, new_k, new_v)``.
+
+    Rejected drafts need no cache surgery: the engine rewinds ``pos``
+    and ``kv_len`` masking hides the dead rows until real decode
+    overwrites them.  Writes past ``S_max`` (retired-but-parked slots
+    whose frozen pos sits near the cache edge) clamp to the row's last
+    entry — dead rows, fully overwritten at the next admission."""
+    B, T = x.shape[:2]
+    S_max = cache_k.shape[1]
+    q, k, v = qkv(p, x, cfg, prefix)  # (B,T,*,Dh)
+    positions = pos[:, None] + jnp.arange(T)[None]  # (B, T)
+    if use_rope:
+        cos, sin = rope_angles(positions, cfg.head_dim, cfg.rope_theta)
+        q = apply_rope(q, cos, sin)
+        k = apply_rope(k, cos, sin)
+
+    bidx = jnp.arange(B)[:, None]
+    idx = jnp.clip(positions, 0, S_max - 1)
+    new_k = cache_k.at[bidx, idx].set(k.astype(cache_k.dtype))
+    new_v = cache_v.at[bidx, idx].set(v.astype(cache_v.dtype))
+
+    out = ops.decode_attention_mq(q, new_k, new_v, base_len=pos + 1)
+    return out_proj(p, out, prefix), new_k, new_v
+
+
+def attend_verify_paged(
+    p: Dict[str, Any],
+    x: jax.Array,           # (B, T, D) normed — T = k+1 speculative positions
+    k_pool: jax.Array,      # (KH, P, page, Dh) this layer's global page pool
+    v_pool: jax.Array,
+    page_table: jax.Array,  # (B, max_pages); -1 = unmapped
+    pos: jax.Array,         # (B,) write position of row 0
+    cfg: ModelConfig,
+    *,
+    use_rope: bool = True,
+    prefix: str = "attn",
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Speculative-verify attention against the paged KV pool: the
+    multi-token sibling of :func:`attend_decode_paged`.  The T new K/V
+    entries scatter through the page table (position ``pos+t`` lands in
+    physical page ``page_table[b, (pos+t) // page]``); parked rows
+    (``-1``) clamp to the null page 0, so dead slots' speculative writes
+    are absorbed exactly like their decode writes.  The read goes
+    through :func:`repro.kernels.ops.paged_decode_attention_mq` with
+    per-row causal limits ``kv < pos + t + 1``."""
+    B, T = x.shape[:2]
+    page = k_pool.shape[2]
+    max_pages = page_table.shape[1]
+    q, k, v = qkv(p, x, cfg, prefix)  # (B,T,*,Dh)
+    positions = pos[:, None] + jnp.arange(T)[None]  # (B, T)
+    if use_rope:
+        cos, sin = rope_angles(positions, cfg.head_dim, cfg.rope_theta)
+        q = apply_rope(q, cos, sin)
+        k = apply_rope(k, cos, sin)
+
+    bidx = jnp.arange(B)[:, None]
+    slot = jnp.clip(positions // page, 0, max_pages - 1)      # (B, T)
+    pid = jnp.maximum(page_table[bidx, slot], 0)  # -1 -> null page 0
+    off = positions % page
+    # pool is (KH, P, page, Dh); write (B, T, KH, Dh) K/V at [*, pid, off]
+    new_k = k_pool.at[:, pid, off].set(
+        k.astype(k_pool.dtype).transpose(2, 0, 1, 3))
+    new_v = v_pool.at[:, pid, off].set(
+        v.astype(v_pool.dtype).transpose(2, 0, 1, 3))
+
+    out = ops.paged_decode_attention_mq(q, new_k, new_v, page_table,
+                                        base_len=pos + 1)
+    return out_proj(p, out, prefix), new_k, new_v
+
+
 def attend_decode_paged(
     p: Dict[str, Any],
     x: jax.Array,           # (B, 1, D) normed

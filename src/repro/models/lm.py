@@ -23,6 +23,8 @@ from repro.models.attention import (
     attend_decode,
     attend_decode_paged,
     attend_train,
+    attend_verify,
+    attend_verify_paged,
     qkv,
     out_proj,
 )
@@ -616,6 +618,76 @@ def decode_step(params: Pytree, cfg: ModelConfig, cache: Pytree,
 
     logits = lm_logits(params, cfg, x)[:, 0]
     return logits, new_cache
+
+
+def verify_step(params: Pytree, cfg: ModelConfig, cache: Pytree,
+                tokens: jax.Array) -> Tuple[jax.Array, Pytree]:
+    """Speculative verify: tokens (B, T) — the last committed token plus
+    k = T-1 drafts — scored in ONE dispatch.  Returns
+    ``(logits (B, T, V), new cache)`` where ``logits[:, i]`` is the
+    target distribution for the token AFTER ``tokens[:, i]``.
+
+    The cache comes back with all T K/V rows written and ``pos``
+    advanced by T; the engine rewinds ``pos`` to ``pos + m`` after
+    acceptance (rejected rows stay as dead garbage above ``pos``,
+    masked out by ``kv_len`` until real tokens overwrite them).
+    Dense and paged caches both verify; recurrent families cannot
+    (state updates are not position-addressable, so rejected drafts
+    could not be rolled back)."""
+    if cfg.family in ("ssm", "hybrid") or cfg.is_encoder_decoder:
+        raise ValueError(
+            f"speculative verify unsupported for family {cfg.family!r}"
+            f"{' (encoder-decoder)' if cfg.is_encoder_decoder else ''}: "
+            f"recurrent/cross state cannot roll back rejected drafts"
+        )
+    pos = cache["pos"]  # (B,)
+    T = tokens.shape[1]
+    x = embed_tokens(params, cfg, tokens)
+    blocks = params["blocks"]
+
+    if "k_pool" in cache:
+        page_table = cache["page_table"]
+
+        def body(xx, xs):
+            pl_, kp, vp = xs
+            xx = hints.act(xx)
+            h = apply_norm(pl_, "norm1", xx, cfg.norm)
+            attn_out, nkp, nvp = attend_verify_paged(
+                pl_, h, kp, vp, page_table, pos, cfg
+            )
+            xx = xx + attn_out
+            h2 = apply_norm(pl_, "norm2", xx, cfg.norm)
+            if cfg.num_experts > 0:
+                out, _ = apply_moe(pl_, h2, cfg)
+                xx = xx + out
+            elif cfg.d_ff > 0:
+                xx = xx + apply_mlp(pl_, h2, cfg)
+            return xx, (nkp, nvp)
+
+        x, (nk, nv) = jax.lax.scan(
+            body, x, (blocks, cache["k_pool"], cache["v_pool"])
+        )
+        logits = lm_logits(params, cfg, x)  # (B, T, V)
+        return logits, {"k_pool": nk, "v_pool": nv,
+                        "page_table": page_table, "pos": pos + T}
+
+    def body(xx, xs):
+        pl_, kc, vc = xs
+        xx = hints.act(xx)
+        h = apply_norm(pl_, "norm1", xx, cfg.norm)
+        attn_out, nk, nv = attend_verify(pl_, h, kc, vc, pos, cfg)
+        xx = xx + attn_out
+        h2 = apply_norm(pl_, "norm2", xx, cfg.norm)
+        if cfg.num_experts > 0:
+            out, _ = apply_moe(pl_, h2, cfg)
+            xx = xx + out
+        elif cfg.d_ff > 0:
+            xx = xx + apply_mlp(pl_, h2, cfg)
+        return xx, (nk, nv)
+
+    x, (nk, nv) = jax.lax.scan(body, x, (blocks, cache["k"], cache["v"]))
+    logits = lm_logits(params, cfg, x)  # (B, T, V)
+    return logits, {"k": nk, "v": nv, "pos": pos + T}
 
 
 def _xlstm_decode(cfg, blocks, cache, x):

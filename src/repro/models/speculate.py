@@ -1,0 +1,247 @@
+"""Lossless speculative decoding: proposers + draft/verify acceptance.
+
+Speculative decoding drafts ``k`` cheap candidate tokens per slot, then
+scores all ``k + 1`` positions with **one** target-model dispatch
+(:meth:`repro.models.api.Model.verify_step`) and keeps the longest
+prefix the target model agrees with.  Decode is memory-bandwidth-bound
+— one token per full cache read — so a verified draft run multiplies
+tokens-per-dispatch without changing the output distribution:
+
+  * **greedy** slots accept drafts while they match the target argmax
+    and emit the target's own argmax at the first mismatch (or as the
+    bonus token after a full run) — bit-identical to non-speculative
+    greedy decode by construction;
+  * **temperature** slots use rejection sampling (Leviathan et al.;
+    Chen et al.): draft ``d_i ~ q_i`` is accepted iff
+    ``u_i < p_i(d_i) / q_i(d_i)``, and the first rejection resamples
+    from the residual ``norm(relu(p_i - q_i))``.  The emitted tokens are
+    *provably* distributed as the target ``p`` for **any** proposal
+    ``q`` — including the degenerate delta distributions of the n-gram
+    proposer — so speculation changes throughput, never the law of the
+    output.
+
+Two proposers, selectable per engine (see ``docs/serving.md``):
+
+  * :func:`ngram_propose` — device-side prompt-lookup: match the slot's
+    most recent ``n``-token suffix against its own prompt + generated
+    history and propose the continuation of the most recent prior
+    occurrence.  Free (no extra model, no extra cache) and strong on
+    repetitive text;
+  * a **draft model** (a smaller config with the same vocab) run
+    autoregressively for ``k`` steps by the engine, its full softmax
+    kept per draft position so the rejection test and residual are
+    available.
+
+Sample streams stay replay-deterministic: every random draw is keyed by
+``fold_in(fold_in(fold_in(base, slot), absolute_position), tag)`` with a
+distinct tag per purpose (draft draw / acceptance uniform / residual /
+bonus), so a slot's stream is a pure function of (engine seed, slot,
+position) — independent of its neighbors and of chunk boundaries, like
+the non-speculative path's :func:`repro.models.sampling.slot_keys`.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+# Distinct fold-in tags keep the four per-(slot, position) random
+# purposes on independent streams.  The non-speculative sampler uses the
+# untagged fold_in(fold_in(base, slot), pos) stream; these never collide
+# with it because the extra fold_in permutes the key again.
+TAG_DRAFT = 0x5D1
+TAG_ACCEPT = 0x5D2
+TAG_RESIDUAL = 0x5D3
+TAG_BONUS = 0x5D4
+
+
+def spec_keys(base_key: jax.Array, slots: jax.Array, pos: jax.Array,
+              tag: int) -> jax.Array:
+    """One PRNG key per slot for a speculative purpose:
+    ``fold_in(fold_in(fold_in(base, slot), pos), tag)``.
+
+    ``pos`` is the *absolute* token position the draw decides, so a
+    slot's stream replays identically across runs and chunk shapes."""
+
+    def one(s, p):
+        return jax.random.fold_in(
+            jax.random.fold_in(jax.random.fold_in(base_key, s), p), tag)
+
+    return jax.vmap(one)(slots, pos)
+
+
+# ---------------------------------------------------------------------------
+# n-gram / prompt-lookup proposer
+# ---------------------------------------------------------------------------
+def ngram_propose(hist: jax.Array, hist_len: jax.Array, *, k: int,
+                  n: int = 3) -> jax.Array:
+    """Draft ``k`` tokens per slot by prompt lookup — no model involved.
+
+    ``hist`` is ``(B, cap)`` int32: every token of the slot's prompt +
+    generated history, left-aligned; ``hist_len`` ``(B,)`` counts the
+    valid entries.  The slot's most recent ``n``-token suffix is matched
+    against every earlier window of its own history (static slices, so
+    the whole search jits to ``n`` vectorized compares); the proposal is
+    the continuation after the **most recent** prior match.  Slots with
+    no match (or too little history) fall back to repeating their last
+    token — a free bet on the degenerate loops small models love.
+
+    Proposals are hints, never promises: the verify pass scores them
+    against the target model, so a bad draft costs acceptance, not
+    correctness."""
+    B, cap = hist.shape
+    W = cap - n + 1
+    # suffix: the last n tokens of each row (clamped gather covers rows
+    # shorter than n; those rows are invalidated below)
+    sidx = jnp.clip(hist_len[:, None] - n + jnp.arange(n)[None], 0, cap - 1)
+    suffix = jnp.take_along_axis(hist, sidx, axis=1)          # (B, n)
+    starts = jnp.arange(W)[None]                              # (1, W)
+    match = jnp.ones((B, W), bool)
+    for j in range(n):  # static: n shifted compares, no gather
+        match &= hist[:, j:j + W] == suffix[:, j:j + 1]
+    # a window starting at s covers [s, s+n); it must end strictly
+    # before the suffix itself (start <= len - n - 1) to be a *prior*
+    # occurrence
+    match &= starts <= (hist_len - n - 1)[:, None]
+    match &= (hist_len >= n + 1)[:, None]
+    best = jnp.max(jnp.where(match, starts, -1), axis=1)      # (B,)
+    found = best >= 0
+    cont = best + n  # continuation of the matched occurrence
+    last = jnp.take_along_axis(
+        hist, jnp.clip(hist_len - 1, 0, cap - 1)[:, None], axis=1)[:, 0]
+    props = []
+    for j in range(k):  # static k gathers
+        cidx = jnp.clip(cont + j, 0, cap - 1)
+        pj = jnp.take_along_axis(hist, cidx[:, None], axis=1)[:, 0]
+        # continuations that run off the known history fall back to the
+        # last token (covers the period-1 attractor exactly)
+        props.append(jnp.where(found & (cont + j <= hist_len - 1), pj, last))
+    return jnp.stack(props, axis=1)                           # (B, k)
+
+
+def update_history(hist: jax.Array, pos: jax.Array, emitted: jax.Array,
+                   m: jax.Array, active: jax.Array) -> jax.Array:
+    """Append a verify round's emitted tokens to the history buffer.
+
+    ``emitted`` is ``(B, K)`` with ``m[b]`` valid entries landing at
+    absolute positions ``pos[b]+1 .. pos[b]+m[b]``; inactive slots and
+    dead columns leave the buffer untouched."""
+    B, cap = hist.shape
+    K = emitted.shape[1]
+    bidx = jnp.arange(B)
+    for j in range(K):  # static: K scatters
+        idx = jnp.clip(pos + 1 + j, 0, cap - 1)
+        write = active & (j < m)
+        cur = hist[bidx, idx]
+        hist = hist.at[bidx, idx].set(jnp.where(write, emitted[:, j], cur))
+    return hist
+
+
+# ---------------------------------------------------------------------------
+# Acceptance: exact-match greedy / rejection-sampling temperature
+# ---------------------------------------------------------------------------
+def accept_and_emit(
+    logits: jax.Array,               # (B, k+1, V) target verify logits
+    drafts: jax.Array,               # (B, k) proposed tokens
+    q_probs: Optional[jax.Array],    # (B, k, V) draft softmax; None = delta
+    temperatures: jax.Array,         # (B,)
+    base_key: jax.Array,
+    slots: jax.Array,                # (B,) slot ids
+    pos0: jax.Array,                 # (B,) absolute position of drafts[:, 0]
+    *,
+    bonus: bool,
+    greedy_only: bool = False,
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Decide which drafts survive and what to emit instead of the first
+    casualty.  Returns ``(emitted (B, k+1) int32, m (B,) int32,
+    accepted (B,) int32)`` — ``emitted[:, :m]`` are the round's tokens,
+    ``accepted`` counts surviving *drafts* (the acceptance-rate
+    numerator).
+
+    Greedy slots (``temperature <= 0``) accept while the draft equals
+    the target argmax and emit the argmax at the first mismatch — the
+    non-speculative greedy sequence, bit for bit.  Temperature slots run
+    the rejection test ``u < p(d)/q(d)`` per draft and resample the
+    first rejection from ``norm(relu(p - q))``; with ``q_probs=None``
+    the proposal is a point mass (n-gram), so the test degenerates to
+    ``u < p(d)`` and the residual to ``p`` with the draft zeroed —
+    target-distributed either way.
+
+    ``bonus`` (static) appends the target's own token after a fully
+    accepted run (``m = k+1``).  Only stateless proposers may enable it:
+    a draft *model*'s cache holds K/V through draft ``k-1`` only, so its
+    bonus token would desynchronize the draft cache (the engine caps the
+    draft-model path at ``m = k``)."""
+    B, K, V = logits.shape
+    k = K - 1
+    logits32 = logits.astype(jnp.float32)
+    tgt = jnp.argmax(logits32, axis=-1).astype(jnp.int32)     # (B, k+1)
+    jdx = jnp.arange(k)[None]                                 # (1, k)
+
+    # ---- greedy: exact-match prefix + correction/bonus token ----------
+    g_match = drafts == tgt[:, :k]                            # (B, k)
+    g_acc = jnp.sum(jnp.cumprod(g_match.astype(jnp.int32), axis=1), axis=1)
+    if greedy_only:
+        acc = g_acc
+        fix = tgt  # correction (mismatch) or bonus (full run) per column
+    else:
+        temps = temperatures.astype(jnp.float32)
+        safe = jnp.where(temps > 0, temps, 1.0)
+        p = jax.nn.softmax(logits32 / safe[:, None, None], axis=-1)
+        p_d = jnp.take_along_axis(
+            p[:, :k], drafts[:, :, None], axis=2)[:, :, 0]    # (B, k)
+        if q_probs is None:
+            ratio = p_d                                       # q = delta(d)
+            q_at = jax.nn.one_hot(drafts, V, dtype=jnp.float32)
+            q_d = jnp.ones_like(p_d)
+        else:
+            q = q_probs.astype(jnp.float32)
+            q_d = jnp.take_along_axis(q, drafts[:, :, None], axis=2)[:, :, 0]
+            ratio = p_d / jnp.maximum(q_d, 1e-30)
+            q_at = q
+        # one acceptance uniform per drafted position, keyed by its
+        # absolute position — independent of the draft draw's stream
+        u = jnp.stack([
+            jax.vmap(jax.random.uniform)(
+                spec_keys(base_key, slots, pos0 + j, TAG_ACCEPT))
+            for j in range(k)
+        ], axis=1)                                            # (B, k)
+        s_match = u < ratio
+        s_acc = jnp.sum(jnp.cumprod(s_match.astype(jnp.int32), axis=1), axis=1)
+        acc = jnp.where(temps > 0, s_acc, g_acc)
+
+        # residual at the first rejection: norm(relu(p - q)); if p <= q
+        # everywhere (p == q for deltas), fall back to p itself
+        a_idx = jnp.clip(acc, 0, max(k - 1, 0))
+        p_a = jnp.take_along_axis(p, jnp.broadcast_to(
+            a_idx[:, None, None], (B, 1, V)), axis=1)[:, 0]
+        q_a = jnp.take_along_axis(q_at, jnp.broadcast_to(
+            a_idx[:, None, None], (B, 1, V)), axis=1)[:, 0]
+        res = jnp.maximum(p_a - q_a, 0.0)
+        res_sum = jnp.sum(res, axis=-1, keepdims=True)
+        res = jnp.where(res_sum > 1e-30, res / jnp.maximum(res_sum, 1e-30),
+                        p_a)
+        r_keys = spec_keys(base_key, slots, pos0 + acc, TAG_RESIDUAL)
+        r_tok = jax.vmap(jax.random.categorical)(
+            r_keys, jnp.log(jnp.maximum(res, 1e-30))).astype(jnp.int32)
+
+        # bonus after a full run: a fresh draw from the target softmax
+        b_keys = spec_keys(base_key, slots, pos0 + k, TAG_BONUS)
+        b_tok = jax.vmap(jax.random.categorical)(
+            b_keys, logits32[:, k] / safe[:, None]).astype(jnp.int32)
+        # only column acc of the correction row is ever emitted, so one
+        # broadcast token per row suffices: residual on rejection, bonus
+        # draw after a fully accepted run
+        corr = jnp.where(acc >= k, b_tok, r_tok)              # (B,)
+        fix = jnp.where(temps[:, None] > 0,
+                        jnp.broadcast_to(corr[:, None], (B, K)), tgt)
+
+    kcol = jnp.arange(K)[None]                                # (1, k+1)
+    drafts_pad = jnp.concatenate(
+        [drafts, jnp.zeros((B, 1), drafts.dtype)], axis=1)    # (B, k+1)
+    emitted = jnp.where(kcol < acc[:, None], drafts_pad, fix)
+    full = acc >= k
+    m = jnp.where(full, (k + 1) if bonus else k, acc + 1).astype(jnp.int32)
+    m = jnp.maximum(m, 1)  # k == 0 degenerates to plain decode+sample
+    return emitted.astype(jnp.int32), m, acc.astype(jnp.int32)

@@ -72,6 +72,19 @@ request may land in a different slot and draw a different — but equally
 deterministic — stream).  The legacy path instead consumes one global
 split per sampled token, so temperature>0 draws differ between the
 engines; greedy tokens agree bit-for-bit.
+
+``spec_k > 0`` turns the chunked scan into **speculative draft/verify
+rounds** (``repro.models.speculate``): per round, k drafts per slot —
+from the free device-side n-gram/prompt-lookup proposer, or a smaller
+same-vocab ``draft`` model — are scored by one ``Model.verify_step``
+dispatch (a ``q_len = k+1`` decode-attention read) and the longest
+target-agreeing prefix is kept.  Rollback is a ``pos`` rewind: rejected
+rows stay as dead garbage above ``pos``, masked by ``kv_len`` and
+overwritten next round; the paged allocator reserves ``spec_k`` extra
+rows per slot at admission so a verify pass never writes past the
+reservation.  Greedy output is bit-identical to non-speculative decode
+and temperature output is exactly target-distributed (rejection
+sampling) — see ``docs/serving.md`` for the proposer matrix.
 """
 from __future__ import annotations
 
@@ -84,6 +97,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.models import speculate
 from repro.models.api import Model
 
 Pytree = Any
@@ -341,11 +355,112 @@ def _make_decode_chunk(model: Model, steps: int):
     return fn
 
 
+def _make_spec_chunk(model: Model, spec_k: int, rounds: int, ngram_n: int,
+                     draft: Optional[Model] = None):
+    """Jittable speculative decode chunk: ``rounds`` draft/verify rounds
+    under ``lax.scan``, each emitting 1..k+1 tokens per slot from ONE
+    target dispatch (:meth:`repro.models.api.Model.verify_step`).
+
+    Per round and slot: propose ``k`` drafts (device n-gram lookup over
+    the slot's own history, or ``k`` draft-model decode steps), verify
+    all ``k+1`` positions at once, keep the longest target-agreeing
+    prefix (exact-match for greedy slots, rejection sampling for
+    temperature slots — lossless either way, see
+    :mod:`repro.models.speculate`), then gate the surviving run on EOS /
+    token budget exactly like :func:`_make_decode_chunk` and rewind the
+    cache ``pos`` to the last committed token.  Rejected rows need no
+    K/V surgery — ``kv_len`` masking hides everything above ``pos``.
+
+    Emits ``(rounds, B, k+3)`` int32 — per round the ``k+1`` candidate
+    emissions plus ``m`` (tokens committed) and ``accepted`` (drafts
+    survived) columns — the chunk's single host transfer."""
+    K = spec_k
+
+    def fn(params, cache, draft_params, draft_cache, last_token, hist,
+           base_key, temps, active, counts, budgets, eos_id,
+           greedy_only=False):
+        B = last_token.shape[0]
+        slots = jnp.arange(B)
+
+        def body(carry, _):
+            cache, dcache, last, hist, act, cnt = carry
+            pos = cache["pos"]  # (B,) == plen + cnt - 1 for live slots
+
+            if draft is None:
+                drafts = speculate.ngram_propose(
+                    hist, pos + 1, k=K, n=ngram_n)
+                q_probs = None
+                dcache2 = dcache
+            else:
+                safe = jnp.where(temps > 0, temps, 1.0)
+
+                def dstep(c, j):
+                    dc, cur = c
+                    lg, dc = draft.decode_step(draft_params, dc, cur[:, None])
+                    lg32 = lg.astype(jnp.float32) / safe[:, None]
+                    keys = speculate.spec_keys(
+                        base_key, slots, pos + 1 + j, speculate.TAG_DRAFT)
+                    samp = jax.vmap(jax.random.categorical)(keys, lg32)
+                    tok = jnp.where(temps > 0, samp,
+                                    jnp.argmax(lg32, -1)).astype(jnp.int32)
+                    return (dc, tok), (tok, jax.nn.softmax(lg32, axis=-1))
+
+                (dcache2, _), (dt_, qt_) = jax.lax.scan(
+                    dstep, (dcache, last), jnp.arange(K))
+                drafts = dt_.T                      # (B, K)
+                q_probs = qt_.transpose(1, 0, 2)    # (B, K, V)
+
+            vt = jnp.concatenate([last[:, None], drafts], axis=1)  # (B, K+1)
+            logits, cache2 = model.verify_step(params, cache, vt)
+            emitted, m, accepted = speculate.accept_and_emit(
+                logits, drafts, q_probs, temps, base_key, slots, pos + 1,
+                bonus=(draft is None), greedy_only=greedy_only,
+            )
+            # gate the run on EOS and remaining budget, like the plain
+            # chunk's per-step mask — tokens after the first EOS or past
+            # the budget are dead
+            jcol = jnp.arange(K + 1)[None]
+            is_eos = (jcol < m[:, None]) & (emitted == eos_id)
+            eos_idx = jnp.min(jnp.where(is_eos, jcol, K + 2), axis=1)
+            m_eff = jnp.minimum(jnp.minimum(m, eos_idx + 1),
+                                jnp.maximum(budgets - cnt, 0))
+            m_eff = jnp.where(act, m_eff, 0)
+
+            new_pos = pos + m_eff  # rollback: rejected rows stay above pos
+            cache2 = dict(cache2, pos=new_pos)
+            if draft is not None:
+                # the draft cache holds K/V for [last, d_1..d_{k-1}] at
+                # pos..pos+k-1; every committed token <= the accepted
+                # prefix matches it, so syncing pos is the whole rollback
+                dcache2 = dict(dcache2, pos=new_pos)
+            cnt2 = cnt + m_eff
+            lidx = jnp.clip(m_eff - 1, 0, K)
+            last2 = jnp.where(
+                act & (m_eff > 0),
+                jnp.take_along_axis(emitted, lidx[:, None], axis=1)[:, 0],
+                last)
+            fin = act & ((eos_idx + 1 <= m_eff) | (cnt2 >= budgets))
+            hist2 = speculate.update_history(hist, pos, emitted, m_eff, act)
+            out = jnp.concatenate(
+                [emitted, m_eff[:, None], accepted[:, None]], axis=1)
+            return (cache2, dcache2, last2, hist2, act & ~fin, cnt2), out
+
+        (cache, dcache, _, hist, _, _), rows = jax.lax.scan(
+            body, (cache, draft_cache, last_token, hist, active, counts),
+            None, length=rounds)
+        return rows, cache, dcache, hist
+
+    return fn
+
+
 class ServeEngine:
     def __init__(self, model: Model, params: Pytree, *, max_batch: int = 8,
                  max_seq: int = 256, eos_id: int = 2, seed: int = 0,
                  engine: str = "fused", decode_chunk: int = 1,
-                 page_size: int = 16, num_pages: Optional[int] = None):
+                 page_size: int = 16, num_pages: Optional[int] = None,
+                 spec_k: int = 0, spec_ngram_n: int = 3,
+                 draft: Optional[Model] = None,
+                 draft_params: Optional[Pytree] = None):
         if engine not in ("fused", "legacy", "paged"):
             raise ValueError(f"engine must be 'fused', 'legacy' or 'paged', "
                              f"got {engine!r}")
@@ -354,6 +469,40 @@ class ServeEngine:
         if engine == "legacy" and decode_chunk > 1:
             raise ValueError("decode_chunk > 1 requires the fused engine: "
                              "the legacy baseline decodes token-by-token")
+        if spec_k < 0:
+            raise ValueError(f"spec_k must be >= 0, got {spec_k}")
+        if spec_k == 0 and draft is not None:
+            raise ValueError("a draft model requires spec_k >= 1")
+        if spec_k > 0:
+            if engine == "legacy":
+                raise ValueError("speculative decoding (spec_k > 0) requires "
+                                 "the fused or paged engine")
+            if not model.supports_speculative():
+                raise ValueError(
+                    f"speculative decoding unsupported for family "
+                    f"{model.cfg.family!r}: the decode cache cannot roll "
+                    f"back rejected drafts")
+            if spec_ngram_n < 1:
+                raise ValueError(f"spec_ngram_n must be >= 1, "
+                                 f"got {spec_ngram_n}")
+            if draft is not None:
+                if draft_params is None:
+                    raise ValueError("a draft model requires draft_params")
+                if draft.cfg.vocab_size != model.cfg.vocab_size:
+                    raise ValueError(
+                        f"draft vocab ({draft.cfg.vocab_size}) must match "
+                        f"target vocab ({model.cfg.vocab_size}): drafts are "
+                        f"target token ids")
+                if not draft.supports_speculative():
+                    raise ValueError(
+                        f"draft family {draft.cfg.family!r} cannot draft: "
+                        f"its cache cannot roll back rejected drafts")
+                if (model.supports_padded_prefill()
+                        and not draft.supports_padded_prefill()):
+                    raise ValueError(
+                        "draft model must support padded prefill when the "
+                        "target does: both prefill the same admission "
+                        "groups")
         self.model = model
         self.params = params
         self.max_batch = max_batch
@@ -400,9 +549,18 @@ class ServeEngine:
         self.temps = np.zeros(max_batch, dtype=np.float32)
         self.queue: Deque[Request] = deque()
         self.done: List[Completion] = []
-        # instrumentation: fast-path D2H transfers (count, elements)
+        # instrumentation: fast-path D2H transfers (count, elements) and
+        # chunk utilization (scanned decode steps actually consumed vs
+        # dispatched — low utilization means chunks outlive the work)
         self.d2h_transfers = 0
         self.d2h_elems = 0
+        self.chunk_steps_total = 0
+        self.chunk_steps_used = 0
+        # speculative decoding counters (spec_k > 0)
+        self.spec_rounds = 0
+        self.spec_proposed = 0
+        self.spec_accepted = 0
+        self.spec_tokens = 0
 
         self._padded_admission = model.supports_padded_prefill()
         self._axes = _cache_batch_axes(model, max_seq)
@@ -438,6 +596,36 @@ class ServeEngine:
             if engine in ("fused", "paged") and decode_chunk > 1 else None
         )
 
+        self.spec_k = spec_k
+        self.spec_ngram_n = spec_ngram_n
+        self.draft = draft
+        self.draft_params = draft_params
+        self._spec_chunk = None
+        if spec_k > 0:
+            # history buffer (n-gram proposer source + committed-token
+            # record): covers every reachable position of the engine
+            cap = (self._max_pages * page_size if engine == "paged"
+                   else max_seq)
+            self._hist_cap = cap
+            self.hist = jnp.zeros((max_batch, cap), jnp.int32)
+            self._hist_dirty: List[int] = []
+            self._spec_chunk = jax.jit(
+                _make_spec_chunk(model, spec_k, max(1, decode_chunk),
+                                 spec_ngram_n, draft),
+                static_argnames=("greedy_only",))
+            if draft is not None:
+                # the draft serves from its own dense fused cache sized
+                # to the target's reachable positions, admitted alongside
+                # the target (its admission-sampled tokens are discarded)
+                self._draft_cache = draft.init_cache(max_batch, cap)
+                d_axes = _cache_batch_axes(draft, cap)
+                self._draft_insert_exact = jax.jit(
+                    _make_prefill_insert(draft, cap, d_axes, use_lens=False))
+                self._draft_insert_pad = jax.jit(
+                    _make_prefill_insert(draft, cap, d_axes, use_lens=True))
+            else:
+                self._draft_cache = jnp.zeros((0,), jnp.float32)
+
     # ------------------------------------------------------------------
     def submit(self, req: Request) -> None:
         """Queue a request.  Validation happens here — once a request is
@@ -452,24 +640,31 @@ class ServeEngine:
             )
         # worst case the request decodes its full budget: the last decode
         # writes K/V at position plen + max_new_tokens - 2, which must
-        # stay inside the cache or the scatter silently clamps/drops
+        # stay inside the cache or the scatter silently clamps/drops.
+        # Speculation widens the margin by spec_k: a verify pass entered
+        # one token before the budget still writes k draft rows past it
         if self.engine == "paged":
-            need = -(-(plen + req.max_new_tokens - 1) // self.page_size)
+            need = -(-(plen + req.max_new_tokens - 1 + self.spec_k)
+                     // self.page_size)
             limit = min(self.pool.capacity, self._max_pages)
             if need > limit:
                 raise ValueError(
                     f"prompt ({plen}) + max_new_tokens "
-                    f"({req.max_new_tokens}) needs {need} KV pages but "
+                    f"({req.max_new_tokens})"
+                    + (f" + spec_k ({self.spec_k})" if self.spec_k else "")
+                    + f" needs {need} KV pages but "
                     f"engine='paged' can map at most {limit} pages per "
                     f"request ({self.pool.capacity} allocatable pages of "
                     f"page_size={self.page_size} in the pool, "
                     f"{self._max_pages} page-table entries per slot): "
                     f"the request could never be admitted"
                 )
-        elif plen + req.max_new_tokens - 1 > self.max_seq:
+        elif plen + req.max_new_tokens - 1 + self.spec_k > self.max_seq:
             raise ValueError(
                 f"prompt ({plen}) + max_new_tokens ({req.max_new_tokens}) "
-                f"- 1 exceeds max_seq={self.max_seq}: the decode would "
+                f"- 1"
+                + (f" + spec_k ({self.spec_k})" if self.spec_k else "")
+                + f" exceeds max_seq={self.max_seq}: the decode would "
                 f"overflow the KV cache"
             )
         self.queue.append(req)
@@ -579,9 +774,27 @@ class ServeEngine:
             jnp.asarray(lens), jnp.asarray(slots), jnp.int32(n),
             self.base_key, jnp.asarray(temps),
         )
+        self._admit_draft(kind, tokens, lens, slots, temps, n)
         first = np.asarray(first)
         for i, (slot, req) in enumerate(members):
             self._place(slot, req, int(first[i]))
+
+    def _admit_draft(self, kind: str, tokens, lens, slots, temps,
+                     n: int) -> None:
+        """Prefill the draft model's cache for a freshly admitted group
+        (same rows, same slots).  The draft's admission-sampled tokens
+        are discarded — the target's prefill decides the first token —
+        and its cache position lands at ``lens``, in lockstep with the
+        target."""
+        if self.spec_k == 0 or self.draft is None:
+            return
+        dfn = (self._draft_insert_pad if kind == "pad"
+               else self._draft_insert_exact)
+        _, self._draft_cache = dfn(
+            self.draft_params, self._draft_cache, jnp.asarray(tokens), None,
+            jnp.asarray(lens), jnp.asarray(slots), jnp.int32(n),
+            self.base_key, jnp.asarray(temps),
+        )
 
     # ---- paged admission ---------------------------------------------
     def _plan_pages(self, req: Request):
@@ -592,7 +805,10 @@ class ServeEngine:
         copied from the prefill (shared hits need none) — or None with
         every reservation rolled back when the pool can't fit it."""
         plen = len(req.prompt)
-        n_total = -(-(plen + req.max_new_tokens - 1) // self.page_size)
+        # + spec_k: room for the draft rows a final verify pass writes
+        # past the budget (over-reserved tail pages free at retirement)
+        n_total = -(-(plen + req.max_new_tokens - 1 + self.spec_k)
+                    // self.page_size)
         n_prompt = -(-plen // self.page_size)
         n_full = plen // self.page_size  # only fully-covered pages share
         prompt = np.asarray(req.prompt, np.int32)
@@ -691,9 +907,30 @@ class ServeEngine:
         )
         self.cache = {"k_pool": nk, "v_pool": nv,
                       "page_table": self.cache["page_table"], "pos": npos}
+        self._admit_draft(kind, tokens, lens, slots, temps, n)
         first = np.asarray(toks)
         for i, (slot, req, _, _) in enumerate(members):
             self._place(slot, req, int(first[i]))
+
+    def _sync_hist(self) -> None:
+        """Upload history rows for freshly admitted slots (prompt + the
+        admission-sampled token).  Device-side rounds keep continuing
+        slots' rows current, so only new admissions transfer."""
+        if self.spec_k == 0 or not self._hist_dirty:
+            return
+        idx = sorted(set(self._hist_dirty))
+        self._hist_dirty = []
+        rows = np.zeros((len(idx), self._hist_cap), np.int32)
+        for r, slot in enumerate(idx):
+            req = self.req[slot]
+            if req is None:  # admitted and instantly retired: row is dead
+                continue
+            seq = np.concatenate([np.asarray(req.prompt, np.int64),
+                                  np.asarray(self.emitted[slot], np.int64)])
+            seq = seq[: self._hist_cap]
+            rows[r, : len(seq)] = seq
+        self.hist = self.hist.at[jnp.asarray(np.asarray(idx, np.int32))].set(
+            jnp.asarray(rows))
 
     def _sync_ptable(self) -> None:
         """Upload the host page-table mirror before a decode dispatch.
@@ -727,6 +964,8 @@ class ServeEngine:
         self.emitted[slot] = [first]
         self.last_token[slot] = first
         self.temps[slot] = req.temperature
+        if self.spec_k > 0:
+            self._hist_dirty.append(slot)
         if first == self.eos_id:
             self._retire(slot, "eos")
         elif req.max_new_tokens <= 1:
@@ -760,9 +999,11 @@ class ServeEngine:
         """Apply decoded tokens, one (B,) row per decode step, to the host
         bookkeeping — the same retire rules the device chunk mask uses,
         so host and device state stay in lockstep."""
+        self.chunk_steps_total += len(tok_rows)
         for row in tok_rows:
             if not self.active.any():
-                break
+                break  # early-out: the rest of the chunk is dead work
+            self.chunk_steps_used += 1
             for slot in range(self.max_batch):
                 if not self.active[slot]:
                     continue
@@ -830,11 +1071,73 @@ class ServeEngine:
         self._consume(self._to_host(seq))
         return self.decode_chunk
 
+    # ---- speculative decode ------------------------------------------
+    def _consume_spec(self, rows: np.ndarray) -> None:
+        """Apply speculative rounds — ``rows`` is ``(R, B, k+3)``: the
+        round's candidate emissions plus its ``m`` (committed count) and
+        ``accepted`` (surviving drafts) columns — with the same retire
+        rules the device round mask uses, so host and device stay in
+        lockstep."""
+        mcol, acol = self.spec_k + 1, self.spec_k + 2
+        self.chunk_steps_total += len(rows)
+        for row in rows:
+            if not self.active.any():
+                break  # early-out: the rest of the chunk is dead work
+            self.chunk_steps_used += 1
+            for slot in range(self.max_batch):
+                if not self.active[slot]:
+                    continue
+                req = self.req[slot]
+                m = int(row[slot, mcol])
+                self.spec_rounds += 1
+                self.spec_proposed += self.spec_k
+                self.spec_accepted += int(row[slot, acol])
+                self.spec_tokens += m
+                for j in range(m):
+                    tok = int(row[slot, j])
+                    self.emitted[slot].append(tok)
+                    self.last_token[slot] = tok
+                    if tok == self.eos_id:
+                        self._retire(slot, "eos")
+                        break
+                    if len(self.emitted[slot]) >= req.max_new_tokens:
+                        self._retire(slot, "length")
+                        break
+
+    def step_spec(self) -> int:
+        """One speculative iteration: admit, then run ``decode_chunk``
+        draft/verify rounds in a single scanned dispatch — up to
+        ``decode_chunk * (spec_k + 1)`` tokens per slot from one host
+        transfer.  Returns the rounds executed (0 when idle)."""
+        self._admit()
+        self._sync_ptable()
+        self._sync_hist()
+        if not self.active.any():
+            return 0
+        budgets = np.asarray(
+            [r.max_new_tokens if r is not None else 0 for r in self.req],
+            np.int32,
+        )
+        counts = np.asarray([len(e) for e in self.emitted], np.int32)
+        rows, self.cache, dcache, self.hist = self._spec_chunk(
+            self.params, self.cache, self.draft_params, self._draft_cache,
+            jnp.asarray(self.last_token), self.hist, self.base_key,
+            jnp.asarray(self.temps), jnp.asarray(self.active),
+            jnp.asarray(counts), jnp.asarray(budgets),
+            jnp.int32(self.eos_id), greedy_only=self._all_greedy(),
+        )
+        if self.draft is not None:
+            self._draft_cache = dcache
+        self._consume_spec(self._to_host(rows))
+        return max(1, self.decode_chunk)
+
     def run(self, max_steps: int = 10_000) -> List[Completion]:
         steps = 0
         chunked = self.engine in ("fused", "paged") and self.decode_chunk > 1
         while (self.queue or self.active.any()) and steps < max_steps:
-            if chunked:
+            if self.spec_k > 0:
+                steps += self.step_spec() or 1
+            elif chunked:
                 steps += self.step_chunk() or 1
             else:
                 self.step()
@@ -868,7 +1171,20 @@ class ServeEngine:
         stats: Dict[str, float] = {
             "kv_bytes_per_token": per_tok,
             "live_tokens": live,
+            "chunk_utilization": (self.chunk_steps_used
+                                  / max(1, self.chunk_steps_total)),
         }
+        if self.spec_k > 0:
+            stats.update(
+                spec_rounds=self.spec_rounds,
+                spec_tokens=self.spec_tokens,
+                spec_accepted=self.spec_accepted,
+                spec_proposed=self.spec_proposed,
+                spec_accept_rate=(self.spec_accepted
+                                  / max(1, self.spec_proposed)),
+                spec_tokens_per_round=(self.spec_tokens
+                                       / max(1, self.spec_rounds)),
+            )
         if self.engine == "paged":
             in_use = self.pool.pages_in_use * self.page_size * per_tok
             stats.update(
@@ -896,7 +1212,9 @@ def smoke_serve(model: Model, params: Pytree, *, num_requests: int,
                 prompt_len: int = 8, max_new_tokens: int = 8,
                 seed: int = 0, engine: str = "fused", decode_chunk: int = 1,
                 temperature: float = 0.0, page_size: int = 16,
-                num_pages: Optional[int] = None
+                num_pages: Optional[int] = None, spec_k: int = 0,
+                spec_ngram_n: int = 3, draft: Optional[Model] = None,
+                draft_params: Optional[Pytree] = None
                 ) -> Tuple[List[Completion], Dict[str, float]]:
     """Drive one engine through a synthetic request burst and report
     throughput stats — the serving smoke used by ServeStage and quick
@@ -907,7 +1225,9 @@ def smoke_serve(model: Model, params: Pytree, *, num_requests: int,
 
     eng = ServeEngine(model, params, max_batch=max_batch, max_seq=max_seq,
                       seed=seed, engine=engine, decode_chunk=decode_chunk,
-                      page_size=page_size, num_pages=num_pages)
+                      page_size=page_size, num_pages=num_pages,
+                      spec_k=spec_k, spec_ngram_n=spec_ngram_n,
+                      draft=draft, draft_params=draft_params)
     rng = np.random.default_rng(seed)
     t0 = time.perf_counter()
     for i in range(num_requests):
@@ -921,7 +1241,15 @@ def smoke_serve(model: Model, params: Pytree, *, num_requests: int,
     stats = {"requests": len(completions), "tokens": toks,
              "step_time_s": dt, "tok_per_s": toks / max(dt, 1e-9),
              "engine": engine, "decode_chunk": decode_chunk,
-             "d2h_transfers": eng.d2h_transfers}
+             "d2h_transfers": eng.d2h_transfers,
+             "chunk_utilization": (eng.chunk_steps_used
+                                   / max(1, eng.chunk_steps_total))}
+    if spec_k > 0:
+        stats["spec_k"] = spec_k
+        stats["spec_accept_rate"] = (eng.spec_accepted
+                                     / max(1, eng.spec_proposed))
+        stats["spec_tokens_per_round"] = (eng.spec_tokens
+                                          / max(1, eng.spec_rounds))
     if engine == "paged":
         stats["prefix_hit_rate"] = eng.pool.hit_rate
         stats["prefix_hits"] = eng.pool.prefix_hits

@@ -1,0 +1,287 @@
+"""Speculative decoding: acceptance-rule exactness (statistical and
+bit-exact greedy), the n-gram proposer, engine token identity across
+spec_k and engines, draft-model parity, rollback page hygiene, and the
+constructor/submit validation surface."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, reduced
+from repro.models import build_model, speculate
+from repro.serve import Request, ServeEngine
+from repro.serve.engine import smoke_serve
+
+
+# ===========================================================================
+# accept_and_emit: greedy exactness
+# ===========================================================================
+def test_greedy_accepts_matching_prefix_and_corrects():
+    V, k = 11, 3
+    B = 4
+    logits = np.full((B, k + 1, V), -10.0, np.float32)
+    # target argmax sequence per row: [2, 3, 4, 5]
+    for j in range(k + 1):
+        logits[:, j, j + 2] = 10.0
+    drafts = np.array([
+        [2, 3, 4],   # full match -> bonus column is argmax 5
+        [2, 3, 9],   # 2 accepted, correction = argmax 4
+        [9, 9, 9],   # 0 accepted, correction = argmax 2
+        [2, 9, 4],   # 1 accepted (prefix rule: later match doesn't help)
+    ], np.int32)
+    emitted, m, acc = speculate.accept_and_emit(
+        jnp.asarray(logits), jnp.asarray(drafts), None,
+        jnp.zeros(B), jax.random.PRNGKey(0),
+        jnp.arange(B), jnp.zeros(B, jnp.int32), bonus=True)
+    assert list(acc) == [3, 2, 0, 1]
+    assert list(m) == [4, 3, 1, 2]
+    rows = [list(emitted[i, :m[i]]) for i in range(B)]
+    assert rows == [[2, 3, 4, 5], [2, 3, 4], [2], [2, 3]]
+    # bonus=False caps a full run at m = k, drafts only
+    _, m2, _ = speculate.accept_and_emit(
+        jnp.asarray(logits), jnp.asarray(drafts), None,
+        jnp.zeros(B), jax.random.PRNGKey(0),
+        jnp.arange(B), jnp.zeros(B, jnp.int32), bonus=False)
+    assert list(m2) == [3, 3, 1, 2]
+
+
+# ===========================================================================
+# accept_and_emit: rejection sampler emits the exact target law
+# ===========================================================================
+def _tv(counts, probs):
+    emp = counts / counts.sum()
+    return 0.5 * np.abs(emp - probs).sum()
+
+
+def _spec_round(N, V, k, temp, seed, *, delta):
+    """One vectorized verify round over N independent slots sharing the
+    same target/draft distributions; returns (emitted, acc, p, q)."""
+    rng = np.random.default_rng(seed)
+    logits = rng.normal(0, 1.5, (k + 1, V)).astype(np.float32)
+    p = jax.nn.softmax(jnp.asarray(logits) / temp, axis=-1)
+    logits_b = jnp.broadcast_to(jnp.asarray(logits), (N, k + 1, V))
+    if delta:
+        q = None
+        drafts = jnp.broadcast_to(
+            jnp.asarray(rng.integers(0, V, k), jnp.int32), (N, k))
+        q_b = None
+    else:
+        qlog = rng.normal(0, 1.0, (k, V)).astype(np.float32)
+        q = np.asarray(jax.nn.softmax(jnp.asarray(qlog), axis=-1))
+        drafts = jnp.asarray(np.stack(
+            [rng.choice(V, N, p=q[j]) for j in range(k)],
+            axis=1).astype(np.int32))
+        q_b = jnp.broadcast_to(jnp.asarray(q), (N, k, V))
+    emitted, m, acc = speculate.accept_and_emit(
+        logits_b, drafts, q_b, jnp.full((N,), temp),
+        jax.random.PRNGKey(seed + 99), jnp.arange(N),
+        jnp.zeros(N, jnp.int32), bonus=delta)
+    return np.asarray(emitted), np.asarray(acc), np.asarray(p), q
+
+
+def test_rejection_sampler_matches_target_model_q():
+    """emitted[:, 0] ~ p_0 exactly, for a real (model) proposal q."""
+    N, V, k = 20000, 8, 3
+    emitted, acc, p, _ = _spec_round(N, V, k, 0.9, seed=3, delta=False)
+    counts = np.bincount(emitted[:, 0], minlength=V)
+    assert _tv(counts, p[0]) < 0.03
+    # conditional: given draft 0 survived, emitted[:, 1] ~ p_1
+    sub = emitted[acc >= 1, 1]
+    assert sub.size > 2000
+    assert _tv(np.bincount(sub, minlength=V), p[1]) < 0.05
+
+
+def test_rejection_sampler_matches_target_delta_q():
+    """Point-mass proposals (the n-gram path, q_probs=None) are also
+    target-distributed: the test degenerates to u < p(d) with residual
+    norm(relu(p - delta))."""
+    N, V, k = 20000, 8, 3
+    emitted, _, p, _ = _spec_round(N, V, k, 0.9, seed=5, delta=True)
+    counts = np.bincount(emitted[:, 0], minlength=V)
+    assert _tv(counts, p[0]) < 0.03
+
+
+# ===========================================================================
+# n-gram proposer
+# ===========================================================================
+def test_ngram_proposer_continues_most_recent_match():
+    cap, n, k = 16, 3, 3
+    hist = np.zeros((3, cap), np.int32)
+    # row 0: 7 8 9 4 5 7 8 9 -> suffix (7,8,9) matches position 0; the
+    # proposal is the continuation 4 5 7
+    hist[0, :8] = [7, 8, 9, 4, 5, 7, 8, 9]
+    # row 1: no prior occurrence of the suffix -> repeat last token
+    hist[1, :6] = [1, 2, 3, 4, 5, 6]
+    # row 2: period-2 loop 5 6 5 6 5 6 -> suffix (6,5,6) matches at
+    # start 1; continuation 5 6, then off-history fallback to last (6)
+    hist[2, :6] = [5, 6, 5, 6, 5, 6]
+    props = np.asarray(speculate.ngram_propose(
+        jnp.asarray(hist), jnp.asarray([8, 6, 6]), k=k, n=n))
+    assert list(props[0]) == [4, 5, 7]
+    assert list(props[1]) == [6, 6, 6]
+    assert list(props[2]) == [5, 6, 6]
+
+
+def test_update_history_writes_m_tokens_at_pos():
+    hist = jnp.zeros((2, 8), jnp.int32)
+    pos = jnp.asarray([1, 3])
+    emitted = jnp.asarray([[7, 8, 9], [4, 5, 6]], jnp.int32)
+    out = np.asarray(speculate.update_history(
+        hist, pos, emitted, jnp.asarray([3, 2]),
+        jnp.asarray([True, False])))
+    assert list(out[0]) == [0, 0, 7, 8, 9, 0, 0, 0]
+    assert list(out[1]) == [0] * 8  # inactive slot untouched
+
+
+# ===========================================================================
+# engine: token identity and parity
+# ===========================================================================
+@pytest.fixture(scope="module")
+def spec_setup():
+    cfg = reduced(get_config("qwen2-1.5b"))
+    model = build_model(cfg)
+    params, _ = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+def _smoke_tokens(model, params, cfg, **kw):
+    done, _ = smoke_serve(model, params, num_requests=6, max_batch=3,
+                          max_seq=64, vocab_size=cfg.vocab_size,
+                          prompt_len=8, max_new_tokens=8, **kw)
+    return {c.uid: tuple(c.tokens) for c in done}
+
+
+@pytest.mark.parametrize("engine", ["fused", "paged"])
+def test_greedy_token_identity_across_spec_k(spec_setup, engine):
+    """Speculation must be invisible in greedy output: spec_k in
+    {0, 2, 4} produce identical token streams on both engines."""
+    cfg, model, params = spec_setup
+    base = _smoke_tokens(model, params, cfg, engine=engine, decode_chunk=2)
+    for k in (2, 4):
+        spec = _smoke_tokens(model, params, cfg, engine=engine,
+                             decode_chunk=2, spec_k=k)
+        assert spec == base, f"engine={engine} spec_k={k} diverged"
+
+
+def test_draft_model_greedy_parity(spec_setup):
+    """A separately initialized draft model proposes near-garbage
+    (acceptance ~ 0) yet greedy output is still bit-identical."""
+    cfg, model, params = spec_setup
+    dcfg = reduced(get_config("qwen1.5-4b"))
+    draft = build_model(dcfg)
+    dparams, _ = draft.init(jax.random.PRNGKey(7))
+    base = _smoke_tokens(model, params, cfg, engine="fused")
+    spec = _smoke_tokens(model, params, cfg, engine="fused", spec_k=2,
+                         draft=draft, draft_params=dparams)
+    assert spec == base
+
+
+def _pooled_tokens(eng, cfg, seeds, temp):
+    """Reuse one engine (one compile) across seeds; return all tokens.
+    ``run()`` returns the cumulative completion list, so slice off the
+    new burst each seed."""
+    toks = []
+    prev = 0
+    for seed in seeds:
+        eng.base_key = jax.random.PRNGKey(seed)
+        rng = np.random.default_rng(12)  # identical prompts every seed
+        for i in range(4):
+            eng.submit(Request(
+                uid=seed * 100 + i,
+                prompt=rng.integers(1, cfg.vocab_size, 8).astype(np.int32),
+                max_new_tokens=12, temperature=temp))
+        done = eng.run()
+        for c in done[prev:]:
+            toks.extend(c.tokens)
+        prev = len(done)
+    return np.asarray(toks)
+
+
+def test_temperature_distribution_parity(spec_setup):
+    """Lossless at temperature, statistically: pooled token histograms
+    with and without speculation agree (same prompts, many seeds).  A
+    small vocab keeps the empirical TV resolvable."""
+    cfg = reduced(get_config("qwen2-1.5b"), vocab_size=32)
+    model = build_model(cfg)
+    params, _ = model.init(jax.random.PRNGKey(0))
+    eng0 = ServeEngine(model, params, max_batch=4, max_seq=64,
+                       engine="fused", decode_chunk=2)
+    eng1 = ServeEngine(model, params, max_batch=4, max_seq=64,
+                       engine="fused", decode_chunk=2, spec_k=3)
+    seeds = range(8)
+    t0 = _pooled_tokens(eng0, cfg, seeds, 0.8)
+    t1 = _pooled_tokens(eng1, cfg, seeds, 0.8)
+    # EOS can shorten individual completions, but both paths sample the
+    # same law, so the pooled mass must agree
+    assert min(t0.size, t1.size) > 200
+    h0 = np.bincount(t0, minlength=cfg.vocab_size)
+    h1 = np.bincount(t1, minlength=cfg.vocab_size)
+    tv = 0.5 * np.abs(h0 / h0.sum() - h1 / h1.sum()).sum()
+    assert tv < 0.25, f"spec vs plain pooled TV {tv:.3f}"
+
+
+# ===========================================================================
+# engine: rollback page hygiene + counters
+# ===========================================================================
+def test_paged_spec_no_page_leak(spec_setup):
+    """Rejected drafts leave garbage above pos, never leaked pages: the
+    pool drains to zero after the burst and mid-flight occupancy stays
+    bounded."""
+    cfg, model, params = spec_setup
+    eng = ServeEngine(model, params, max_batch=3, max_seq=64,
+                      engine="paged", page_size=16, spec_k=4)
+    rng = np.random.default_rng(2)
+    for i in range(5):
+        eng.submit(Request(uid=i,
+                           prompt=rng.integers(1, cfg.vocab_size, 8),
+                           max_new_tokens=10, temperature=0.0))
+    done = eng.run()
+    assert len(done) == 5
+    stats = eng.kv_stats()
+    assert stats["pages_in_use"] == 0
+    assert stats["spec_rounds"] > 0
+    # each request's first token comes from admission sampling, the rest
+    # from spec rounds
+    assert stats["spec_tokens"] == sum(len(c.tokens) for c in done) - len(done)
+    assert 0.0 <= stats["spec_accept_rate"] <= 1.0
+    assert "chunk_utilization" in stats
+
+
+def test_chunk_utilization_reported_without_spec(spec_setup):
+    cfg, model, params = spec_setup
+    _, stats = smoke_serve(model, params, num_requests=4, max_batch=2,
+                           max_seq=64, vocab_size=cfg.vocab_size,
+                           engine="fused", decode_chunk=4)
+    assert 0.0 < stats["chunk_utilization"] <= 1.0
+
+
+# ===========================================================================
+# validation surface
+# ===========================================================================
+def test_spec_validation_errors(spec_setup):
+    cfg, model, params = spec_setup
+    with pytest.raises(ValueError, match="fused or paged"):
+        ServeEngine(model, params, max_batch=2, max_seq=64,
+                    engine="legacy", spec_k=2)
+    with pytest.raises(ValueError, match="requires spec_k"):
+        ServeEngine(model, params, max_batch=2, max_seq=64,
+                    draft=model, draft_params=params)
+    with pytest.raises(ValueError, match="draft_params"):
+        ServeEngine(model, params, max_batch=2, max_seq=64, spec_k=2,
+                    draft=model)
+    bad = build_model(reduced(get_config("qwen2-1.5b"), vocab_size=128))
+    bparams, _ = bad.init(jax.random.PRNGKey(1))
+    with pytest.raises(ValueError, match="vocab"):
+        ServeEngine(model, params, max_batch=2, max_seq=64, spec_k=2,
+                    draft=bad, draft_params=bparams)
+
+
+def test_submit_margin_includes_spec_k(spec_setup):
+    """A verify pass entered near the end of a sequence writes up to
+    spec_k rows past the last kept token; submit must reserve them."""
+    cfg, model, params = spec_setup
+    eng = ServeEngine(model, params, max_batch=2, max_seq=32, spec_k=4)
+    prompt = np.arange(1, 9, dtype=np.int32)
+    with pytest.raises(ValueError, match="spec_k"):
+        eng.submit(Request(uid=0, prompt=prompt, max_new_tokens=25))
+    eng.submit(Request(uid=1, prompt=prompt, max_new_tokens=21))  # fits
