@@ -1,0 +1,187 @@
+"""Executor bench — GIL escape and fleet throughput across backends.
+
+Measures the execution-substrate trajectory introduced with
+``repro.core.executor`` and writes machine-readable
+``BENCH_executor.json`` so regressions across PRs are visible:
+
+  * **gil_escape** — wall time of a CPU-bound fan-out stage graph (pure
+    Python work, the Data/Eval-stage profile) under ``ThreadedExecutor``
+    (bodies serialize on the GIL) vs ``LocalPoolExecutor`` (bodies in
+    process-pool children).  The regression floor asserts the process
+    backend reaches ``SPEEDUP_FLOOR``x the threaded wall time — but only
+    when the host grants >= 2 CPUs (``os.sched_getaffinity``): on a
+    single-core box the speedup is physically capped at ~1x, so the
+    floor is recorded but not enforced (``floor_enforced`` in the JSON
+    says which happened; CI runners have 4 vCPUs and do enforce it);
+  * **fleet** — runs/second of a `RunQueue` fleet (many small workflow
+    graphs through one shared `WorkerQueueExecutor`), plus the same
+    fleet on a shared `ThreadedExecutor` for the queue's overhead
+    factor.  Floors: every fleet run completes, zero stages lost, and
+    the worker-queue fleet stays within ``QUEUE_OVERHEAD_CEIL``x of the
+    threaded fleet on this tiny-stage workload (leases + heartbeats are
+    bookkeeping, not a second scheduler).
+
+Raises (failing the bench suite loudly) on any floor violation.
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.core.executor import (  # noqa: E402
+    LocalPoolExecutor,
+    ThreadedExecutor,
+    WorkerQueueExecutor,
+)
+from repro.core.graph import Stage, StageContext, StageGraph  # noqa: E402
+from repro.core.runqueue import RunQueue  # noqa: E402
+
+OUT_PATH = "BENCH_executor.json"
+SPEEDUP_FLOOR = 1.5       # process pool vs threads, CPU-bound, >= 2 cores
+QUEUE_OVERHEAD_CEIL = 3.0  # worker-queue fleet vs threaded fleet
+FAN_OUT = 8                # independent CPU-bound stages per graph
+FLEET_RUNS = 8             # concurrent runs through the RunQueue
+
+
+class BurnStage(Stage):
+    """Pure-Python CPU burn — pickles cleanly, holds the GIL while it
+    spins, which is exactly the workload processes must beat threads on."""
+
+    process_safe = True
+
+    def __init__(self, name, iters):
+        super().__init__(name)
+        self.iters = iters
+        self.outputs = (f"{name}.sum",)
+
+    def run(self, ctx):
+        acc = 0
+        for i in range(self.iters):
+            acc = (acc * 1103515245 + i) % (2 ** 31)
+        return {self.outputs[0]: acc}
+
+
+def _fan_out_graph(iters, tag=""):
+    g = StageGraph()
+    for i in range(FAN_OUT):
+        g.add(BurnStage(f"burn{tag}{i}", iters))
+    return g
+
+
+def _calibrate_iters(target_s: float = 0.12) -> int:
+    """Iterations for ~target_s of single-threaded burn, so total bench
+    wall time stays bounded on slow and fast hosts alike."""
+    probe = 200_000
+    t0 = time.perf_counter()
+    BurnStage("probe", probe).run(None)
+    dt = max(time.perf_counter() - t0, 1e-4)
+    return max(50_000, int(probe * target_s / dt))
+
+
+def bench_gil_escape(iters: int, cpus: int) -> dict:
+    workers = min(4, max(2, cpus))
+    walls = {}
+    with ThreadedExecutor(workers=workers) as ex:
+        t0 = time.perf_counter()
+        _fan_out_graph(iters, "t").execute(
+            StageContext(template=None, record=None), executor=ex)
+        walls["threaded_s"] = time.perf_counter() - t0
+    with LocalPoolExecutor(workers=workers) as ex:  # warm: children forked
+        t0 = time.perf_counter()
+        ctx = StageContext(template=None, record=None)
+        _fan_out_graph(iters, "p").execute(ctx, executor=ex)
+        walls["process_s"] = time.perf_counter() - t0
+        stats = ex.stats()
+    if stats["dispatched"] != FAN_OUT:
+        raise RuntimeError(
+            f"process backend dispatched {stats['dispatched']}/{FAN_OUT} "
+            f"stages to children (fallbacks: {stats['inline_fallbacks']})")
+    speedup = walls["threaded_s"] / walls["process_s"]
+    enforce = cpus >= 2
+    return {**walls, "workers": workers, "iters_per_stage": iters,
+            "stages": FAN_OUT, "speedup": round(speedup, 3),
+            "floor": SPEEDUP_FLOOR, "floor_enforced": enforce}
+
+
+def _drive_fleet(shared, iters) -> dict:
+    rq = RunQueue(shared, max_active=FLEET_RUNS)
+    t0 = time.perf_counter()
+    tickets = []
+    for i in range(FLEET_RUNS):
+        def one_run(view, i=i):
+            ctx = StageContext(template=None, record=None)
+            _fan_out_graph(iters, f"f{i}-").execute(ctx, executor=view)
+            return len(ctx.outputs)
+
+        tickets.append(rq.submit(f"fleet{i}", one_run))
+    if not rq.drain(timeout=600):
+        raise RuntimeError("fleet failed to drain")
+    wall = time.perf_counter() - t0
+    rq.shutdown()
+    lost = [t.name for t in tickets
+            if t.status != "done" or t.result() != FAN_OUT]
+    if lost:
+        raise RuntimeError(f"fleet lost runs/stages: {lost}")
+    return {"wall_s": wall, "runs": FLEET_RUNS,
+            "runs_per_s": round(FLEET_RUNS / wall, 3),
+            "stages": FLEET_RUNS * FAN_OUT}
+
+
+def bench_fleet(iters: int) -> dict:
+    # tiny stages: this measures scheduling machinery, not compute
+    small = max(2_000, iters // 50)
+    with ThreadedExecutor(workers=4) as shared:
+        threaded = _drive_fleet(shared, small)
+    with WorkerQueueExecutor(workers=4, queue_size=32) as shared:
+        queued = _drive_fleet(shared, small)
+        queued["executor"] = shared.stats()
+    overhead = queued["wall_s"] / max(threaded["wall_s"], 1e-9)
+    return {"iters_per_stage": small, "threaded": threaded,
+            "worker_queue": queued,
+            "overhead_x": round(overhead, 3),
+            "overhead_ceil": QUEUE_OVERHEAD_CEIL}
+
+
+def main() -> None:
+    cpus = len(os.sched_getaffinity(0)) if hasattr(os, "sched_getaffinity") \
+        else (os.cpu_count() or 1)
+    iters = _calibrate_iters()
+    gil = bench_gil_escape(iters, cpus)
+    fleet = bench_fleet(iters)
+    doc = {"generated_at": time.time(), "cpus": cpus,
+           "gil_escape": gil, "fleet": fleet}
+    tmp = OUT_PATH + ".tmp"  # atomic: a killed run never truncates the baseline
+    with open(tmp, "w") as f:
+        json.dump(doc, f, indent=1)
+    os.replace(tmp, OUT_PATH)
+
+    print(f"executor/threaded_wall,{gil['threaded_s']*1e6:.0f},"
+          f"stages={gil['stages']};workers={gil['workers']}")
+    print(f"executor/process_wall,{gil['process_s']*1e6:.0f},"
+          f"speedup={gil['speedup']:.2f}x;floor={gil['floor']}x;"
+          f"enforced={gil['floor_enforced']};cpus={cpus}")
+    fq, ft = fleet["worker_queue"], fleet["threaded"]
+    print(f"executor/fleet_threaded,{ft['wall_s']*1e6:.0f},"
+          f"runs_per_s={ft['runs_per_s']}")
+    print(f"executor/fleet_worker_queue,{fq['wall_s']*1e6:.0f},"
+          f"runs_per_s={fq['runs_per_s']};"
+          f"overhead={fleet['overhead_x']:.2f}x")
+
+    if gil["floor_enforced"] and gil["speedup"] < SPEEDUP_FLOOR:
+        raise RuntimeError(
+            f"LocalPoolExecutor speedup {gil['speedup']:.2f}x fell below "
+            f"the {SPEEDUP_FLOOR}x floor over ThreadedExecutor on the "
+            f"CPU-bound fan-out ({cpus} cpus)")
+    if fleet["overhead_x"] > QUEUE_OVERHEAD_CEIL:
+        raise RuntimeError(
+            f"worker-queue fleet overhead {fleet['overhead_x']:.2f}x "
+            f"exceeded the {QUEUE_OVERHEAD_CEIL}x ceiling over the "
+            f"threaded fleet")
+
+
+if __name__ == "__main__":
+    main()

@@ -7,6 +7,9 @@ Prints ``name,us_per_call,derived`` CSV rows:
   * serve_bench     — serving decode tok/s legacy vs fused vs chunked,
                       admission latency, train donation step time
                       (writes BENCH_serve.json)
+  * executor_bench  — stage-executor GIL-escape speedup (processes vs
+                      threads) + RunQueue fleet throughput
+                      (writes BENCH_executor.json)
   * instance_sweep  — Fig. 4 analogue (time & $ across chip generations)
   * scaling         — Table 2 analogue (scale-up vs scale-out efficiency)
   * kernels_bench   — kernel micro latencies (oracle + interpret spot)
@@ -30,6 +33,7 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
 def main() -> None:
     from benchmarks import (
         catalog_stats,
+        executor_bench,
         instance_sweep,
         kernels_bench,
         planner_bench,
@@ -43,6 +47,7 @@ def main() -> None:
         ("catalog_stats", catalog_stats.main),
         ("planner_bench", planner_bench.main),
         ("serve_bench", serve_bench.main),
+        ("executor_bench", executor_bench.main),
         ("instance_sweep", instance_sweep.main),
         ("scaling", scaling.main),
         ("kernels_bench", kernels_bench.main),

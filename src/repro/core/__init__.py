@@ -26,6 +26,14 @@ from repro.core.costmodel import (
     retry_expected_cost,
 )
 from repro.core.envelope import ExecutionEnvelope
+from repro.core.executor import (
+    EXECUTOR_KINDS,
+    Executor,
+    LocalPoolExecutor,
+    ThreadedExecutor,
+    WorkerQueueExecutor,
+    make_executor,
+)
 from repro.core.explore import (
     CellSpec,
     ExploreResult,
@@ -82,6 +90,7 @@ from repro.core.spec import (
     unpack_package,
     validate_spec,
 )
+from repro.core.runqueue import RunQueue, RunQueueClosed, RunTicket
 from repro.core.stagecache import RunManifest, StageCache
 from repro.core.provenance import (
     ProvenanceStore,
@@ -112,7 +121,12 @@ from repro.core.workflow import (
     resolve_placements,
     run_workflow,
 )
-from repro.ft.failures import FailureSchedule, InjectedFailure, RestartPolicy
+from repro.ft.failures import (
+    FailureSchedule,
+    InjectedFailure,
+    RestartPolicy,
+    WorkerLost,
+)
 
 __all__ = [
     "BudgetExceeded", "BudgetLedger", "PermissionDenied", "Workspace",
@@ -127,7 +141,10 @@ __all__ = [
     "CycleError", "FnStage", "GraphError", "MissingInputError", "Placement",
     "Stage", "StageCache", "StageContext", "StageGraph", "StageResult",
     "RunManifest",
-    "FailureSchedule", "InjectedFailure", "RestartPolicy",
+    "EXECUTOR_KINDS", "Executor", "LocalPoolExecutor", "ThreadedExecutor",
+    "WorkerQueueExecutor", "make_executor",
+    "RunQueue", "RunQueueClosed", "RunTicket",
+    "FailureSchedule", "InjectedFailure", "RestartPolicy", "WorkerLost",
     "PlanChoice", "clear_planner_cache", "enumerate_plans", "intent_hash",
     "plan", "plan_stages", "prune_dominated", "rank", "to_runtime_plan",
     "ProvenanceStore", "RunRecord", "StageRecordView",

@@ -207,6 +207,18 @@ class Stage:
     outputs: Tuple[str, ...] = ()
     intent: Optional[ResourceIntent] = None
     checks: Tuple[str, ...] = ()
+    # -- executor dispatch ----------------------------------------------
+    # False pins the body to the coordinator thread regardless of the
+    # run's executor backend.  _SubworkflowStage opts out: its body *is*
+    # a nested scheduler, and queueing it behind the very workers it
+    # needs would deadlock the fleet.
+    dispatchable: bool = True
+    # True promises the body is a pure function of its picklable context
+    # inputs — safe to marshal into a process-pool child (repro.core
+    # .executor.LocalPoolExecutor).  Stages that touch live in-process
+    # state (ledgers, jax engines, the run record) must stay False; they
+    # run inline even under `--executor processes`.
+    process_safe: bool = False
     # -- fault tolerance ------------------------------------------------
     # per-stage restart policy; None inherits the graph-level policy
     # passed to StageGraph.execute(retry=...).  Only exceptions matching
@@ -549,6 +561,7 @@ class StageGraph:
     def execute(self, ctx: StageContext, *, max_workers: int = 4,
                 prefix: str = "",
                 retry: Optional[RestartPolicy] = None,
+                executor=None,
                 ) -> Dict[str, StageResult]:
         """Run every stage, respecting edges, independent stages in
         parallel.
@@ -560,8 +573,21 @@ class StageGraph:
         ``retry`` attribute overrides it.  Non-retryable stage exceptions
         propagate unchanged (after an ``ok=False`` stage_end event) so
         callers see e.g. BudgetExceeded exactly as the monolithic runner
-        raised it."""
+        raised it.
+
+        ``executor`` selects where stage *bodies* run (see
+        :mod:`repro.core.executor`): None keeps them inline on the
+        coordinator threads (historical behavior, identical to
+        ``ThreadedExecutor``); a backend instance receives every
+        ``dispatchable`` stage body via ``executor.submit(...)`` while
+        the scheduling, retry, cache and provenance state machine stays
+        on the coordinator.  The coordinator pool widens to the
+        executor's ``schedule_width`` so a wide backend is never starved
+        by a narrow coordinator."""
         self.validate()
+        width = max(1, max_workers)
+        if executor is not None:
+            width = max(width, int(getattr(executor, "schedule_width", 0) or 0))
         indeg = {n: sum(1 for d in self._deps[n]) for n in self._stages}
         succ = self._successors()
         ready = [n for n in self.topo_order() if indeg[n] == 0]
@@ -581,11 +607,11 @@ class StageGraph:
                 ctx.record.log_event("stage_start", {"stage": prefix + name})
             input_hash = self._input_hash(name, ctx, results)
             fut = pool.submit(self._run_stage, stage, ctx, prefix,
-                              input_hash, retry, placement)
+                              input_hash, retry, placement, executor)
             pending[fut] = name
 
         failure: Optional[BaseException] = None
-        with ThreadPoolExecutor(max_workers=max(1, max_workers)) as pool:
+        with ThreadPoolExecutor(max_workers=width) as pool:
             for n in ready:
                 _launch(pool, n)
             while pending:
@@ -672,17 +698,20 @@ class StageGraph:
                    input_hash: Optional[str] = None,
                    graph_retry: Optional[RestartPolicy] = None,
                    placement: Optional[Placement] = None,
+                   executor=None,
                    ) -> Tuple[StageResult, Optional[BaseException]]:
         t0 = time.perf_counter()
         started = time.time()
         full_name = prefix + stage.name
         place_str = placement.render() if placement is not None else None
-        # expose the binding and the full provenance prefix to the stage
-        # body thread-locally: unlike name-keyed lookups this stays
-        # correct when nested subgraphs reuse stage names, and lets a
-        # subworkflow stage extend the prefix at any nesting depth
+        # expose the binding, the full provenance prefix and the run's
+        # executor to the stage body thread-locally: unlike name-keyed
+        # lookups this stays correct when nested subgraphs reuse stage
+        # names, and lets a subworkflow stage extend the prefix (and
+        # reuse the executor) at any nesting depth
         ctx._tls.placement = placement
         ctx._tls.prefix = prefix
+        ctx._tls.executor = executor
 
         # 1) resume: this very run already completed the stage ----------
         if input_hash is not None and ctx.resume is not None \
@@ -751,7 +780,13 @@ class StageGraph:
             try:
                 if failures is not None:
                     failures.check_stage(full_name)
-                out = stage.run(ctx) or {}
+                if executor is not None and stage.dispatchable:
+                    out = executor.submit(
+                        stage, ctx, name=full_name,
+                        placement=placement, prefix=prefix).result()
+                    out = out or {}
+                else:
+                    out = stage.run(ctx) or {}
                 break
             except BaseException as e:  # noqa: BLE001 — re-raised below
                 dt_attempt = time.perf_counter() - t_attempt
@@ -835,6 +870,11 @@ class _SubworkflowStage(Stage):
     params); its stage events are prefixed ``<name>/``.
     """
 
+    # the body is a nested scheduler — it must stay on the coordinator
+    # thread (dispatching it into a bounded worker fleet could deadlock:
+    # the subworkflow would hold a worker while waiting for workers)
+    dispatchable = False
+
     def __init__(self, name: str, graph: StageGraph, max_workers: int = 4,
                  retry: Optional[RestartPolicy] = None):
         super().__init__(name)
@@ -859,5 +899,6 @@ class _SubworkflowStage(Stage):
         outer = getattr(ctx._tls, "prefix", "")
         self.graph.execute(ctx, max_workers=self.max_workers,
                            prefix=outer + self.name + "/",
-                           retry=self.inner_retry)
+                           retry=self.inner_retry,
+                           executor=getattr(ctx._tls, "executor", None))
         return {k: ctx.get(k) for k in self.outputs if k in ctx.outputs}

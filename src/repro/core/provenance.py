@@ -98,14 +98,19 @@ class RunRecord:
             return [json.loads(line) for line in f if line.strip()]
 
     def stage_events(self) -> List[Dict[str, Any]]:
-        """The per-stage provenance trail emitted by StageGraph.execute:
-        placement (resolved backend binding), stage_start, stage_cached
-        (cache or resume skip), stage_failed / stage_retry (fault
-        tolerance), and stage_end rows with timing and outputs hash."""
+        """The per-stage provenance trail emitted by StageGraph.execute
+        and the executor backends: placement (resolved backend binding),
+        stage_start, stage_cached (cache or resume skip), stage_failed /
+        stage_retry (fault tolerance), stage_lease / stage_worker /
+        worker_recruited / worker_lost (executor worker attribution —
+        see docs/executors.md), and stage_end rows with timing and
+        outputs hash."""
         return [e for e in self.events()
                 if e.get("kind") in ("placement", "stage_start",
                                      "stage_cached", "stage_failed",
-                                     "stage_retry", "stage_end")]
+                                     "stage_retry", "stage_end",
+                                     "stage_lease", "stage_worker",
+                                     "worker_recruited", "worker_lost")]
 
     def stage_view(self, stage: str) -> "StageRecordView":
         return StageRecordView(self, stage)

@@ -81,7 +81,47 @@ import threading
 import time
 from typing import Any, Dict, Optional
 
+try:  # POSIX advisory locks; Windows falls back to lock-free best effort
+    import fcntl
+except ImportError:  # pragma: no cover - non-POSIX
+    fcntl = None
+
 DEFAULT_CACHE_DIR = ".repro_cache/stages"
+
+
+class _FileLock:
+    """Cross-process advisory lock (flock) around a sentinel file.
+
+    Multi-process executors (`repro.core.executor.LocalPoolExecutor`) and
+    concurrent runs sharing one cache/run directory serialize their
+    read-modify-write sections through this; where ``fcntl`` is missing
+    it degrades to a no-op and the atomic-rename writes remain
+    last-writer-wins.
+    """
+
+    def __init__(self, path: str):
+        self.path = path
+        self._fh = None
+
+    def __enter__(self) -> "_FileLock":
+        if fcntl is not None:
+            try:
+                self._fh = open(self.path, "a+")
+                fcntl.flock(self._fh.fileno(), fcntl.LOCK_EX)
+            except OSError:
+                if self._fh is not None:
+                    self._fh.close()
+                self._fh = None
+        return self
+
+    def __exit__(self, *exc) -> None:
+        if self._fh is not None:
+            try:
+                fcntl.flock(self._fh.fileno(), fcntl.LOCK_UN)
+            except OSError:
+                pass
+            self._fh.close()
+            self._fh = None
 
 
 def _atomic_write(tmp_dir: str, final_path: str, payload: bytes) -> bool:
@@ -204,9 +244,16 @@ class StageCache:
     def _evict(self) -> None:
         """Drop least-recently-used payloads until the total fits
         ``max_bytes`` (mtime is the recency clock: refreshed on every
-        hit, so unread entries age out first)."""
+        hit, so unread entries age out first).  The scan-and-remove is
+        serialized across processes by an advisory lock so two
+        concurrent runs sharing a cache root don't both act on the same
+        stale byte count and over-evict each other's fresh entries."""
         if not self.max_bytes:
             return
+        with _FileLock(os.path.join(self.root, ".evict.lock")):
+            self._evict_locked()
+
+    def _evict_locked(self) -> None:
         entries = []
         total = 0
         for name in os.listdir(self.root):
@@ -306,15 +353,21 @@ class RunManifest:
     :meth:`lookup`/:meth:`load_outputs` before running one: a stage whose
     recomputed input hash matches its recorded entry is skipped and its
     outputs restored, so a crashed run re-executes only the incomplete
-    suffix of the graph.  Writes are atomic (temp file + rename) and
-    lock-guarded — independent stages complete concurrently on the
-    scheduler's thread pool.
+    suffix of the graph.  Writes are atomic (temp file + rename),
+    thread-lock-guarded — independent stages complete concurrently on
+    the scheduler's thread pool — and *cross-process* safe: each flush
+    takes an advisory file lock and merges the on-disk entries with this
+    writer's before rewriting, so two processes recording into one run
+    directory (multi-process executors, two resumed runs racing) lose no
+    completed stages.  A same-stage race is last-writer-wins, which is
+    benign: both writers recorded the same content-addressed hashes.
     """
 
     def __init__(self, run_dir: str):
         self.run_dir = run_dir
         self.stages_dir = os.path.join(run_dir, "stages")
         self.path = os.path.join(run_dir, "stage_manifest.json")
+        self.lock_path = os.path.join(run_dir, ".stage_manifest.lock")
         os.makedirs(self.stages_dir, exist_ok=True)
         self._lock = threading.Lock()
         self._entries: Dict[str, Dict[str, Any]] = {}
@@ -328,11 +381,26 @@ class RunManifest:
     def _payload_path(self, stage: str) -> str:
         return os.path.join(self.stages_dir, f"{_safe_filename(stage)}.pkl")
 
+    def _read_disk(self) -> Dict[str, Dict[str, Any]]:
+        try:
+            with open(self.path) as f:
+                disk = json.load(f)
+        except (OSError, json.JSONDecodeError):
+            return {}
+        return disk if isinstance(disk, dict) else {}
+
     def _flush_locked(self) -> None:
-        fd, tmp = tempfile.mkstemp(dir=self.run_dir, suffix=".tmp")
-        with os.fdopen(fd, "w") as f:
-            json.dump(self._entries, f, indent=1, sort_keys=True)
-        os.replace(tmp, self.path)
+        # merge-on-flush under a cross-process lock: adopt entries other
+        # processes recorded since our last read, let our own entries win
+        # for the stages *we* completed, and write the union atomically.
+        with _FileLock(self.lock_path):
+            merged = self._read_disk()
+            merged.update(self._entries)
+            self._entries = merged
+            fd, tmp = tempfile.mkstemp(dir=self.run_dir, suffix=".tmp")
+            with os.fdopen(fd, "w") as f:
+                json.dump(self._entries, f, indent=1, sort_keys=True)
+            os.replace(tmp, self.path)
 
     # ------------------------------------------------------------------
     def record(self, stage: str, input_hash: str, outputs_hash: str,

@@ -216,6 +216,9 @@ class DataStage(Stage):
     """
 
     outputs = ("full_cfg", "cfg", "shape", "stream")
+    # pure python (configs + a seeded stream object, no jax, no record
+    # writes) — safe to marshal into a process-pool child
+    process_safe = True
     cacheable = True
     cache_params = ("smoke_batch", "smoke_seq")
     cache_template_fields = ("arch", "shape", "scale", "data")
@@ -548,6 +551,11 @@ class EvalStage(Stage):
     """Held-out loss of a trained state on freshly-seeded batches."""
 
     inputs = ("cfg", "shape")
+    # a pure function of (cfg, shape, state): eligible for process
+    # dispatch so a CPU-bound eval fan-out escapes the GIL.  The body
+    # does small jax compute — see docs/executors.md for the fork
+    # caveat; unpicklable state falls back inline automatically.
+    process_safe = True
 
     def __init__(self, name: str = "eval", state_key: str = "final_state",
                  num_batches: int = 2, seed_offset: int = 10_000,

@@ -51,9 +51,10 @@ from __future__ import annotations
 
 import dataclasses
 import shutil
-from typing import Any, Dict, List, Optional, Sequence, Tuple
+from typing import Any, Dict, List, Optional, Sequence, Tuple, Union
 
 from repro.core.budget import BudgetExceeded, BudgetLedger, PermissionDenied
+from repro.core.executor import Executor, make_executor
 from repro.core.graph import Placement, StageContext, StageGraph, StageResult
 from repro.core.intent import ResourceIntent
 from repro.core.planner import PlanChoice
@@ -336,6 +337,8 @@ def run_workflow(
     resume_store: bool = True,
     graph: Optional[StageGraph] = None,
     check: bool = False,
+    executor: Union[None, str, "Executor"] = None,
+    workers: Optional[int] = None,
 ) -> WorkflowResult:
     """Execute a workflow end-to-end on the local backend.
 
@@ -385,6 +388,15 @@ def run_workflow(
     raising :class:`repro.core.check.CheckError` on any error-severity
     diagnostic before a run record is created or budget authorized
     (the CLI's ``run --check``).
+
+    ``executor`` selects the execution substrate for stage bodies (see
+    :mod:`repro.core.executor` and docs/executors.md): a kind string
+    (``"threads"`` / ``"processes"`` / ``"workers"``, the CLI's
+    ``--executor``) builds a backend owned — and shut down — by this
+    call, sized by ``workers``; an :class:`Executor` *instance* is
+    shared (a :class:`~repro.core.runqueue.RunQueue` fleet passes one
+    executor to many runs) and the caller keeps ownership.  None keeps
+    the historical inline-threaded behavior.
     """
     t = template
     graph = graph if graph is not None else compile_template(
@@ -436,9 +448,14 @@ def run_workflow(
             "donate": donate,
         },
     )
+    owned_executor: Optional[Executor] = None
+    if isinstance(executor, str):
+        executor = owned_executor = make_executor(executor, workers=workers)
+    elif executor is None and workers:
+        executor = owned_executor = make_executor("threads", workers=workers)
     try:
         stage_results = graph.execute(ctx, max_workers=max_workers,
-                                      retry=stage_retry)
+                                      retry=stage_retry, executor=executor)
     except (BudgetExceeded, PermissionDenied):
         # the monolith authorized before creating the run record; keep
         # denied attempts from leaving phantom runs in the store (but
@@ -446,6 +463,9 @@ def run_workflow(
         if resume is None:
             shutil.rmtree(record.dir, ignore_errors=True)
         raise
+    finally:
+        if owned_executor is not None:
+            owned_executor.shutdown()
 
     checks = ctx.get("checks", {})
     ok = all(v[0] for v in checks.values())

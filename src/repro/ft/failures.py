@@ -31,6 +31,18 @@ class InjectedFailure(RuntimeError):
     """A simulated node/step/stage failure."""
 
 
+class WorkerLost(RuntimeError):
+    """An executor worker died (or went silent past its lease) while
+    running a stage body.
+
+    Raised by :mod:`repro.core.executor` backends — a broken
+    process-pool child, or a worker-queue lease revoked more than
+    ``max_requeues`` times.  It is a *resource* failure, not a bug in
+    the stage, so it is retryable under the default
+    :class:`RestartPolicy` exactly like :class:`InjectedFailure`.
+    """
+
+
 @dataclasses.dataclass
 class FailureSchedule:
     """Deterministic failure injection for tests/drills.
@@ -85,8 +97,9 @@ class RestartPolicy:
     ``retry_on`` names the exception classes worth retrying — resource
     failures, not bugs: an assertion error or a shape mismatch will fail
     identically on every attempt, so only transient classes (default:
-    :class:`InjectedFailure`, standing in for preemption/node loss)
-    trigger a restart.
+    :class:`InjectedFailure`, standing in for preemption/node loss, and
+    :class:`WorkerLost`, an executor worker dying mid-stage) trigger a
+    restart.
     """
 
     max_restarts: int = 5
@@ -94,7 +107,7 @@ class RestartPolicy:
     max_backoff_s: float = 60.0
     jitter: float = 0.1
     seed: Optional[int] = None
-    retry_on: Tuple[type, ...] = (InjectedFailure,)
+    retry_on: Tuple[type, ...] = (InjectedFailure, WorkerLost)
 
     def retryable(self, exc: BaseException) -> bool:
         return isinstance(exc, tuple(self.retry_on))

@@ -224,7 +224,9 @@ def cmd_run(args) -> None:
                            resume=args.resume,
                            resume_store=not args.no_run_manifest,
                            graph=graph,
-                           check=args.check)
+                           check=args.check,
+                           executor=args.executor,
+                           workers=args.workers)
     except CheckError as e:
         print(e.report.render())
         print("pre-flight check failed; nothing was provisioned or run")
@@ -543,6 +545,18 @@ def build_parser() -> argparse.ArgumentParser:
                    help="skip writing the per-run stage manifest (the "
                         "run cannot be resumed, but saves per-stage "
                         "output pickling)")
+    p.add_argument("--executor", default=None,
+                   choices=["threads", "processes", "workers"],
+                   help="execution substrate for stage bodies (see "
+                        "docs/executors.md): threads = inline on the "
+                        "scheduler pool (default), processes = "
+                        "process-pool children for process-safe stages "
+                        "(escapes the GIL), workers = local worker-queue "
+                        "fleet with leases + heartbeat reaping")
+    p.add_argument("--workers", type=int, default=None,
+                   help="executor worker count (pool children / queue "
+                        "workers / thread width); default is "
+                        "backend-specific")
     p.set_defaults(fn=cmd_run)
 
     p = sub.add_parser("graph", help="render a template's stage DAG")

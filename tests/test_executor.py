@@ -1,0 +1,951 @@
+"""Elastic stage executor: backend parity, chaos drills, fleet scheduling.
+
+The archetype suite for `repro.core.executor` / `repro.core.runqueue`:
+
+* **parity** — ThreadedExecutor, LocalPoolExecutor and WorkerQueueExecutor
+  produce identical stage outputs, topo-respecting event orders and
+  RunManifest hashes on random DAGs (hypothesis, importorskip-guarded,
+  mirroring test_spec.py's row-encoded random-DAG generator);
+* **chaos** — SIGKILLed pool children and reaped worker leases surface as
+  retryable `WorkerLost` with `worker_lost` / `stage_retry` provenance;
+  a crashed fleet resumes re-executing only the incomplete suffix under
+  every backend.  Failure timing is deterministic: stages kill
+  *themselves* (or block on test-owned gates) — no wall-clock sleeps in
+  assertions, only bounded waits on futures/events;
+* **backpressure + fairness** — the bounded worker queue blocks
+  saturating coordinators; a RunQueue's per-run fair share caps each
+  run's in-flight stage bodies;
+* **concurrent cache stress** — StageCache/RunManifest survive
+  multi-thread and multi-process writers sharing one directory (the
+  merge-on-flush + file-lock fix).
+"""
+import os
+import pickle
+import signal
+import threading
+import time
+
+import pytest
+
+from repro.core import (
+    EXECUTOR_KINDS,
+    Executor,
+    FailureSchedule,
+    LocalPoolExecutor,
+    ResourceIntent,
+    RestartPolicy,
+    RunManifest,
+    RunQueue,
+    RunQueueClosed,
+    StageCache,
+    StageContext,
+    StageGraph,
+    ThreadedExecutor,
+    WorkerLost,
+    WorkerQueueExecutor,
+    make_executor,
+    stable_hash,
+)
+from repro.core.graph import Stage
+from repro.ft.failures import InjectedFailure
+
+try:
+    from hypothesis import given, settings, strategies as st
+    _HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - exercised where hypothesis is absent
+    _HAVE_HYPOTHESIS = False
+
+WAIT_S = 30  # bound on every blocking wait: generous, never asserted on
+
+
+class FakeRecord:
+    """The only provenance surface the scheduler needs: log_event."""
+
+    def __init__(self):
+        self.events = []
+        self._lock = threading.Lock()
+
+    def log_event(self, kind, payload):
+        with self._lock:
+            self.events.append({"kind": kind, **payload})
+
+    def of_kind(self, kind):
+        with self._lock:
+            return [e for e in self.events if e["kind"] == kind]
+
+
+# -- module-level stages: picklable, deterministic ------------------------
+class ArithStage(Stage):
+    """Pure function of its inputs — the parity workhorse."""
+
+    process_safe = True
+
+    def __init__(self, name, inputs=(), outputs=(), salt=0):
+        super().__init__(name)
+        self.inputs = tuple(inputs)
+        self.outputs = tuple(outputs)
+        self.salt = salt
+
+    def run(self, ctx):
+        vals = {k: ctx.get(k) for k in self.inputs}
+        base = stable_hash({"name": self.name, "salt": self.salt,
+                            "vals": vals})
+        return {k: f"{k}={base[:12]}" for k in self.outputs}
+
+
+class PidStage(Stage):
+    """Reports the pid its body ran in."""
+
+    process_safe = True
+
+    def __init__(self, name, outputs=("pid",)):
+        super().__init__(name)
+        self.outputs = tuple(outputs)
+
+    def run(self, ctx):
+        return {k: os.getpid() for k in self.outputs}
+
+
+class CountingStage(Stage):
+    """Counts its executions via marker files — visible across processes."""
+
+    process_safe = True
+
+    def __init__(self, name, count_dir, inputs=(), outputs=()):
+        super().__init__(name)
+        self.count_dir = count_dir
+        self.inputs = tuple(inputs)
+        self.outputs = tuple(outputs)
+
+    def executions(self):
+        try:
+            return len([f for f in os.listdir(self.count_dir)
+                        if f.startswith(self.name + "-")])
+        except FileNotFoundError:
+            return 0
+
+    def run(self, ctx):
+        os.makedirs(self.count_dir, exist_ok=True)
+        n = self.executions() + 1
+        open(os.path.join(self.count_dir,
+                          f"{self.name}-{n}-{os.getpid()}"), "w").close()
+        for k in self.inputs:
+            ctx.get(k)
+        return {k: f"{k}.v" for k in self.outputs}
+
+
+class SuicideStage(Stage):
+    """SIGKILLs its own process for the first ``deadly_attempts`` runs —
+    the deterministic stand-in for an OOM-killed pool child.  Refuses to
+    fire in the parent process (a fallback-to-inline bug would otherwise
+    take the test runner down with it)."""
+
+    process_safe = True
+
+    def __init__(self, name, count_dir, deadly_attempts=1, parent_pid=None):
+        super().__init__(name)
+        self.count_dir = count_dir
+        self.deadly_attempts = deadly_attempts
+        self.parent_pid = parent_pid if parent_pid is not None else os.getpid()
+        self.outputs = ("v",)
+
+    def run(self, ctx):
+        os.makedirs(self.count_dir, exist_ok=True)
+        n = len(os.listdir(self.count_dir)) + 1
+        open(os.path.join(self.count_dir, f"a-{n}-{os.getpid()}"), "w").close()
+        if n <= self.deadly_attempts:
+            assert os.getpid() != self.parent_pid, \
+                "SuicideStage must run in a pool child, not the test process"
+            os.kill(os.getpid(), signal.SIGKILL)
+        return {"v": "survived"}
+
+
+class LambdaHolderStage(Stage):
+    """process_safe but unpicklable (holds a lambda) — must fall back."""
+
+    process_safe = True
+
+    def __init__(self, name="lam"):
+        super().__init__(name)
+        self.fn = lambda: "inline"
+        self.outputs = ("lam_out",)
+
+    def run(self, ctx):
+        return {"lam_out": (self.fn(), os.getpid())}
+
+
+class LockOutputStage(Stage):
+    """Pickles fine going in, but its *outputs* don't — child raises
+    UnpicklableOutputs, parent re-runs inline."""
+
+    process_safe = True
+
+    def __init__(self, name="locky"):
+        super().__init__(name)
+        self.outputs = ("lock", "lock_pid")
+
+    def run(self, ctx):
+        return {"lock": threading.Lock(), "lock_pid": os.getpid()}
+
+
+class BoomStage(Stage):
+    process_safe = True
+
+    def __init__(self, name="boom"):
+        super().__init__(name)
+
+    def run(self, ctx):
+        raise ValueError("boom from the body")
+
+
+def _diamond(stage_cls=ArithStage, **kw):
+    g = StageGraph()
+    g.add(stage_cls("a", outputs=("x",), **kw))
+    g.add(stage_cls("b", inputs=("x",), outputs=("y",), **kw),
+          depends_on=("a",))
+    g.add(stage_cls("c", inputs=("x",), outputs=("z",), **kw),
+          depends_on=("a",))
+    g.add(stage_cls("d", inputs=("y", "z"), outputs=("w",), **kw),
+          depends_on=("b", "c"))
+    return g
+
+
+def _ctx(record=None, **kw):
+    return StageContext(template=None, record=record, **kw)
+
+
+# ===========================================================================
+# Factory + threaded backend
+# ===========================================================================
+def test_make_executor_kinds():
+    for kind, cls in (("threads", ThreadedExecutor),
+                      ("processes", LocalPoolExecutor),
+                      ("workers", WorkerQueueExecutor)):
+        assert kind in EXECUTOR_KINDS
+        ex = make_executor(kind, workers=2)
+        try:
+            assert isinstance(ex, cls)
+            assert isinstance(ex, Executor)
+            assert ex.kind == kind
+            assert ex.capacity() >= 1
+        finally:
+            ex.shutdown()
+    with pytest.raises(ValueError, match="unknown executor"):
+        make_executor("mainframe")
+
+
+def test_threaded_matches_inline():
+    ctx_inline = _ctx()
+    _diamond().execute(ctx_inline)
+    with ThreadedExecutor(workers=3) as ex:
+        ctx_ex = _ctx()
+        _diamond().execute(ctx_ex, executor=ex)
+    assert ctx_ex.outputs == ctx_inline.outputs
+    assert ex.stats()["submitted"] == 4
+
+
+def test_threaded_body_exception_propagates():
+    g = StageGraph()
+    g.add(BoomStage())
+    with ThreadedExecutor() as ex:
+        with pytest.raises(ValueError, match="boom"):
+            g.execute(_ctx(), executor=ex)
+
+
+def test_subworkflow_not_dispatched_but_inner_stages_are():
+    inner = StageGraph()
+    inner.add(PidStage("inner_pid", outputs=("inner_pid",)))
+    outer = StageGraph()
+    outer.add(inner.as_stage("sub"))
+    with LocalPoolExecutor(workers=1) as ex:
+        ctx = _ctx()
+        outer.execute(ctx, executor=ex)
+    # the subworkflow body stayed on the coordinator; the *inner* stage
+    # still reached the shared process pool through ctx._tls.executor
+    assert ctx.outputs["inner_pid"] != os.getpid()
+
+
+# ===========================================================================
+# LocalPoolExecutor (processes)
+# ===========================================================================
+def test_process_pool_runs_in_children():
+    with LocalPoolExecutor(workers=2) as ex:
+        ctx = _ctx()
+        g = StageGraph()
+        g.add(PidStage("p1", outputs=("pid1",)))
+        g.add(PidStage("p2", outputs=("pid2",)))
+        g.execute(ctx, executor=ex)
+        assert ex.worker_pids()
+    assert ctx.outputs["pid1"] != os.getpid()
+    assert ctx.outputs["pid2"] != os.getpid()
+    assert ex.stats()["dispatched"] == 2
+
+
+def test_process_pool_not_process_safe_runs_inline():
+    class PlainPid(PidStage):
+        process_safe = False
+
+    with LocalPoolExecutor(workers=1) as ex:
+        ctx = _ctx()
+        g = StageGraph()
+        g.add(PlainPid("p", outputs=("pid",)))
+        g.execute(ctx, executor=ex)
+    assert ctx.outputs["pid"] == os.getpid()
+    assert ex.stats()["inline_fallbacks"] == 1
+
+
+def test_process_pool_unpicklable_stage_falls_back_inline():
+    with LocalPoolExecutor(workers=1) as ex:
+        ctx = _ctx(record=(rec := FakeRecord()))
+        g = StageGraph()
+        g.add(LambdaHolderStage())
+        g.execute(ctx, executor=ex)
+    val, pid = ctx.outputs["lam_out"]
+    assert (val, pid) == ("inline", os.getpid())
+    falls = [e for e in rec.of_kind("stage_worker") if e.get("fallback")]
+    assert falls and falls[0]["worker"] == "inline"
+
+
+def test_process_pool_unpicklable_outputs_fall_back_inline():
+    with LocalPoolExecutor(workers=1) as ex:
+        ctx = _ctx()
+        g = StageGraph()
+        g.add(LockOutputStage())
+        g.execute(ctx, executor=ex)
+        assert ex.stats()["inline_fallbacks"] == 1
+    # the retried inline body ran in the parent and its lock is live
+    assert ctx.outputs["lock_pid"] == os.getpid()
+    assert ctx.outputs["lock"].acquire(blocking=False)
+
+
+def test_process_pool_unpicklable_context_entries_dropped_not_fatal():
+    # a poisoned blackboard (locks from an upstream inline stage) must
+    # not stop a downstream pure stage from dispatching
+    with LocalPoolExecutor(workers=1) as ex:
+        ctx = _ctx()
+        ctx.put(poison=threading.Lock(), x="seed")
+        g = StageGraph()
+        g.add(ArithStage("pure", inputs=("x",), outputs=("y",)))
+        g.execute(ctx, executor=ex)
+        assert ex.stats()["dispatched"] == 1
+    assert ctx.outputs["y"].startswith("y=")
+
+
+def test_process_pool_child_exception_propagates():
+    with LocalPoolExecutor(workers=1) as ex:
+        g = StageGraph()
+        g.add(BoomStage())
+        with pytest.raises(ValueError, match="boom"):
+            g.execute(_ctx(), executor=ex)
+
+
+@pytest.mark.slow
+def test_process_pool_sigkill_child_retries_with_worker_lost(tmp_path):
+    rec = FakeRecord()
+    stage = SuicideStage("victim", str(tmp_path / "counts"),
+                         deadly_attempts=1)
+    g = StageGraph()
+    g.add(stage)
+    with LocalPoolExecutor(workers=1) as ex:
+        ctx = _ctx(record=rec)
+        g.execute(ctx, executor=ex,
+                  retry=RestartPolicy(max_restarts=2, backoff_s=0))
+        assert ex.stats()["pool_rebuilds"] >= 1
+    assert ctx.outputs["v"] == "survived"
+    failed = rec.of_kind("stage_failed")
+    assert failed and "WorkerLost" in failed[0]["error"]
+    assert failed[0]["retryable"] is True
+    assert rec.of_kind("stage_retry")
+    ends = rec.of_kind("stage_end")
+    assert ends[-1]["ok"] is True and ends[-1]["attempts"] == 2
+
+
+@pytest.mark.slow
+def test_process_pool_worker_lost_fails_without_retry_policy(tmp_path):
+    stage = SuicideStage("victim", str(tmp_path / "counts"),
+                         deadly_attempts=99)
+    g = StageGraph()
+    g.add(stage)
+    with LocalPoolExecutor(workers=1) as ex:
+        with pytest.raises(WorkerLost):
+            g.execute(_ctx(), executor=ex)
+
+
+def test_worker_lost_retryable_under_default_policy():
+    policy = RestartPolicy()
+    assert policy.retryable(WorkerLost("pool child died"))
+    assert policy.retryable(InjectedFailure("drill"))
+    assert not policy.retryable(ValueError("a bug"))
+
+
+# ===========================================================================
+# WorkerQueueExecutor (workers)
+# ===========================================================================
+class GateStage(Stage):
+    """Blocks on a test-owned gate the first ``gated_attempts`` runs;
+    later attempts return immediately.  All timing is event-driven."""
+
+    def __init__(self, name, gate, started, gated_attempts=1):
+        super().__init__(name)
+        self.gate = gate
+        self.started = started
+        self.gated_attempts = gated_attempts
+        self.attempts = 0
+        self._alock = threading.Lock()
+        self.outputs = ("v",)
+
+    def run(self, ctx):
+        with self._alock:
+            self.attempts += 1
+            n = self.attempts
+        if n <= self.gated_attempts:
+            self.started.set()
+            self.gate.wait(WAIT_S)
+        return {"v": f"attempt-{n}"}
+
+
+def test_worker_queue_basic_with_lease_events():
+    rec = FakeRecord()
+    with WorkerQueueExecutor(workers=2) as ex:
+        ctx = _ctx(record=rec)
+        _diamond().execute(ctx, executor=ex)
+    assert set(ctx.outputs) == {"x", "y", "z", "w"}
+    leases = rec.of_kind("stage_lease")
+    assert {e["stage"] for e in leases} == {"a", "b", "c", "d"}
+    assert all(e["worker"].startswith("w") for e in leases)
+    workers = rec.of_kind("stage_worker")
+    assert {e["stage"] for e in workers} == {"a", "b", "c", "d"}
+
+
+def test_worker_queue_matches_inline_outputs():
+    ctx_inline = _ctx()
+    _diamond().execute(ctx_inline)
+    with WorkerQueueExecutor(workers=3) as ex:
+        ctx_q = _ctx()
+        _diamond().execute(ctx_q, executor=ex)
+    assert ctx_q.outputs == ctx_inline.outputs
+
+
+def test_worker_queue_elastic_recruitment_from_intent():
+    rec = FakeRecord()
+    big = ArithStage("big", outputs=("x",))
+    big.intent = ResourceIntent(arch="qwen2-1.5b", shape="chat-serving",
+                                min_chips=3)
+    g = StageGraph()
+    g.add(big)
+    ex = WorkerQueueExecutor(workers=1, max_workers=4)
+    try:
+        assert ex.capacity() == 1
+        g.execute(_ctx(record=rec), executor=ex)
+        recruited = rec.of_kind("worker_recruited")
+        assert recruited and recruited[0]["stage"] == "big"
+        assert ex.stats()["recruited_total"] >= 3
+    finally:
+        ex.shutdown()
+
+
+def test_worker_queue_surplus_workers_retire_to_floor():
+    big = ArithStage("big", outputs=("x",))
+    big.intent = ResourceIntent(arch="qwen2-1.5b", shape="chat-serving",
+                                min_chips=4)
+    g = StageGraph()
+    g.add(big)
+    ex = WorkerQueueExecutor(workers=1, max_workers=4, poll_s=0.01)
+    try:
+        g.execute(_ctx(), executor=ex)
+        deadline = time.monotonic() + WAIT_S
+        while ex.capacity() > 1 and time.monotonic() < deadline:
+            time.sleep(0.01)  # waiting on fleet state, not asserting mid-poll
+        assert ex.capacity() == 1
+    finally:
+        ex.shutdown()
+
+
+def test_worker_queue_kill_worker_requeues_and_completes():
+    rec = FakeRecord()
+    gate, started = threading.Event(), threading.Event()
+    stage = GateStage("victim", gate, started)
+    g = StageGraph()
+    g.add(stage)
+    ex = WorkerQueueExecutor(workers=2, lease_s=0.15, poll_s=0.02)
+    try:
+        done = {}
+        th = threading.Thread(
+            target=lambda: done.update(res=g.execute(_ctx(record=rec),
+                                                     executor=ex)))
+        th.start()
+        assert started.wait(WAIT_S)
+        assert ex.kill_worker() is not None
+        th.join(WAIT_S)
+        assert not th.is_alive()
+        assert done["res"]["victim"].ok
+        assert stage.attempts == 2
+        lost = rec.of_kind("worker_lost")
+        assert lost and lost[0]["stage"] == "victim" and lost[0]["requeued"]
+        assert len(rec.of_kind("stage_lease")) == 2  # original + requeue
+    finally:
+        gate.set()
+        ex.shutdown()
+
+
+def test_worker_queue_dropped_heartbeats_reaped_and_zombie_discarded():
+    rec = FakeRecord()
+    gate, started = threading.Event(), threading.Event()
+    stage = GateStage("silent", gate, started)
+    g = StageGraph()
+    g.add(stage)
+    ex = WorkerQueueExecutor(workers=2, lease_s=0.15, poll_s=0.02)
+    try:
+        done = {}
+        th = threading.Thread(
+            target=lambda: done.update(res=g.execute(_ctx(record=rec),
+                                                     executor=ex)))
+        th.start()
+        assert started.wait(WAIT_S)
+        assert ex.drop_heartbeats() is not None
+        th.join(WAIT_S)
+        assert not th.is_alive()
+        assert done["res"]["silent"].ok
+        assert rec.of_kind("worker_lost")
+        # release the zombie; its late result must be discarded, not
+        # double-resolved into the settled future
+        gate.set()
+        ex.shutdown()
+        assert ex.stats()["discarded_zombies"] == 1
+    finally:
+        gate.set()
+        ex.shutdown()
+
+
+def test_worker_queue_requeue_budget_exhausted_raises_worker_lost():
+    gate, started = threading.Event(), threading.Event()
+    # gated on *every* attempt: each recruited worker we kill leaves the
+    # stage incomplete until the requeue budget (0) is exhausted
+    stage = GateStage("doomed", gate, started, gated_attempts=99)
+    g = StageGraph()
+    g.add(stage)
+    ex = WorkerQueueExecutor(workers=1, max_workers=2, lease_s=0.15,
+                             poll_s=0.02, max_requeues=0)
+    try:
+        err = {}
+
+        def drive():
+            try:
+                g.execute(_ctx(), executor=ex)
+            except BaseException as e:  # noqa: BLE001
+                err["e"] = e
+
+        th = threading.Thread(target=drive)
+        th.start()
+        assert started.wait(WAIT_S)
+        assert ex.kill_worker() is not None
+        th.join(WAIT_S)
+        assert not th.is_alive()
+        assert isinstance(err.get("e"), WorkerLost)
+        assert "budget" in str(err["e"])
+    finally:
+        gate.set()
+        ex.shutdown()
+
+
+def test_worker_queue_backpressure_blocks_saturating_submitter():
+    gate, started = threading.Event(), threading.Event()
+    blocker = GateStage("blocker", gate, started)
+    quick = ArithStage("quick", outputs=("q",))
+    ex = WorkerQueueExecutor(workers=1, queue_size=1)
+    try:
+        ctx = _ctx()
+        f1 = ex.submit(blocker, ctx)          # claimed by the one worker
+        assert started.wait(WAIT_S)
+        f2 = ex.submit(quick, ctx)            # fills the bounded queue
+        third_admitted = threading.Event()
+
+        def submit_third():
+            ex.submit(ArithStage("third", outputs=("t",)), ctx)
+            third_admitted.set()
+
+        th = threading.Thread(target=submit_third, daemon=True)
+        th.start()
+        # the saturated queue must hold the third submit back...
+        assert not third_admitted.wait(0.3)
+        # ...until capacity frees
+        gate.set()
+        assert third_admitted.wait(WAIT_S)
+        assert f1.result(WAIT_S)["v"] == "attempt-1"
+        assert f2.result(WAIT_S)["q"].startswith("q=")
+        assert ex.drain(WAIT_S)
+    finally:
+        gate.set()
+        ex.shutdown()
+
+
+def test_worker_queue_submit_after_shutdown_rejected():
+    ex = WorkerQueueExecutor(workers=1)
+    ex.shutdown()
+    with pytest.raises(RuntimeError, match="shut down"):
+        ex.submit(ArithStage("late", outputs=("x",)), _ctx())
+
+
+# ===========================================================================
+# Parity: identical outputs / event order / manifest hashes per backend
+# ===========================================================================
+def _executable_random_graph(rows):
+    """test_spec.py's row-encoded random-DAG generator, rebuilt with
+    *executable* (and picklable) stages: deps only point at earlier
+    stages (acyclic by construction) and inputs are wired to upstream
+    outputs so every stage's content-addressed input hash resolves."""
+    g = StageGraph("prop")
+    names, produced = [], []
+    for i, (dep_mask, n_in, n_out) in enumerate(rows):
+        deps = tuple(names[j] for j in range(len(names))
+                     if dep_mask & (1 << j))
+        avail = [k for j in range(len(names)) if names[j] in deps
+                 for k in g.stages[names[j]].outputs]
+        stage = ArithStage(
+            f"s{i}",
+            inputs=tuple(avail[:n_in]),
+            outputs=tuple(f"k{i}.{j}" for j in range(max(1, n_out))),
+            salt=i,
+        )
+        g.add(stage, depends_on=deps)
+        names.append(stage.name)
+        produced.extend(stage.outputs)
+    return g
+
+
+def _run_under(kind, graph, run_dir):
+    rec = FakeRecord()
+    manifest = RunManifest(str(run_dir))
+    ctx = _ctx(record=rec, resume=manifest)
+    with make_executor(kind, workers=2) as ex:
+        graph.execute(ctx, executor=ex)
+    manifest_hashes = {s: (e["input_hash"], e["outputs_hash"])
+                       for s, e in manifest.completed().items()}
+    core = [(e["kind"], e["stage"]) for e in rec.events
+            if e["kind"] in ("stage_start", "stage_end")]
+    return dict(ctx.outputs), core, manifest_hashes, rec
+
+
+def _assert_backend_parity(rows, tmp_path, tag=""):
+    graph = _executable_random_graph(rows)
+    ref = None
+    for kind in EXECUTOR_KINDS:
+        outputs, core, hashes, rec = _run_under(
+            kind, graph, tmp_path / f"{tag}{kind}")
+        # every dependency edge is respected in the event stream
+        idx_end = {}
+        idx_start = {}
+        for i, (k, s) in enumerate(core):
+            if k == "stage_end":
+                idx_end[s] = i
+            elif s not in idx_start:
+                idx_start[s] = i
+        for name, deps in ((n, graph.deps(n))
+                           for n in graph.topo_order()):
+            for d in deps:
+                assert idx_end[d] < idx_start[name], \
+                    f"[{kind}] {d} must settle before {name} starts"
+        if ref is None:
+            ref = (outputs, hashes, sorted(core))
+        else:
+            assert outputs == ref[0], f"[{kind}] outputs diverged"
+            assert hashes == ref[1], f"[{kind}] manifest hashes diverged"
+            assert sorted(core) == ref[2], f"[{kind}] event multiset diverged"
+
+
+def test_parity_fixed_dags_across_backends(tmp_path):
+    fixed = [
+        [(0, 0, 1)],
+        [(0, 0, 2), (1, 1, 1), (1, 2, 1), (6, 2, 2)],
+        [(0, 0, 1), (0, 0, 1), (3, 2, 1), (4, 1, 2), (12, 3, 1)],
+    ]
+    for i, rows in enumerate(fixed):
+        _assert_backend_parity(rows, tmp_path, tag=f"fixed{i}-")
+
+
+if _HAVE_HYPOTHESIS:
+    @given(rows=st.lists(
+        st.tuples(st.integers(0, 255), st.integers(0, 3), st.integers(0, 3)),
+        min_size=1, max_size=6))
+    @settings(max_examples=15, deadline=None)
+    def test_parity_property_random_dags(rows):
+        import pathlib
+        import shutil
+        import tempfile
+
+        scratch = pathlib.Path(tempfile.mkdtemp(prefix="exec-parity-"))
+        try:
+            _assert_backend_parity(rows, scratch)
+        finally:
+            shutil.rmtree(scratch, ignore_errors=True)
+else:  # pragma: no cover
+    def test_parity_property_random_dags():
+        pytest.importorskip("hypothesis",
+                            reason="property tests need hypothesis")
+
+
+# ===========================================================================
+# Fleet crash + resume: only the incomplete suffix re-executes
+# ===========================================================================
+@pytest.mark.parametrize("kind", EXECUTOR_KINDS)
+def test_fleet_crash_resume_reexecutes_only_suffix(kind, tmp_path):
+    counts = str(tmp_path / "counts")
+
+    def chain():
+        g = StageGraph()
+        g.add(CountingStage("a", counts, outputs=("x",)))
+        g.add(CountingStage("b", counts, inputs=("x",), outputs=("y",)),
+              depends_on=("a",))
+        g.add(CountingStage("c", counts, inputs=("y",), outputs=("z",)),
+              depends_on=("b",))
+        return g
+
+    run_dir = str(tmp_path / "run")
+    sched = FailureSchedule(fail_stages={"b": 1})
+    with make_executor(kind, workers=2) as ex:
+        with pytest.raises(InjectedFailure):
+            chain().execute(_ctx(resume=RunManifest(run_dir),
+                                 params={"failures": sched}),
+                            executor=ex)
+    g = chain()
+    a, b, c = (g.stages[n] for n in ("a", "b", "c"))
+    assert (a.executions(), b.executions(), c.executions()) == (1, 0, 0)
+
+    rec = FakeRecord()
+    with make_executor(kind, workers=2) as ex:
+        ctx = _ctx(record=rec, resume=RunManifest(run_dir))
+        g.execute(ctx, executor=ex)
+    # the crashed run's completed prefix resumed; only b, c executed
+    assert (a.executions(), b.executions(), c.executions()) == (1, 1, 1)
+    cached = rec.of_kind("stage_cached")
+    assert [e["stage"] for e in cached] == ["a"]
+    assert cached[0]["resume"] is True
+    assert set(ctx.outputs) == {"x", "y", "z"}
+
+
+# ===========================================================================
+# RunQueue: fleets with fairness and graceful drain
+# ===========================================================================
+def _graph_run(view, graph, record=None):
+    ctx = _ctx(record=record)
+    graph.execute(ctx, executor=view)
+    return dict(ctx.outputs)
+
+
+def test_runqueue_runs_fleet_to_completion():
+    with WorkerQueueExecutor(workers=3) as shared:
+        rq = RunQueue(shared, max_active=4)
+        tickets = [rq.submit(f"run{i}", lambda v: _graph_run(v, _diamond()))
+                   for i in range(4)]
+        assert rq.drain(timeout=WAIT_S)
+        for t in tickets:
+            assert t.status == "done"
+            assert set(t.result(WAIT_S)) == {"x", "y", "z", "w"}
+        stats = rq.stats()
+        assert stats["runs"] == 4 and stats["by_status"] == {"done": 4}
+        rq.shutdown()
+
+
+def test_runqueue_rejects_after_drain():
+    with ThreadedExecutor(workers=2) as shared:
+        rq = RunQueue(shared)
+        t = rq.submit("only", lambda v: _graph_run(v, _diamond()))
+        assert rq.drain(timeout=WAIT_S)
+        assert t.done()
+        with pytest.raises(RunQueueClosed):
+            rq.submit("late", lambda v: None)
+        rq.shutdown()
+
+
+def test_runqueue_failed_run_is_isolated():
+    boom = StageGraph()
+    boom.add(BoomStage())
+    with ThreadedExecutor(workers=2) as shared:
+        rq = RunQueue(shared, max_active=2)
+        bad = rq.submit("bad", lambda v: _graph_run(v, boom))
+        good = rq.submit("good", lambda v: _graph_run(v, _diamond()))
+        assert rq.drain(timeout=WAIT_S)
+        assert bad.status == "failed" and good.status == "done"
+        with pytest.raises(ValueError, match="boom"):
+            bad.result(WAIT_S)
+        assert set(good.result(WAIT_S)) == {"x", "y", "z", "w"}
+        rq.shutdown()
+
+
+def test_runqueue_fair_share_caps_per_run_inflight():
+    # capacity 2 split across 2 active runs -> each run's share is 1:
+    # with both runs' first bodies gated, neither may start a second.
+    gates = [threading.Event(), threading.Event()]
+    entered = [threading.Event(), threading.Event()]
+    counts = [0, 0]
+    lock = threading.Lock()
+
+    def wide_graph(i):
+        g = StageGraph()
+
+        class Held(Stage):
+            def __init__(self, name):
+                super().__init__(name)
+                self.outputs = (name,)
+
+            def run(self, ctx, _i=i):
+                with lock:
+                    counts[_i] += 1
+                entered[_i].set()
+                gates[_i].wait(WAIT_S)
+                return {self.name: "done"}
+
+        for j in range(3):
+            g.add(Held(f"r{i}s{j}"))
+        return g
+
+    with ThreadedExecutor(workers=2) as shared:
+        rq = RunQueue(shared, max_active=2)
+        tickets = [rq.submit(f"run{i}",
+                             lambda v, i=i: _graph_run(v, wide_graph(i)))
+                   for i in range(2)]
+        assert entered[0].wait(WAIT_S) and entered[1].wait(WAIT_S)
+        # give an unfair scheduler every chance to over-admit, then check
+        time.sleep(0.3)
+        with lock:
+            assert counts == [1, 1], \
+                "fair share of capacity 2 across 2 runs is 1 body each"
+        for gate in gates:
+            gate.set()
+        assert rq.drain(timeout=WAIT_S)
+        for t in tickets:
+            assert t.status == "done"
+            assert t.max_in_flight <= 2
+        rq.shutdown()
+
+
+def test_runqueue_survives_worker_kill_mid_fleet():
+    gate, started = threading.Event(), threading.Event()
+    victim_graph = StageGraph()
+    victim_graph.add(GateStage("victim", gate, started))
+    ex = WorkerQueueExecutor(workers=2, lease_s=0.15, poll_s=0.02)
+    try:
+        rq = RunQueue(ex, max_active=4)
+        tickets = [rq.submit("victim-run",
+                             lambda v: _graph_run(v, victim_graph))]
+        tickets += [rq.submit(f"run{i}",
+                              lambda v: _graph_run(v, _diamond()))
+                    for i in range(3)]
+        assert started.wait(WAIT_S)
+        assert ex.kill_worker() is not None
+        assert rq.drain(timeout=WAIT_S)
+        assert [t.status for t in tickets] == ["done"] * 4
+        assert tickets[0].result(WAIT_S)["v"] == "attempt-2"
+        rq.shutdown()
+    finally:
+        gate.set()
+        ex.shutdown()
+
+
+# ===========================================================================
+# Concurrent cache / manifest stress (the multi-writer bugfix)
+# ===========================================================================
+def test_stagecache_two_concurrent_runs_one_dir(tmp_path):
+    cache = StageCache(str(tmp_path / "cache"))
+
+    def one_run(results, i):
+        g = StageGraph()
+        g.add(ArithStage("a", outputs=("x",)))
+        g.add(ArithStage("b", inputs=("x",), outputs=("y",)),
+              depends_on=("a",))
+        for s in g.stages.values():
+            s.cacheable = True
+        ctx = _ctx(cache=cache)
+        g.execute(ctx)
+        results[i] = dict(ctx.outputs)
+
+    results = {}
+    threads = [threading.Thread(target=one_run, args=(results, i))
+               for i in range(4)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(WAIT_S)
+    assert len(results) == 4
+    assert len({tuple(sorted(r.items())) for r in results.values()}) == 1
+    # both stages landed exactly once in the shared store, racing puts
+    # and hits notwithstanding
+    assert {m["stage"] for m in cache.entries().values()} == {"a", "b"}
+
+
+def _cache_hammer(args):
+    root, worker, rounds = args
+    cache = StageCache(root, max_bytes=4096)
+    ok = 0
+    for i in range(rounds):
+        key = f"key{i % 5}"
+        cache.put(key, f"stage{worker}", {"v": f"{worker}:{i}", "pad": "x" * 64},
+                  0.01)
+        got = cache.get(key)
+        if got is None or "v" in got:
+            ok += 1
+    return ok
+
+
+def test_stagecache_multiprocess_writers_with_eviction(tmp_path):
+    import multiprocessing as mp
+
+    root = str(tmp_path / "cache")
+    rounds = 30
+    with mp.get_context("fork").Pool(3) as pool:
+        oks = pool.map(_cache_hammer, [(root, w, rounds) for w in range(3)])
+    # every racing put/get round was coherent: a hit is a valid pickle
+    # of *some* writer's payload, a lost race is a clean miss
+    assert oks == [rounds] * 3
+    cache = StageCache(root, max_bytes=4096)
+    for key, meta in cache.entries().items():
+        assert meta["bytes"] > 0
+        got = cache.get(key)
+        assert got is None or "v" in got
+
+
+def _manifest_writer(args):
+    run_dir, start, n = args
+    manifest = RunManifest(run_dir)
+    for i in range(start, start + n):
+        manifest.record(f"stage{i}", f"ih{i}", f"oh{i}", {"k": i}, 0.0)
+    return n
+
+
+def test_runmanifest_multiprocess_writers_merge(tmp_path):
+    import multiprocessing as mp
+
+    run_dir = str(tmp_path / "run")
+    os.makedirs(run_dir, exist_ok=True)
+    per = 8
+    with mp.get_context("fork").Pool(4) as pool:
+        pool.map(_manifest_writer,
+                 [(run_dir, w * per, per) for w in range(4)])
+    merged = RunManifest(run_dir).completed()
+    # without merge-on-flush the last flusher clobbers everyone else's
+    # stages; with it the union survives
+    assert len(merged) == 4 * per
+    for i in range(4 * per):
+        entry = merged[f"stage{i}"]
+        assert entry["input_hash"] == f"ih{i}"
+        assert RunManifest(run_dir).load_outputs(f"stage{i}",
+                                                 f"ih{i}") == {"k": i}
+
+
+def test_runmanifest_threaded_writers_lose_nothing(tmp_path):
+    run_dir = str(tmp_path / "run")
+    os.makedirs(run_dir, exist_ok=True)
+    manifest = RunManifest(run_dir)
+    threads = [threading.Thread(
+        target=lambda s=s: manifest.record(f"t{s}", f"ih{s}", f"oh{s}",
+                                           {"k": s}, 0.0))
+        for s in range(16)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(WAIT_S)
+    reloaded = RunManifest(run_dir).completed()
+    assert len(reloaded) == 16
+    assert pickle.loads(open(os.path.join(
+        run_dir, "stages",
+        os.listdir(os.path.join(run_dir, "stages"))[0]), "rb").read())
