@@ -118,6 +118,68 @@ def bench_explore() -> dict:
     }
 
 
+def bench_calibration() -> dict:
+    """Predicted-vs-measured relative step-time error, static roofline
+    coefficients vs telemetry-calibrated ones, on a held-out split of
+    synthetic telemetry with known per-chip ground truth.  The floor:
+    calibration must never predict *worse* than the static model it
+    corrects.  Also emits the fit split as ``calibration_samples`` so
+    ``repro calibrate --bench BENCH_planner.json`` (and
+    ``harvest_bench``) can ingest real bench telemetry end to end."""
+    import numpy as np
+
+    from repro.core import calibrate
+    from repro.core.catalog import CHIPS
+
+    rng = np.random.default_rng(20260809)
+    per_chip = {}
+    fit_samples, calibration_samples = [], []
+    n_fit, n_holdout = 16, 8
+    # ground truth: hardware that runs each roofline term at its own
+    # efficiency (the exact miscalibration the linear fit models)
+    truth = {name: (1.1 + 0.2 * i, 0.8 + 0.1 * i, 1.4 - 0.1 * i, 2e-3)
+             for i, name in enumerate(sorted(CHIPS))}
+    for name in sorted(CHIPS):
+        a_c, a_m, a_x, b = truth[name]
+        rows = []
+        for _ in range(n_fit + n_holdout):
+            c, m, x = rng.uniform(5e-3, 0.5, 3)
+            noise = 1.0 + rng.normal(0.0, 0.01)
+            rows.append(calibrate.Sample(
+                name, "train", c, m, x,
+                max((a_c * c + a_m * m + a_x * x + b) * noise, 1e-9),
+                source="bench:synthetic"))
+        fit, holdout = rows[:n_fit], rows[n_fit:]
+        fit_samples.extend(fit)
+        calibration_samples.extend(s.to_doc() for s in fit)
+        per_chip[name] = holdout
+
+    cells = {(c.chip, c.kind): c for c in calibrate.fit_cells(fit_samples)}
+    static_errs, cal_errs = [], []
+    for name, holdout in per_chip.items():
+        cell = cells[(name, "train")]
+        for s in holdout:
+            static = calibrate.static_step(s.compute_s, s.memory_s,
+                                           s.collective_s)
+            fitted = float(cell.predict(s.compute_s, s.memory_s,
+                                        s.collective_s))
+            static_errs.append(abs(static - s.measured_step_s)
+                               / s.measured_step_s)
+            cal_errs.append(abs(fitted - s.measured_step_s)
+                            / s.measured_step_s)
+    static_err = float(np.mean(static_errs))
+    cal_err = float(np.mean(cal_errs))
+    return {
+        "chips": sorted(per_chip),
+        "fit_samples_per_chip": n_fit,
+        "holdout_samples_per_chip": n_holdout,
+        "static_rel_err": static_err,
+        "calibrated_rel_err": cal_err,
+        "improvement": static_err / max(cal_err, 1e-12),
+        "calibration_samples": calibration_samples,
+    }
+
+
 def bench_stage_cache() -> dict:
     from repro.core import REGISTRY, DataStage, StageCache, StageContext, StageGraph
 
@@ -145,8 +207,13 @@ def main() -> None:
     planner = bench_planner()
     cache = bench_stage_cache()
     explore_grid = bench_explore()
+    calibration = bench_calibration()
     doc = {"generated_at": time.time(), "planner": planner,
-           "stage_cache": cache, "explore": explore_grid}
+           "stage_cache": cache, "explore": explore_grid,
+           "calibration": calibration,
+           # top-level so harvest_bench finds it without knowing the
+           # bench layout
+           "calibration_samples": calibration.pop("calibration_samples")}
     with open(OUT_PATH, "w") as f:
         json.dump(doc, f, indent=1)
 
@@ -168,7 +235,16 @@ def main() -> None:
           f";total_s={e['cold_s']:.3f}")
     print(f"explore/grid_cached,{e['cell_cached_s']*1e6/e['grid_cells']:.1f},"
           f"speedup={e['speedup_cached']:.1f}x")
+    cal = calibration
+    print(f"calibration/static_rel_err,{cal['static_rel_err']:.4f},"
+          f"chips={len(cal['chips'])}")
+    print(f"calibration/calibrated_rel_err,{cal['calibrated_rel_err']:.4f},"
+          f"improvement={cal['improvement']:.1f}x")
 
+    if cal["calibrated_rel_err"] > cal["static_rel_err"]:
+        raise RuntimeError(
+            f"calibrated cost model predicts worse than static: "
+            f"{cal['calibrated_rel_err']:.4f} > {cal['static_rel_err']:.4f}")
     if not p["rank_parity"]:
         raise RuntimeError("vectorized ranking diverged from scalar oracle")
     if p["speedup_cold"] < SPEEDUP_FLOOR:

@@ -3,6 +3,20 @@ workflow stage graphs and templates, intent-based planning over a
 resource catalog, roofline cost model, provenance, budgets and the
 execution envelope."""
 from repro.core.budget import BudgetExceeded, BudgetLedger, PermissionDenied, Workspace
+from repro.core.calibrate import (
+    Calibration,
+    CalibrationStore,
+    CellCalibration,
+    DriftReport,
+    Sample,
+    check_drift,
+    fit_cells,
+    harvest_bench,
+    harvest_run,
+    harvest_runs_dir,
+)
+from repro.core.calibrate import activate as activate_calibration
+from repro.core.calibrate import deactivate as deactivate_calibration
 from repro.core.catalog import (
     CATALOG,
     CHIPS,
@@ -39,8 +53,10 @@ from repro.core.explore import (
     ExploreResult,
     ExploreSpec,
     FrontierPoint,
+    compare_markdown,
     explore,
     report_markdown,
+    result_doc,
 )
 from repro.core.graph import (
     CycleError,
@@ -99,8 +115,15 @@ from repro.core.provenance import (
     capture_environment,
     stable_hash,
 )
+from repro.core.registry import (
+    PROVIDERS,
+    ProviderProfile,
+    ProviderRegistry,
+    SliceOffer,
+)
 from repro.core.stages import (
     CHECKS,
+    CalibrateStage,
     DataStage,
     EvalStage,
     ExploreStage,
@@ -136,7 +159,11 @@ __all__ = [
     "BatchEstimate", "CostEstimate", "PlanGeometry", "RetryCost",
     "estimate", "estimate_batch", "retry_expected_cost",
     "CellSpec", "ExploreResult", "ExploreSpec", "FrontierPoint",
-    "explore", "report_markdown",
+    "explore", "report_markdown", "result_doc", "compare_markdown",
+    "Calibration", "CalibrationStore", "CellCalibration", "DriftReport",
+    "Sample", "check_drift", "fit_cells", "harvest_bench", "harvest_run",
+    "harvest_runs_dir", "activate_calibration", "deactivate_calibration",
+    "PROVIDERS", "ProviderProfile", "ProviderRegistry", "SliceOffer",
     "ExecutionEnvelope", "ResourceIntent",
     "CycleError", "FnStage", "GraphError", "MissingInputError", "Placement",
     "Stage", "StageCache", "StageContext", "StageGraph", "StageResult",
@@ -149,8 +176,8 @@ __all__ = [
     "plan", "plan_stages", "prune_dominated", "rank", "to_runtime_plan",
     "ProvenanceStore", "RunRecord", "StageRecordView",
     "capture_environment", "stable_hash",
-    "CHECKS", "DataStage", "EvalStage", "ExploreStage", "MoveStage",
-    "PlanStage", "ServeStage", "TrainStage", "ValidateStage",
+    "CHECKS", "CalibrateStage", "DataStage", "EvalStage", "ExploreStage",
+    "MoveStage", "PlanStage", "ServeStage", "TrainStage", "ValidateStage",
     "VisualizeStage",
     "REGISTRY", "WorkflowRegistry", "WorkflowResult",
     "WorkflowTemplate", "compile_template", "resolve_placement_map",

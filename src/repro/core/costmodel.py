@@ -22,6 +22,7 @@ from typing import Dict, Optional, Tuple
 import numpy as np
 
 from repro.configs.base import ModelConfig, ShapeConfig
+from repro.core import calibrate
 from repro.core.catalog import CandidateTable, SliceType
 
 
@@ -254,9 +255,16 @@ def estimate(cfg: ModelConfig, shape: ShapeConfig, slice_: SliceType,
     bytes_per_device = dev_state + dev_cache + dev_grads + dev_act
     hbm_frac = bytes_per_device / chip.hbm_bytes
 
-    # roofline combine: dominant term with 15% tax for imperfect overlap
-    step_s = max(compute_s, memory_s, collective_s)
-    step_s = step_s + 0.15 * (compute_s + memory_s + collective_s - step_s)
+    # roofline combine: dominant term with 15% tax for imperfect overlap;
+    # when a calibration is active for this (chip, kind), its fitted
+    # prediction replaces the combine (estimate_batch applies the exact
+    # same CellCalibration.predict, preserving scalar/batch parity)
+    cal = calibrate.active_cell(chip.name, kind)
+    if cal is not None:
+        step_s = float(cal.predict(compute_s, memory_s, collective_s))
+    else:
+        step_s = max(compute_s, memory_s, collective_s)
+        step_s = step_s + 0.15 * (compute_s + memory_s + collective_s - step_s)
 
     terms = {"compute": compute_s, "memory": memory_s, "collective": collective_s}
     bottleneck = max(terms, key=terms.get)
@@ -459,6 +467,17 @@ def estimate_batch(cfg: ModelConfig, shape: ShapeConfig,
 
     peak = np.maximum(np.maximum(compute_s, memory_s), collective_s)
     step_s = peak + 0.15 * (compute_s + memory_s + collective_s - peak)
+    cal_map = calibrate.active_for_kind(kind)
+    if cal_map:
+        # per-row calibrated override, chip by chip — the same
+        # CellCalibration.predict the scalar oracle applies, elementwise
+        chip_names = np.asarray([s.chip.name for s in table.slices])
+        for name in sorted(cal_map):
+            row_mask = chip_names == name
+            if row_mask.any():
+                pred = cal_map[name].predict(compute_s, memory_s,
+                                             collective_s)
+                step_s = np.where(row_mask, pred, step_s)
     bottleneck_code = np.argmax(
         np.stack([compute_s, memory_s, collective_s]), axis=0)
     price_s = table.chip_price * table.chips / 3600.0

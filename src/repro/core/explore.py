@@ -39,6 +39,7 @@ import dataclasses
 import time
 from typing import Any, Dict, List, Optional, Tuple
 
+from repro.core import calibrate
 from repro.core.catalog import CHIPS, catalog_generation
 from repro.core.costmodel import RetryCost, retry_expected_cost
 from repro.core.intent import ResourceIntent
@@ -191,6 +192,11 @@ class CellResult:
     choices: List[PlanChoice]
     survivors: List[PlanChoice] = dataclasses.field(default_factory=list)
     from_cache: bool = False
+    # the catalog generation observed when THIS cell was planned — under
+    # a concurrent register_slice the sweep's cells may span generations,
+    # and each cache entry must be keyed by the generation its plans were
+    # actually computed against (docs/calibration.md §registry)
+    generation: int = 0
 
     @property
     def best(self) -> Optional[PlanChoice]:
@@ -256,8 +262,12 @@ def cell_cache_key(spec: ExploreSpec, cell: CellSpec, generation: int,
                    engine: str) -> str:
     """Content-addressed key for one grid cell: its coordinates, every
     spec field that changes the planner query or the retry projection,
-    and the catalog generation (a fleet that gained a slice type must
-    re-plan the cell)."""
+    the catalog generation (a fleet that gained a slice type must
+    re-plan the cell), and the active calibration's per-kind fingerprint
+    (new fitted coefficients change step_s, so cached cells must
+    miss)."""
+    from repro.configs import get_shape
+
     constraints = {
         "budget_usd_per_hour": spec.budget_usd_per_hour,
         "max_step_seconds": spec.max_step_seconds,
@@ -265,20 +275,24 @@ def cell_cache_key(spec: ExploreSpec, cell: CellSpec, generation: int,
         "allow_multi_pod": spec.allow_multi_pod,
         "top_k": spec.top_k,
     }
+    kind = get_shape(cell.shape_name()).kind
     return stable_hash({"explore_cell": dataclasses.asdict(cell),
                         "constraints": constraints,
                         "engine": engine,
                         "catalog_generation": generation,
-                        "version": "2"})
+                        "calibration_state": calibrate.calibration_state(kind),
+                        "version": "3"})
 
 
-def _run_cell(cell: CellSpec, spec: ExploreSpec, engine: str) -> CellResult:
+def _run_cell(cell: CellSpec, spec: ExploreSpec, engine: str,
+              generation: int = 0) -> CellResult:
     intent = cell.intent(spec)
     # one planner query: the full pruned survivor set in ranked order;
     # the reported top-k is its prefix
     survivors = plan(intent, top_k=2 ** 31, engine=engine)
     return CellResult(cell=cell, shape_name=cell.shape_name(),
-                      choices=survivors[:spec.top_k], survivors=survivors)
+                      choices=survivors[:spec.top_k], survivors=survivors,
+                      generation=generation)
 
 
 def _weakly_dominated(*axes) -> "Any":
@@ -349,6 +363,8 @@ def _merged_frontier(spec: ExploreSpec,
 
 def _family_cache_key(spec: ExploreSpec, arch: str, shape_name: str,
                       gen: str, generation: int, engine: str) -> str:
+    from repro.configs import get_shape
+
     return stable_hash({
         "explore_scaling": {"arch": arch, "shape": shape_name,
                             "generation": gen},
@@ -361,7 +377,9 @@ def _family_cache_key(spec: ExploreSpec, arch: str, shape_name: str,
         },
         "engine": engine,
         "catalog_generation": generation,
-        "version": "2",
+        "calibration_state": calibrate.calibration_state(
+            get_shape(shape_name).kind),
+        "version": "3",
     })
 
 
@@ -443,11 +461,21 @@ def explore(spec: ExploreSpec, *, cache: Any = None,
             engine: str = "vectorized") -> ExploreResult:
     """Run the sweep: one planner query per grid cell (cached per cell
     when a StageCache is supplied), merged Pareto frontier, scaling
-    report, retry-aware cost projections."""
+    report, retry-aware cost projections.
+
+    Concurrent catalog mutation is safe: the catalog generation is
+    re-read per cell, so each cached cell entry is keyed by the
+    generation its plans were actually computed against.  A
+    ``register_slice`` landing mid-sweep makes later cells plan (and
+    cache) under the new generation — earlier entries stay keyed to the
+    old one, and a follow-up sweep recomputes exactly those — while the
+    merged frontier remains internally consistent (the weak-dominance
+    predicate holds over whatever candidate set the cells produced)."""
     generation = catalog_generation()
     cells: List[CellResult] = []
     for cs in spec.cell_specs():
-        key = cell_cache_key(spec, cs, generation, engine)
+        cell_gen = catalog_generation()  # per-cell snapshot (see above)
+        key = cell_cache_key(spec, cs, cell_gen, engine)
         if cache is not None:
             hit = cache.get(key)
             if hit is not None and "cell" in hit:
@@ -456,7 +484,7 @@ def explore(spec: ExploreSpec, *, cache: Any = None,
                 cells.append(cell)
                 continue
         t0 = time.perf_counter()
-        cell = _run_cell(cs, spec, engine)
+        cell = _run_cell(cs, spec, engine, generation=cell_gen)
         dt = time.perf_counter() - t0
         if cache is not None:
             cache.put(key, f"explore:{cs.label()}", {"cell": cell}, dt)
@@ -603,3 +631,156 @@ def frontier_table(result: ExploreResult) -> str:
             f"E[h]={rc.expected_hours:.3f} "
             f"({p.cell.label()})")
     return "\n".join(lines)
+
+
+# ===========================================================================
+# Machine-readable result docs + the byte-deterministic compare report
+# (``repro explore --compare RUN_ID``: how calibration shifts are
+# diffed across explore runs)
+# ===========================================================================
+def result_doc(result: ExploreResult) -> Dict[str, Any]:
+    """A JSON-able summary of a sweep — written next to ``explore.md``
+    as ``explore.json`` so a later run can be diffed against it
+    (``explore --compare``).  Contains everything the compare report
+    needs: the spec (to re-run the identical grid), per-cell best plans,
+    the frontier's identity keys, and the catalog + calibration
+    generations the sweep saw."""
+    def choice_doc(c: Optional[PlanChoice]) -> Optional[Dict[str, Any]]:
+        if c is None:
+            return None
+        return {
+            "slice": c.slice.name,
+            "mesh": "x".join(map(str, c.mesh_shape)),
+            "remat": c.geometry.remat,
+            "microbatch": c.geometry.microbatch,
+            "step_s": c.est.step_s,
+            "cost_per_mtok": c.est.cost_per_mtok,
+            "hbm_frac": c.est.hbm_frac,
+            "bottleneck": c.est.bottleneck,
+            "price_per_hour": c.slice.price_per_hour,
+        }
+
+    cal = calibrate.active()
+    return {
+        "version": 1,
+        "spec": dataclasses.asdict(result.spec),
+        "catalog_generation": result.catalog_generation,
+        "calibration_generation": cal.generation if cal is not None else 0,
+        "cells": [{
+            "label": cr.cell.label(),
+            "cell": dataclasses.asdict(cr.cell),
+            "shape_name": cr.shape_name,
+            "generation": cr.generation,
+            "best": choice_doc(cr.best),
+        } for cr in result.cells],
+        "frontier": [{
+            "cell": p.cell.label(),
+            "slice": p.choice.slice.name,
+            "mesh": "x".join(map(str, p.choice.mesh_shape)),
+            "remat": p.choice.geometry.remat,
+            "microbatch": p.choice.geometry.microbatch,
+            "step_s": p.choice.est.step_s,
+            "cost_per_mtok": p.choice.est.cost_per_mtok,
+        } for p in result.frontier],
+    }
+
+
+def spec_from_doc(doc: Dict[str, Any]) -> ExploreSpec:
+    """Reconstruct the sweep spec recorded by :func:`result_doc` — the
+    compare path re-runs the *identical* grid, whatever axis flags the
+    current CLI invocation carries."""
+    return ExploreSpec(**doc["spec"])
+
+
+def _delta_pct(old: float, new: float) -> str:
+    if old == 0:
+        return "-"
+    return f"{(new - old) / old * 100:+.1f}%"
+
+
+def compare_markdown(old_doc: Dict[str, Any],
+                     new_doc: Dict[str, Any]) -> str:
+    """Byte-deterministic Markdown diff of two sweep docs: per-cell step
+    and $/Mtok deltas, plan changes, and frontier membership changes.
+    Same two docs ⇒ identical bytes (fixed float formats, no
+    timestamps, no run ids), so the report golden-tests — and a
+    calibration-store update shows up as exactly the cells whose
+    coefficients moved."""
+    out: List[str] = ["# Explore comparison", ""]
+    out.append(f"- baseline: catalog generation "
+               f"{old_doc.get('catalog_generation', '?')}, calibration "
+               f"generation {old_doc.get('calibration_generation', 0)}")
+    out.append(f"- current: catalog generation "
+               f"{new_doc.get('catalog_generation', '?')}, calibration "
+               f"generation {new_doc.get('calibration_generation', 0)}")
+    out.append("")
+
+    old_cells = {c["label"]: c for c in old_doc.get("cells", [])}
+    new_cells = {c["label"]: c for c in new_doc.get("cells", [])}
+    out.append("## Cells")
+    out.append("")
+    out.append("| cell | step ms (old) | step ms (new) | Δ step "
+               "| $/Mtok (old) | $/Mtok (new) | Δ $/Mtok | plan |")
+    out.append("|------|---------------|---------------|--------"
+               "|--------------|--------------|----------|------|")
+    changed = 0
+    for label in sorted(set(old_cells) | set(new_cells)):
+        o = (old_cells.get(label) or {}).get("best")
+        n = (new_cells.get(label) or {}).get("best")
+        if o is None and n is None:
+            out.append(f"| {label} | - | - | - | - | - | - | infeasible |")
+            continue
+        if o is None or n is None:
+            which = "now feasible" if o is None else "now infeasible"
+            got = n or o
+            out.append(f"| {label} | - | {got['step_s'] * 1e3:.2f} | - | - "
+                       f"| {got['cost_per_mtok']:.4f} | - | {which} |")
+            changed += 1
+            continue
+        same_plan = (o["slice"] == n["slice"] and o["mesh"] == n["mesh"]
+                     and o["remat"] == n["remat"]
+                     and o["microbatch"] == n["microbatch"])
+        plan_note = ("unchanged" if same_plan
+                     else f"{o['slice']}/{o['mesh']} → "
+                          f"{n['slice']}/{n['mesh']}")
+        if not same_plan or abs(n["step_s"] - o["step_s"]) > 1e-12:
+            changed += 1
+        out.append(
+            f"| {label} | {o['step_s'] * 1e3:.2f} | {n['step_s'] * 1e3:.2f} "
+            f"| {_delta_pct(o['step_s'], n['step_s'])} "
+            f"| {o['cost_per_mtok']:.4f} | {n['cost_per_mtok']:.4f} "
+            f"| {_delta_pct(o['cost_per_mtok'], n['cost_per_mtok'])} "
+            f"| {plan_note} |")
+    out.append("")
+    out.append(f"{changed} of {len(set(old_cells) | set(new_cells))} cells "
+               f"changed")
+    out.append("")
+
+    def fkey(p):
+        return (p["cell"], p["slice"], p["mesh"], p["remat"],
+                p["microbatch"])
+
+    old_front = {fkey(p): p for p in old_doc.get("frontier", [])}
+    new_front = {fkey(p): p for p in new_doc.get("frontier", [])}
+    out.append("## Frontier")
+    out.append("")
+    entered = sorted(set(new_front) - set(old_front))
+    left = sorted(set(old_front) - set(new_front))
+    out.append(f"- baseline points: {len(old_front)}; current points: "
+               f"{len(new_front)}")
+    for k in entered:
+        p = new_front[k]
+        out.append(f"- entered: {p['cell']} {p['slice']} {p['mesh']} "
+                   f"remat={p['remat']} ubatch={p['microbatch']} "
+                   f"step={p['step_s'] * 1e3:.2f}ms "
+                   f"$/Mtok={p['cost_per_mtok']:.4f}")
+    for k in left:
+        p = old_front[k]
+        out.append(f"- left: {p['cell']} {p['slice']} {p['mesh']} "
+                   f"remat={p['remat']} ubatch={p['microbatch']} "
+                   f"step={p['step_s'] * 1e3:.2f}ms "
+                   f"$/Mtok={p['cost_per_mtok']:.4f}")
+    if not entered and not left:
+        out.append("- membership unchanged")
+    out.append("")
+    return "\n".join(out)

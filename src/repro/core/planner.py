@@ -49,6 +49,7 @@ from typing import Dict, List, Optional, Tuple
 import numpy as np
 
 from repro.configs import get_config, get_shape
+from repro.core import calibrate
 from repro.core.catalog import (
     CATALOG,
     CandidateTable,
@@ -106,10 +107,10 @@ def intent_hash(intent: ResourceIntent) -> str:
 # new rows (incremental re-scoring) and lazily refreshes memoized ranked
 # orders — instead of invalidating every memoized intent wholesale.
 # ===========================================================================
-_BATCH_CACHE: "Dict[Tuple[str, str], Tuple[int, CandidateTable, BatchEstimate]]" = {}
+_BATCH_CACHE: "Dict[Tuple[str, str], Tuple[int, str, CandidateTable, BatchEstimate]]" = {}
 _BATCH_CACHE_MAX = 128  # FIFO bound: derived shapes (train_4k@gbN) can
 # mint unbounded (arch, shape) keys through the explore global-batch axis
-_PLAN_CACHE: "Dict[str, Tuple[int, np.ndarray, str, str]]" = {}
+_PLAN_CACHE: "Dict[str, Tuple[int, str, np.ndarray, str, str]]" = {}
 _PLAN_CACHE_MAX = 256
 _CACHE_LOCK = threading.Lock()
 
@@ -140,27 +141,36 @@ def _scored_table(arch: str, shape_name: str) -> Tuple[CandidateTable, BatchEsti
     Generation-aware: when the catalog grew since the entry was scored,
     only the appended rows go through ``estimate_batch`` and the columns
     are concatenated (the prefix is immutable by construction — see
-    :func:`repro.core.catalog.register_slice`)."""
+    :func:`repro.core.catalog.register_slice`).
+
+    Calibration-aware: each entry also records the active calibration's
+    per-kind fingerprint (:func:`repro.core.calibrate.calibration_state`).
+    New coefficients for this workload's kind change step_s for the
+    whole column, so the entry re-scores from scratch; coefficients for
+    *other* kinds leave the fingerprint — and the memo — untouched."""
     key = (arch, shape_name)
     gen = catalog_generation()
+    shape = get_shape(shape_name)
+    cal_state = calibrate.calibration_state(shape.kind)
     with _CACHE_LOCK:
         hit = _BATCH_CACHE.get(key)
+    if hit is not None and hit[1] != cal_state:
+        hit = None  # calibrated step_s columns are stale end to end
     if hit is not None and hit[0] == gen:
-        return hit[1], hit[2]
+        return hit[2], hit[3]
     cfg = get_config(arch)
-    shape = get_shape(shape_name)
     table = candidate_table(shape.kind, shape.global_batch)
-    if (hit is not None and len(table) > len(hit[1])
-            and table.slices[:len(hit[1])] == hit[1].slices):
-        ext = table_rows(table, len(hit[1]))
-        batch = concat_batches(hit[2], estimate_batch(cfg, shape, ext))
+    if (hit is not None and len(table) > len(hit[2])
+            and table.slices[:len(hit[2])] == hit[2].slices):
+        ext = table_rows(table, len(hit[2]))
+        batch = concat_batches(hit[3], estimate_batch(cfg, shape, ext))
         PLANNER_STATS["table_extensions"] += 1
     else:
         batch = estimate_batch(cfg, shape, table)
     with _CACHE_LOCK:
         if key not in _BATCH_CACHE and len(_BATCH_CACHE) >= _BATCH_CACHE_MAX:
             _BATCH_CACHE.pop(next(iter(_BATCH_CACHE)))
-        _BATCH_CACHE[key] = (gen, table, batch)
+        _BATCH_CACHE[key] = (gen, cal_state, table, batch)
     return table, batch
 
 
@@ -375,7 +385,13 @@ def plan(intent: ResourceIntent, top_k: int = 5, *,
     generation went stale (the catalog gained slice types) is *refreshed*
     rather than discarded: the scored table extends with only the new
     rows (:func:`_scored_table`), and just the cheap mask/prune/rank
-    pipeline re-runs — incremental re-planning, not a cold start."""
+    pipeline re-runs — incremental re-planning, not a cold start.
+
+    Entries are additionally salted by the active calibration's
+    per-kind fingerprint: activating fitted coefficients for this
+    intent's workload kind invalidates its memoized ranking (the plan
+    was computed under different step_s), while intents of untouched
+    kinds keep their memo hits."""
     _check_engine(engine)
     intent.validate()
     if engine == "scalar":
@@ -384,9 +400,10 @@ def plan(intent: ResourceIntent, top_k: int = 5, *,
     PLANNER_STATS["plan_calls"] += 1
     key = intent_hash(intent)
     gen = catalog_generation()
+    cal_state = calibrate.calibration_state(get_shape(intent.shape).kind)
     with _CACHE_LOCK:
         hit = _PLAN_CACHE.get(key)
-    if hit is not None and hit[0] == gen:
+    if hit is not None and hit[0] == gen and hit[1] == cal_state:
         PLANNER_STATS["memo_hits"] += 1
     else:
         PLANNER_STATS["stale_refreshes" if hit is not None
@@ -397,12 +414,12 @@ def plan(intent: ResourceIntent, top_k: int = 5, *,
                          batch.hbm_frac[idx], table.slice_price[idx])
         idx = idx[~dom]
         ranked = _rank_indices(table, batch, idx, intent.goal)
-        hit = (gen, ranked, intent.arch, intent.shape)
+        hit = (gen, cal_state, ranked, intent.arch, intent.shape)
         with _CACHE_LOCK:
             if key not in _PLAN_CACHE and len(_PLAN_CACHE) >= _PLAN_CACHE_MAX:
                 _PLAN_CACHE.pop(next(iter(_PLAN_CACHE)))
             _PLAN_CACHE[key] = hit
-    _, ranked, arch, shape_name = hit
+    _, _, ranked, arch, shape_name = hit
     table, batch = _scored_table(arch, shape_name)
     return _materialize(table, batch, ranked[:top_k])
 

@@ -46,6 +46,7 @@ from typing import Any, Dict, List, Optional, Sequence, Tuple, Type
 from repro.core.graph import Stage, StageContext, StageGraph, _SubworkflowStage
 from repro.core.intent import ResourceIntent
 from repro.core.stages import (
+    CalibrateStage,
     DataStage,
     EvalStage,
     ExploreStage,
@@ -104,7 +105,7 @@ for _tname, _tcls in (
     ("plan", PlanStage), ("data", DataStage), ("train", TrainStage),
     ("serve", ServeStage), ("explore", ExploreStage), ("eval", EvalStage),
     ("validate", ValidateStage), ("visualize", VisualizeStage),
-    ("move", MoveStage),
+    ("move", MoveStage), ("calibrate", CalibrateStage),
 ):
     register_stage_type(_tname, _tcls)
 

@@ -177,6 +177,20 @@ class PlanStage(Stage):
             "est_cost_per_step": choice.est.cost_per_step if choice else None,
             "bottleneck": choice.est.bottleneck if choice else None,
         }
+        if choice is not None:
+            # roofline terms + identity keys the calibration harvester
+            # (repro.core.calibrate.harvest_run) pairs with measured step
+            # times — without these a finished run contributes no telemetry
+            from repro.configs import get_shape
+            plan_doc.update(
+                chip=choice.slice.chip.name,
+                kind=get_shape(intent.shape).kind,
+                compute_s=choice.est.compute_s,
+                memory_s=choice.est.memory_s,
+                collective_s=choice.est.collective_s,
+                remat=choice.geometry.remat,
+                microbatch=choice.geometry.microbatch,
+            )
         if ctx.record is not None:
             placements_doc = {
                 name: ({"slice": c.slice.name,
@@ -471,16 +485,22 @@ class ExploreStage(Stage):
         which would let a resume skip restore a *different* spec's
         result — and a catalog that gained a slice type must miss the
         resume/cache hash so the sweep re-plans."""
+        from repro.core import calibrate
         from repro.core.catalog import catalog_generation
 
         sig = super().signature()
         sig["spec"] = (dataclasses.asdict(self.spec)
                        if self.spec is not None else None)
         sig["catalog_generation"] = catalog_generation()
+        # an activated calibration re-scores every cell, so the resume
+        # hash must miss when the active coefficient set changes
+        sig["calibration_generation"] = calibrate.active_generation()
         return sig
 
     def run(self, ctx: StageContext) -> Dict[str, Any]:
-        from repro.core.explore import explore, report_markdown
+        import json
+
+        from repro.core.explore import explore, report_markdown, result_doc
 
         spec = ctx.params.get("explore_spec", self.spec)
         if spec is None:
@@ -493,6 +513,9 @@ class ExploreStage(Stage):
             path = f"{ctx.record.artifacts_dir}/{self.report_name}"
             with open(path, "w", encoding="utf-8") as f:
                 f.write(report)
+            doc_path = path.rsplit(".", 1)[0] + ".json"
+            with open(doc_path, "w", encoding="utf-8") as f:
+                json.dump(result_doc(result), f, indent=2, sort_keys=True)
             ctx.record.log_event("explore", {
                 "stage": self.name,
                 "cells": len(result.cells),
@@ -503,6 +526,91 @@ class ExploreStage(Stage):
                 "report": path,
             })
         return {"explore_result": result, "explore_report": report}
+
+
+# ===========================================================================
+# Calibrate
+# ===========================================================================
+class CalibrateStage(Stage):
+    """Harvest this run's telemetry into the calibration store and refit
+    the cost model (:mod:`repro.core.calibrate`).
+
+    Placed after a workload stage, it pairs the manifest's planned
+    roofline terms with the measured step times (``harvest_run``),
+    optionally folds in other finished runs (``runs_root``) and bench
+    result files (``bench_paths``), ingests everything into the
+    flocked :class:`~repro.core.calibrate.CalibrationStore`, refits the
+    per-(chip, kind) coefficients, and reports drift.  With
+    ``activate=True`` the fresh fit becomes the process-wide active
+    calibration — subsequent plans (and their memo keys) pick it up
+    immediately.
+
+    Deliberately uncacheable: its job is absorbing *new* telemetry; a
+    cache hit would silently drop this run's samples.
+    """
+
+    outputs = ("calibration", "drift_report")
+
+    def __init__(self, name: str = "calibrate",
+                 store_path: Optional[str] = None,
+                 runs_root: Optional[str] = None,
+                 bench_paths: Tuple[str, ...] = (),
+                 min_samples: int = 4,
+                 drift_threshold: float = 0.25,
+                 activate: bool = False):
+        super().__init__(name)
+        self.store_path = store_path
+        self.runs_root = runs_root
+        self.bench_paths = tuple(bench_paths)
+        self.min_samples = int(min_samples)
+        self.drift_threshold = float(drift_threshold)
+        self.activate = bool(activate)
+
+    def run(self, ctx: StageContext) -> Dict[str, Any]:
+        from repro.core import calibrate
+
+        samples: List[Any] = []
+        if ctx.record is not None:
+            samples.extend(calibrate.harvest_run(ctx.record))
+        if self.runs_root:
+            samples.extend(calibrate.harvest_runs_dir(self.runs_root))
+        for path in self.bench_paths:
+            samples.extend(calibrate.harvest_bench(path))
+
+        store = calibrate.CalibrationStore(self.store_path)
+        added = store.ingest(samples)
+        cal = store.fit(min_samples=self.min_samples)
+        drift = store.drift(threshold=self.drift_threshold,
+                            calibration=cal)
+        if self.activate:
+            calibrate.activate(cal)
+
+        if ctx.record is not None:
+            lines = [f"# Calibration (generation {cal.generation})", ""]
+            lines.append(f"- samples harvested: {len(samples)} "
+                         f"({added} new)")
+            for c in cal.cells:
+                lines.append(
+                    f"- {c.chip}/{c.kind}: mode={c.mode} "
+                    f"a_c={c.a_compute:.4f} a_m={c.a_memory:.4f} "
+                    f"a_x={c.a_collective:.4f} b={c.intercept:.2e} "
+                    f"scale={c.scale:.4f} n={c.n_samples} "
+                    f"resid={c.residual:.3e}")
+            lines += ["", "## Drift", "", drift.summary(), ""]
+            path = f"{ctx.record.artifacts_dir}/calibration.md"
+            with open(path, "w", encoding="utf-8") as f:
+                f.write("\n".join(lines))
+            ctx.record.log_event("calibrate", {
+                "stage": self.name,
+                "samples": len(samples),
+                "new_samples": added,
+                "cells": len(cal.cells),
+                "generation": cal.generation,
+                "drifted": len(drift.drifted),
+                "activated": self.activate,
+                "report": path,
+            })
+        return {"calibration": cal, "drift_report": drift}
 
 
 # ===========================================================================

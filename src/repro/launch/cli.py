@@ -106,32 +106,63 @@ def _csv_ints(raw):
 
 
 def cmd_explore(args) -> None:
-    from repro.core import ProvenanceStore, StageCache
+    import json
+    import os
+
+    from repro.core import ProvenanceStore, StageCache, calibrate
     from repro.core.explore import (
         ExploreSpec,
+        compare_markdown,
         explore,
         frontier_table,
         report_markdown,
+        result_doc,
+        spec_from_doc,
     )
 
-    spec = ExploreSpec(
-        archs=tuple(args.arch),
-        shapes=tuple(args.shape or ["train_4k"]),
-        goals=tuple(args.goal or ["production"]),
-        chip_counts=args.chips,
-        global_batches=args.global_batch,
-        budget_usd_per_hour=args.budget,
-        max_step_seconds=args.deadline_ms / 1e3 if args.deadline_ms else None,
-        chip_generation=args.chip,
-        allow_multi_pod=not args.no_multi_pod,
-        top_k=args.top_k,
-        steps=args.steps,
-        preempt_rate_per_chip_hour=args.preempt_rate,
-        max_restarts=args.max_restarts,
-        backoff_s=args.backoff,
-    )
+    if args.calibration:
+        cal = calibrate.CalibrationStore(args.calibration).calibration()
+        calibrate.activate(cal)
+        print(f"calibration generation {cal.generation} "
+              f"({len(cal.cells)} cells) active")
+
+    old_doc = None
+    if args.compare:
+        # re-run the baseline run's exact grid under the current
+        # catalog + calibration; the diff below is the deliverable
+        base = os.path.join(args.runs_dir, args.compare, "explore.json")
+        try:
+            with open(base) as f:
+                old_doc = json.load(f)
+        except OSError as e:
+            raise SystemExit(
+                f"--compare: cannot read {base} ({e}); the baseline run "
+                f"must have been recorded by `explore` (not --no-report)")
+        spec = spec_from_doc(old_doc)
+    else:
+        if not args.arch:
+            raise SystemExit("explore: --arch is required "
+                             "(unless --compare RUN_ID)")
+        spec = ExploreSpec(
+            archs=tuple(args.arch),
+            shapes=tuple(args.shape or ["train_4k"]),
+            goals=tuple(args.goal or ["production"]),
+            chip_counts=args.chips,
+            global_batches=args.global_batch,
+            budget_usd_per_hour=args.budget,
+            max_step_seconds=(args.deadline_ms / 1e3
+                              if args.deadline_ms else None),
+            chip_generation=args.chip,
+            allow_multi_pod=not args.no_multi_pod,
+            top_k=args.top_k,
+            steps=args.steps,
+            preempt_rate_per_chip_hour=args.preempt_rate,
+            max_restarts=args.max_restarts,
+            backoff_s=args.backoff,
+        )
     cache = StageCache(args.cache_dir) if args.cache_dir else None
     result = explore(spec, cache=cache, engine=args.engine)
+    new_doc = result_doc(result)
 
     print(f"explored {len(result.cells)} cells "
           f"({result.feasible_cells} feasible, "
@@ -139,9 +170,14 @@ def cmd_explore(args) -> None:
           f"frontier has {len(result.frontier)} plans")
     print(frontier_table(result))
 
+    compare_report = None
+    if old_doc is not None:
+        compare_report = compare_markdown(old_doc, new_doc)
+        print()
+        print(compare_report)
+
     if not args.no_report:
         import dataclasses as _dc
-        import os
 
         store = ProvenanceStore(args.runs_dir)
         rec = store.create_run(
@@ -152,14 +188,59 @@ def cmd_explore(args) -> None:
         path = os.path.join(rec.dir, "explore.md")
         with open(path, "w", encoding="utf-8") as f:
             f.write(report_markdown(result))
+        with open(os.path.join(rec.dir, "explore.json"), "w",
+                  encoding="utf-8") as f:
+            json.dump(new_doc, f, indent=2, sort_keys=True)
+        if compare_report is not None:
+            with open(os.path.join(rec.dir, "compare.md"), "w",
+                      encoding="utf-8") as f:
+                f.write(compare_report)
         rec.log_event("explore", {
             "cells": len(result.cells),
             "feasible_cells": result.feasible_cells,
             "frontier_size": len(result.frontier),
             "catalog_generation": result.catalog_generation,
+            "compared_to": args.compare or None,
             "report": path,
         })
         print(f"report: {path}")
+
+
+def cmd_calibrate(args) -> None:
+    from repro.core import calibrate
+
+    store = calibrate.CalibrationStore(args.store)
+    if args.clear:
+        store.clear()
+        print(f"cleared {store.path}")
+        return
+
+    samples = []
+    if args.runs_dir:
+        samples.extend(calibrate.harvest_runs_dir(args.runs_dir))
+    for path in args.bench or ():
+        samples.extend(calibrate.harvest_bench(path))
+    added = store.ingest(samples)
+    print(f"harvested {len(samples)} samples ({added} new) "
+          f"-> {store.path}")
+
+    if args.no_fit:
+        cal = store.calibration()
+    else:
+        cal = store.fit(min_samples=args.min_samples)
+    print(f"calibration generation {cal.generation}: "
+          f"{len(cal.cells)} fitted cells")
+    for c in cal.cells:
+        print(f"  {c.chip}/{c.kind}: mode={c.mode} "
+              f"a_c={c.a_compute:.4f} a_m={c.a_memory:.4f} "
+              f"a_x={c.a_collective:.4f} b={c.intercept:.2e} "
+              f"scale={c.scale:.4f} n={c.n_samples} "
+              f"resid={c.residual:.3e}")
+
+    drift = store.drift(threshold=args.drift_threshold, calibration=cal)
+    print(drift.summary())
+    if drift.drifted:
+        raise SystemExit(2)
 
 
 def _looks_like_spec_path(target: str) -> bool:
@@ -445,8 +526,9 @@ def build_parser() -> argparse.ArgumentParser:
     p = sub.add_parser("explore",
                        help="cost-performance sweep: Pareto frontier, "
                             "scaling report, retry-aware expected cost")
-    p.add_argument("--arch", action="append", required=True,
-                   help="architecture to sweep; repeatable")
+    p.add_argument("--arch", action="append", default=None,
+                   help="architecture to sweep; repeatable (required "
+                        "unless --compare)")
     p.add_argument("--shape", action="append", default=None,
                    help="workload shape(s); repeatable (default train_4k)")
     p.add_argument("--goal", action="append", default=None,
@@ -485,7 +567,40 @@ def build_parser() -> argparse.ArgumentParser:
     p.add_argument("--no-report", action="store_true",
                    help="print the frontier only; skip the "
                         "runs/<id>/explore.md report artifact")
+    p.add_argument("--compare", default=None, metavar="RUN_ID",
+                   help="re-run RUN_ID's recorded grid under the current "
+                        "catalog + calibration and print/record a "
+                        "byte-deterministic per-cell diff (compare.md)")
+    p.add_argument("--calibration", default=None, metavar="PATH",
+                   help="activate the fitted coefficients from this "
+                        "calibration store for the sweep")
     p.set_defaults(fn=cmd_explore)
+
+    p = sub.add_parser("calibrate",
+                       help="harvest run/bench telemetry into the "
+                            "calibration store, refit the cost model, "
+                            "report drift (exit 2 on drift)")
+    p.add_argument("--store", default=None,
+                   help="calibration store path (default "
+                        ".repro_cache/calibration.json or "
+                        "$REPRO_CALIBRATION_PATH)")
+    p.add_argument("--runs-dir", default=None,
+                   help="provenance root to harvest finished runs from")
+    p.add_argument("--bench", action="append", default=None,
+                   metavar="PATH",
+                   help="BENCH_*.json file carrying calibration_samples; "
+                        "repeatable")
+    p.add_argument("--min-samples", type=int, default=4,
+                   help="observations required per (chip, kind) cell "
+                        "for the full linear fit (fewer -> scale mode)")
+    p.add_argument("--drift-threshold", type=float, default=0.25,
+                   help="relative predicted-vs-measured error that "
+                        "flags a cell as drifted")
+    p.add_argument("--no-fit", action="store_true",
+                   help="ingest only; keep the stored coefficients")
+    p.add_argument("--clear", action="store_true",
+                   help="empty the store (samples and cells)")
+    p.set_defaults(fn=cmd_calibrate)
 
     p = sub.add_parser("run", help="run a workflow template or packed "
                                    "artifact")

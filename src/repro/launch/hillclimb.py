@@ -7,6 +7,11 @@ print the roofline-term deltas vs the baseline tag.
 
 Results accumulate in the same dryrun_results.json, tagged; the roofline
 benchmark and EXPERIMENTS.md §Perf read them side by side.
+
+With ``--calibration PATH`` the printed model-side step estimate (and
+:func:`refine_plan`'s scoring) uses the fitted coefficients from that
+calibration store instead of the static roofline — so a hill-climb
+against real telemetry optimizes what the hardware actually does.
 """
 import os
 os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
@@ -18,17 +23,81 @@ import sys  # noqa: E402
 from repro.launch.dryrun import run_cell  # noqa: E402
 
 
-def term_summary(rec):
-    st = rec.get("hlo_stats", {})
-    PEAK, HBM, ICI = 197e12, 819e9, 50e9
-    c = st.get("flops", 0) / PEAK
-    m = st.get("hbm_bytes", 0) / HBM
-    x = st.get("total_collective_bytes", 0) / ICI
+def term_summary(rec, chip="v5e"):
+    """Roofline time terms of one dryrun record on one chip generation
+    (catalog peak rates via :func:`repro.launch.hlo_stats.
+    roofline_terms` — no more hard-coded constants)."""
+    from repro.launch.hlo_stats import roofline_terms
+
+    t = roofline_terms(rec.get("hlo_stats", {}), chip)
+    c, m, x = t["compute_s"], t["memory_s"], t["collective_s"]
     return {
         "compute_ms": c * 1e3, "memory_ms": m * 1e3, "collective_ms": x * 1e3,
         "step_bound_ms": max(c, m, x) * 1e3,
         "temp_gb": rec.get("temp_size_in_bytes", 0) / 1e9,
     }
+
+
+def refine_plan(arch, shape, slice_name, *, start=None, max_iters=16):
+    """Greedy neighbor search over plan geometry on a fixed slice,
+    scored by the (calibration-aware) analytic cost model.
+
+    Starts from ``start`` (a PlanGeometry) or the planner's winner for
+    the slice, then repeatedly tries single-knob moves — remat level,
+    microbatch ×2 / ÷2, gradient compression — keeping any move that
+    lowers the estimated step time while staying feasible.  Because the
+    scorer is :func:`repro.core.costmodel.estimate`, an *activated*
+    calibration (``repro.core.calibrate.activate``) transparently
+    changes the landscape the climb walks.
+
+    Returns ``(geometry, estimate, history)`` where ``history`` is one
+    dict per accepted move."""
+    import dataclasses as _dc
+
+    from repro.configs import get_config, get_shape
+    from repro.core.catalog import find_slice
+    from repro.core.costmodel import estimate
+    from repro.core.intent import ResourceIntent
+    from repro.core.planner import plan
+
+    cfg, shp, sl = get_config(arch), get_shape(shape), find_slice(slice_name)
+    if start is None:
+        choices = plan(ResourceIntent(arch=arch, shape=shape,
+                                      goal="production",
+                                      slice_name=slice_name), top_k=1)
+        if not choices:
+            raise ValueError(f"no feasible plan for {arch}/{shape} "
+                             f"on {slice_name}")
+        start = choices[0].geometry
+
+    def score(geom):
+        est = estimate(cfg, shp, sl, geom)
+        return (est.step_s if est.feasible else float("inf")), est
+
+    def neighbors(geom):
+        for remat in ("none", "dots", "full"):
+            if remat != geom.remat:
+                yield _dc.replace(geom, remat=remat)
+        if geom.microbatch > 1:
+            yield _dc.replace(geom, microbatch=geom.microbatch // 2)
+        yield _dc.replace(geom, microbatch=geom.microbatch * 2)
+        yield _dc.replace(geom, compress_grads=not geom.compress_grads)
+
+    best_geom = start
+    best_s, best_est = score(start)
+    history = [{"move": "start", "step_s": best_s,
+                "geometry": _dc.asdict(start)}]
+    for _ in range(max_iters):
+        improved = False
+        for cand in neighbors(best_geom):
+            s, est = score(cand)
+            if s < best_s:
+                best_geom, best_s, best_est, improved = cand, s, est, True
+        if not improved:
+            break
+        history.append({"move": "accept", "step_s": best_s,
+                        "geometry": _dc.asdict(best_geom)})
+    return best_geom, best_est, history
 
 
 def main() -> None:
@@ -51,7 +120,19 @@ def main() -> None:
     ap.add_argument("--moe-impl", default="scatter", choices=["scatter", "shard_map"])
     ap.add_argument("--flash-bq", type=int, default=512)
     ap.add_argument("--flash-bk", type=int, default=1024)
+    ap.add_argument("--chip", default="v5e",
+                    help="chip generation for the roofline terms")
+    ap.add_argument("--calibration", default=None, metavar="PATH",
+                    help="calibration store; activates its fitted "
+                         "coefficients for the model-side estimates")
     args = ap.parse_args()
+
+    if args.calibration:
+        from repro.core import calibrate
+        cal = calibrate.CalibrationStore(args.calibration).calibration()
+        calibrate.activate(cal)
+        print(f"[hillclimb] calibration generation {cal.generation} "
+              f"({len(cal.cells)} cells) active", flush=True)
 
     plan_kw = {"remat": args.remat, "microbatch": args.microbatch,
                "attn_impl": args.attn_impl,
@@ -79,12 +160,12 @@ def main() -> None:
     with open(args.out, "w") as f:
         json.dump(results, f, indent=1)
 
-    new = term_summary(rec)
+    new = term_summary(rec, args.chip)
     base_key = f"{args.baseline_tag}|{args.arch}|{args.shape}|{mesh_desc}"
     base = results.get(base_key)
     print(f"\n{'term':16s} {'baseline':>12s} {'this':>12s} {'delta':>8s}")
     if base and base.get("ok"):
-        old = term_summary(base)
+        old = term_summary(base, args.chip)
         for k in new:
             b, n = old[k], new[k]
             d = (n - b) / b * 100 if b else float("nan")

@@ -315,3 +315,22 @@ def analyze_hlo(text: str) -> Dict[str, object]:
         "total_collective_bytes": sum(coll_bytes.values()),
         "num_computations": len(comps) - 1,
     }
+
+
+def roofline_terms(stats: Dict[str, object], chip="v5e") -> Dict[str, float]:
+    """Convert :func:`analyze_hlo` counts into roofline time terms for
+    one chip generation (a name in :data:`repro.core.catalog.CHIPS` or a
+    :class:`~repro.core.catalog.ChipSpec`): seconds the step would spend
+    compute-, HBM-, and collective-bound at peak rates.  These are the
+    same terms the analytic cost model emits, so HLO-derived numbers
+    feed straight into :mod:`repro.core.calibrate` samples and the
+    hillclimb deltas."""
+    from repro.core.catalog import CHIPS
+
+    spec = CHIPS[chip] if isinstance(chip, str) else chip
+    return {
+        "compute_s": float(stats.get("flops", 0) or 0) / spec.peak_bf16_flops,
+        "memory_s": float(stats.get("hbm_bytes", 0) or 0) / spec.hbm_bw,
+        "collective_s": (float(stats.get("total_collective_bytes", 0) or 0)
+                         / spec.ici_bw),
+    }

@@ -1,0 +1,615 @@
+"""Telemetry-calibrated cost model + live provider registry.
+
+Covers the calibration subsystem end to end:
+
+  * regression recovery — the least-squares fit exactly recovers known
+    coefficients from noise-free synthetic telemetry (≤1e-6) and stays
+    within tolerance under seeded noise (hypothesis property when
+    available, plus an always-run deterministic sweep);
+  * drift detection — fires past the threshold, silent within the band;
+  * the persistent store — roundtrip, generation bumps, and a
+    multi-process ingest hammer over one shared file (the RunManifest
+    flock discipline);
+  * planner memo invalidation — activating a calibration invalidates
+    memoized plans for exactly the kinds it touches (PLANNER_STATS /
+    SCORING_STATS observables);
+  * scalar/batch estimate parity under an active calibration;
+  * harvesting — PlanStage plan docs + metric rows, bench JSON,
+    CalibrateStage in a graph;
+  * the provider registry — register/health/price against the live
+    catalog.
+"""
+import dataclasses
+import json
+import multiprocessing as mp
+import os
+
+import numpy as np
+import pytest
+
+from repro.configs import get_config, get_shape
+from repro.core import calibrate
+from repro.core.calibrate import (
+    Calibration,
+    CalibrationStore,
+    CellCalibration,
+    Sample,
+    check_drift,
+    fit_cells,
+    harvest_bench,
+    harvest_run,
+    static_step,
+)
+from repro.core.catalog import CHIPS, catalog_generation, find_slice
+from repro.core.costmodel import (
+    SCORING_STATS,
+    PlanGeometry,
+    estimate,
+    reset_scoring_stats,
+)
+from repro.core.intent import ResourceIntent
+from repro.core.planner import (
+    PLANNER_STATS,
+    clear_planner_cache,
+    plan,
+    reset_planner_stats,
+)
+from repro.core.registry import (
+    HEALTH_STATES,
+    ProviderProfile,
+    ProviderRegistry,
+    SliceOffer,
+)
+
+
+@pytest.fixture(autouse=True)
+def _no_active_calibration():
+    """Every test starts and ends on static priors."""
+    calibrate.deactivate()
+    yield
+    calibrate.deactivate()
+    clear_planner_cache()
+
+
+def _synth_samples(chip, kind, coefs, n, rng, noise=0.0):
+    a_c, a_m, a_x, b = coefs
+    out = []
+    for _ in range(n):
+        c, m, x = rng.uniform(1e-3, 1.0, 3)
+        y = a_c * c + a_m * m + a_x * x + b
+        if noise:
+            y *= 1.0 + rng.normal(0.0, noise)
+        out.append(Sample(chip, kind, float(c), float(m), float(x),
+                          float(max(y, 1e-9))))
+    return out
+
+
+def _fit_one(samples):
+    cells = fit_cells(samples)
+    assert len(cells) == 1
+    return cells[0]
+
+
+# ===========================================================================
+# Regression recovery
+# ===========================================================================
+def _assert_exact_recovery(seed, a_c, a_m, a_x, b):
+    rng = np.random.default_rng(seed)
+    cell = _fit_one(_synth_samples("v5e", "train", (a_c, a_m, a_x, b),
+                                   8, rng))
+    assert cell.mode == "linear"
+    assert abs(cell.a_compute - a_c) <= 1e-6
+    assert abs(cell.a_memory - a_m) <= 1e-6
+    assert abs(cell.a_collective - a_x) <= 1e-6
+    assert abs(cell.intercept - b) <= 1e-6
+
+
+def test_noise_free_recovery_deterministic_sweep():
+    # always-run counterpart of the hypothesis property below
+    rng = np.random.default_rng(0)
+    for seed in range(25):
+        a_c, a_m, a_x = rng.uniform(0.2, 3.0, 3)
+        b = rng.uniform(0.0, 0.05)
+        _assert_exact_recovery(seed, float(a_c), float(a_m), float(a_x),
+                               float(b))
+
+
+def test_noisy_recovery_within_tolerance():
+    rng = np.random.default_rng(42)
+    truth = (1.4, 0.8, 1.9, 0.003)
+    cell = _fit_one(_synth_samples("v5e", "train", truth, 200, rng,
+                                   noise=0.02))
+    assert cell.mode == "linear"
+    # 2% multiplicative noise over 200 samples: coefficients land well
+    # within 10% of truth
+    assert abs(cell.a_compute - truth[0]) / truth[0] < 0.1
+    assert abs(cell.a_memory - truth[1]) / truth[1] < 0.1
+    assert abs(cell.a_collective - truth[2]) / truth[2] < 0.1
+    assert cell.residual < 0.05
+
+
+def test_underdetermined_group_falls_back_to_scale():
+    rng = np.random.default_rng(1)
+    cell = _fit_one(_synth_samples("v5e", "train", (2.0, 2.0, 2.0, 0.0),
+                                   2, rng))
+    assert cell.mode == "scale"
+    assert cell.scale > 1.0  # measured runs slower than the static prior
+
+
+def test_degenerate_design_falls_back_to_scale():
+    # identical rows: rank-deficient design despite enough samples
+    rows = [Sample("v5e", "train", 0.1, 0.2, 0.05, 0.3,
+                   source=f"s{i}") for i in range(6)]
+    cell = _fit_one(rows)
+    assert cell.mode == "scale"
+    pred = float(cell.predict(0.1, 0.2, 0.05))
+    assert pred == pytest.approx(0.3, rel=1e-9)
+
+
+def test_fit_groups_by_chip_and_kind():
+    rng = np.random.default_rng(2)
+    samples = (_synth_samples("v5e", "train", (1.5, 1.0, 1.0, 0.0), 6, rng)
+               + _synth_samples("v4", "decode", (0.7, 1.2, 1.0, 0.0), 6,
+                                rng))
+    cal = Calibration(cells=tuple(fit_cells(samples)), generation=1)
+    assert cal.cell("v5e", "train").a_compute == pytest.approx(1.5)
+    assert cal.cell("v4", "decode").a_compute == pytest.approx(0.7)
+    assert cal.cell("v5p", "train") is None
+    assert set(cal.for_kind("train")) == {"v5e"}
+    assert cal.kind_state("train") != ""
+    assert cal.kind_state("train") != cal.kind_state("decode")
+    assert cal.kind_state("prefill") == ""
+
+
+# ---------------------------------------------------------------------------
+# Property test (hypothesis, importorskip-guarded)
+# ---------------------------------------------------------------------------
+try:
+    from hypothesis import given, settings, strategies as st
+    _HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - exercised where hypothesis is absent
+    _HAVE_HYPOTHESIS = False
+
+if _HAVE_HYPOTHESIS:
+    coef = st.floats(0.1, 5.0, allow_nan=False, allow_infinity=False)
+
+    @given(seed=st.integers(0, 10**9), a_c=coef, a_m=coef, a_x=coef,
+           b=st.floats(0.0, 0.1, allow_nan=False))
+    @settings(max_examples=60, deadline=None)
+    def test_regression_recovers_coefficients_property(seed, a_c, a_m,
+                                                       a_x, b):
+        _assert_exact_recovery(seed, a_c, a_m, a_x, b)
+else:
+    def test_regression_recovers_coefficients_property():
+        pytest.importorskip("hypothesis",
+                            reason="property tests need hypothesis")
+
+
+# ===========================================================================
+# Drift detection
+# ===========================================================================
+def test_drift_fires_past_threshold():
+    rng = np.random.default_rng(3)
+    # fit on one regime, then measure a 2x-slower one
+    fitted = _synth_samples("v5e", "train", (1.0, 1.0, 1.0, 0.0), 8, rng)
+    cal = Calibration(cells=tuple(fit_cells(fitted)), generation=1)
+    slow = [dataclasses.replace(s, measured_step_s=2 * s.measured_step_s)
+            for s in fitted]
+    report = check_drift(slow, cal, threshold=0.25)
+    assert len(report.drifted) == 1
+    cell = report.drifted[0]
+    assert (cell.chip, cell.kind) == ("v5e", "train")
+    assert cell.mean_rel_err == pytest.approx(0.5, rel=1e-6)
+    assert "DRIFT" in report.summary()
+
+
+def test_drift_silent_within_band():
+    rng = np.random.default_rng(4)
+    fitted = _synth_samples("v5e", "train", (1.3, 0.9, 1.1, 0.002), 12, rng)
+    cal = Calibration(cells=tuple(fit_cells(fitted)), generation=1)
+    wobble = [dataclasses.replace(s, measured_step_s=s.measured_step_s
+              * (1.0 + 0.02 * (-1) ** i)) for i, s in enumerate(fitted)]
+    report = check_drift(wobble, cal, threshold=0.25)
+    assert report.drifted == ()
+    assert report.cells[0].mean_rel_err < 0.05
+    assert "ok" in report.summary()
+
+
+def test_drift_without_calibration_uses_static_prior():
+    s = Sample("v5e", "train", 0.1, 0.02, 0.01, 0.5)
+    static = float(static_step(0.1, 0.02, 0.01))
+    report = check_drift([s], None, threshold=0.1)
+    assert report.cells[0].mean_rel_err == pytest.approx(
+        abs(static - 0.5) / 0.5)
+    assert report.drifted  # 0.5s measured vs ~0.105s static
+
+
+# ===========================================================================
+# The persistent store
+# ===========================================================================
+def test_store_roundtrip(tmp_path):
+    path = str(tmp_path / "calibration.json")
+    store = CalibrationStore(path)
+    assert store.generation() == 0
+
+    rng = np.random.default_rng(5)
+    samples = _synth_samples("v5e", "train", (1.5, 1.0, 1.0, 0.001), 6, rng)
+    assert store.ingest(samples) == 6
+    g1 = store.generation()
+    assert g1 >= 1
+    # re-ingesting the same samples is a no-op (keyed dedup, no bump)
+    assert store.ingest(samples) == 0
+    assert store.generation() == g1
+
+    cal = store.fit()
+    assert store.generation() > g1
+    assert cal.cell("v5e", "train").a_compute == pytest.approx(1.5,
+                                                               abs=1e-6)
+    # a second handle on the same path sees the fitted state
+    again = CalibrationStore(path).calibration()
+    assert again.cell("v5e", "train").to_doc() == \
+        cal.cell("v5e", "train").to_doc()
+    assert len(CalibrationStore(path).samples("v5e", "train")) == 6
+
+    store.clear()
+    assert CalibrationStore(path).samples() == []
+    assert CalibrationStore(path).calibration().cells == ()
+
+
+def test_store_survives_corrupt_file(tmp_path):
+    path = str(tmp_path / "calibration.json")
+    with open(path, "w") as f:
+        f.write("{not json")
+    store = CalibrationStore(path)
+    assert store.generation() == 0
+    store.ingest([Sample("v5e", "train", 0.1, 0.1, 0.1, 0.3)])
+    assert len(store.samples()) == 1
+
+
+def test_store_env_default_path(tmp_path, monkeypatch):
+    p = str(tmp_path / "env" / "cal.json")
+    monkeypatch.setenv("REPRO_CALIBRATION_PATH", p)
+    store = CalibrationStore()
+    assert store.path == p
+    store.ingest([Sample("v4", "train", 0.1, 0.1, 0.1, 0.2)])
+    assert os.path.exists(p)
+
+
+def _ingest_hammer(args):
+    path, worker, rounds = args
+    store = CalibrationStore(path)
+    for i in range(rounds):
+        store.ingest([Sample("v5e", "train", 0.01 * (i + 1),
+                             0.001 * (worker + 1), 0.0,
+                             0.1 + i * 0.01, source=f"w{worker}:{i}")])
+    return rounds
+
+
+def test_store_multiprocess_ingest_merges(tmp_path):
+    """The PR-9 flock discipline: N processes hammer one store file;
+    no writer's samples are lost to a racing read-modify-write."""
+    path = str(tmp_path / "calibration.json")
+    workers, rounds = 4, 12
+    with mp.get_context("fork").Pool(workers) as pool:
+        done = pool.map(_ingest_hammer,
+                        [(path, w, rounds) for w in range(workers)])
+    assert done == [rounds] * workers
+    store = CalibrationStore(path)
+    samples = store.samples()
+    assert len(samples) == workers * rounds
+    sources = {s.source for s in samples}
+    assert sources == {f"w{w}:{i}" for w in range(workers)
+                       for i in range(rounds)}
+    # and the merged telemetry still fits
+    assert store.fit().cell("v5e", "train") is not None
+
+
+# ===========================================================================
+# Cost-model integration: scalar/batch parity + memo invalidation
+# ===========================================================================
+def _train_calibration(scale_chip="v5e", coefs=(1.5, 0.9, 1.2, 0.001)):
+    rng = np.random.default_rng(6)
+    samples = _synth_samples(scale_chip, "train", coefs, 8, rng)
+    return Calibration(cells=tuple(fit_cells(samples)), generation=1)
+
+
+def test_estimate_scalar_batch_parity_under_calibration():
+    cal = _train_calibration()
+    calibrate.activate(cal)
+    intent = ResourceIntent(arch="qwen2", shape="train_4k",
+                            goal="production")
+    choices = plan(intent, top_k=5, engine="vectorized")
+    scalar = plan(intent, top_k=5, engine="scalar")
+    assert [(c.slice.name, c.mesh_shape, c.geometry) for c in choices] == \
+        [(c.slice.name, c.mesh_shape, c.geometry) for c in scalar]
+    for v, s in zip(choices, scalar):
+        assert v.est.step_s == s.est.step_s  # bit-identical, not approx
+    # and the calibrated rows really did move off the static roofline
+    cfg, shp = get_config("qwen2"), get_shape("train_4k")
+    for c in choices:
+        if c.slice.chip.name == "v5e":
+            calibrate.deactivate()
+            st = estimate(cfg, shp, c.slice, c.geometry)
+            calibrate.activate(cal)
+            assert c.est.step_s != st.step_s
+
+
+def test_calibration_changes_only_covered_chips():
+    cal = _train_calibration()
+    cfg, shp = get_config("qwen2"), get_shape("train_4k")
+    sl = find_slice("v4-64")
+    geom = PlanGeometry(data=64, model=1)
+    before = estimate(cfg, shp, sl, geom).step_s
+    calibrate.activate(cal)  # v5e/train only
+    assert estimate(cfg, shp, sl, geom).step_s == before
+
+
+def test_planner_memo_salted_by_calibration_state():
+    """Activating a train calibration invalidates memoized train plans
+    (full re-score) while decode intents keep their memo hits."""
+    train = ResourceIntent(arch="qwen2", shape="train_4k",
+                           goal="production")
+    decode = ResourceIntent(arch="qwen2", shape="decode_32k",
+                            goal="production")
+    clear_planner_cache()
+    reset_planner_stats()
+    reset_scoring_stats()
+
+    plan(train)
+    plan(decode)
+    assert PLANNER_STATS["cold_ranks"] == 2
+    plan(train)
+    plan(decode)
+    assert PLANNER_STATS["memo_hits"] == 2
+
+    calibrate.activate(_train_calibration())
+    batch_before = SCORING_STATS["batch_calls"]
+    plan(decode)  # untouched kind: memo survives the activation
+    assert PLANNER_STATS["memo_hits"] == 3
+    assert SCORING_STATS["batch_calls"] == batch_before
+    plan(train)  # touched kind: stale entry, full re-score
+    assert PLANNER_STATS["stale_refreshes"] == 1
+    assert SCORING_STATS["batch_calls"] == batch_before + 1
+
+    # the re-scored entry memoizes under the new salt
+    plan(train)
+    assert PLANNER_STATS["memo_hits"] == 4
+
+    # deactivating flips the salt back: train invalidates again, the
+    # original pre-calibration ranking returns
+    calibrate.deactivate()
+    plan(train)
+    assert PLANNER_STATS["stale_refreshes"] == 2
+    plan(decode)
+    assert PLANNER_STATS["memo_hits"] == 5
+
+
+def test_plan_ranking_shifts_with_calibration():
+    """A calibration that slows a chip generation down changes its
+    planned step times — and the effect is fully reversible."""
+    intent = ResourceIntent(arch="qwen2", shape="train_4k",
+                            goal="production", slice_name="v5e-64")
+    base = plan(intent, top_k=4)
+    # v5e secretly runs compute 5x slower than the catalog claims
+    cal = _train_calibration(coefs=(5.0, 1.0, 1.0, 0.0))
+    calibrate.activate(cal)
+    shifted = plan(intent, top_k=4)
+    calibrate.deactivate()
+    restored = plan(intent, top_k=4)
+
+    def key(cs):
+        return [(c.slice.name, c.est.step_s) for c in cs]
+
+    assert key(base) == key(restored)
+    assert base and shifted
+    for b, s in zip(base, shifted):
+        assert s.est.step_s > b.est.step_s  # 5x compute penalty bites
+
+
+# ===========================================================================
+# Harvesting
+# ===========================================================================
+def test_harvest_bench_roundtrip(tmp_path):
+    samples = [Sample("v5e", "train", 0.1, 0.05, 0.01, 0.2,
+                      source="bench:x"),
+               Sample("v4", "decode", 0.01, 0.2, 0.0, 0.25,
+                      source="bench:y")]
+    path = str(tmp_path / "BENCH_planner.json")
+    with open(path, "w") as f:
+        json.dump({"planner": {"speedup": 5.0},
+                   "calibration": {
+                       "calibration_samples": [s.to_doc() for s in samples]
+                   }}, f)
+    got = harvest_bench(path)
+    assert sorted(s.key() for s in got) == sorted(s.key() for s in samples)
+    assert harvest_bench(str(tmp_path / "missing.json")) == []
+
+
+def test_harvest_run_pairs_plan_terms_with_metrics(tmp_path):
+    from repro.core.provenance import ProvenanceStore
+
+    store = ProvenanceStore(str(tmp_path / "runs"))
+    rec = store.create_run(template="t", template_version="1", config={},
+                           plan={})
+    rec.update_manifest(plan={
+        "slice": "v5e-64", "chip": "v5e", "kind": "train",
+        "compute_s": 0.2, "memory_s": 0.1, "collective_s": 0.05,
+    })
+    view = rec.stage_view("train")
+    view.log(0, {"step_time_s": 9.0})   # compile step, skipped
+    view.log(1, {"step_time_s": 0.31})
+    view.log(2, {"step_time_s": 0.29})
+    view.log(3, {"step_time_s": 0.30})
+    (sample,) = harvest_run(store.load(rec.run_id))
+    assert (sample.chip, sample.kind) == ("v5e", "train")
+    assert sample.measured_step_s == pytest.approx(0.30)
+    assert sample.compute_s == pytest.approx(0.2)
+    assert sample.weight == 3.0
+
+    # runs without plan terms harvest nothing, not an error
+    bare = store.create_run(template="t", template_version="1", config={},
+                            plan={})
+    assert harvest_run(store.load(bare.run_id)) == []
+
+
+def test_calibrate_stage_in_graph(tmp_path):
+    from repro.core import CalibrateStage, StageContext, StageGraph
+    from repro.core.provenance import ProvenanceStore
+    from repro.core.workflow import REGISTRY
+
+    store = ProvenanceStore(str(tmp_path / "runs"))
+    rec = store.create_run(template="t", template_version="1", config={},
+                          plan={})
+    rec.update_manifest(plan={
+        "slice": "v5e-64", "chip": "v5e", "kind": "train",
+        "compute_s": 0.2, "memory_s": 0.1, "collective_s": 0.05,
+    })
+    view = rec.stage_view("train")
+    for i, t in enumerate([9.0, 0.31, 0.29, 0.30]):
+        view.log(i, {"step_time_s": t})
+
+    cal_path = str(tmp_path / "cal.json")
+    g = StageGraph("calibrate-test")
+    g.add(CalibrateStage(store_path=cal_path, min_samples=1))
+    ctx = StageContext(template=REGISTRY.get("train-xlstm-125m"),
+                       record=store.load(rec.run_id))
+    out = g.execute(ctx, max_workers=1)
+    assert out["calibrate"].ok
+    cal = ctx.outputs["calibration"]
+    assert cal.cell("v5e", "train") is not None
+    assert ctx.outputs["drift_report"].cells
+    assert os.path.exists(cal_path)
+    assert os.path.exists(os.path.join(store.load(rec.run_id).artifacts_dir,
+                                       "calibration.md"))
+    events = [e for e in store.load(rec.run_id).events()
+              if e.get("kind") == "calibrate"]
+    assert events and events[0]["new_samples"] == 1
+    # uncacheable by design: absorbing new telemetry every run
+    assert not CalibrateStage().cacheable
+
+
+def test_calibrate_stage_spec_roundtrip():
+    from repro.core import CalibrateStage
+    from repro.core.spec import STAGE_TYPES, from_spec, to_spec
+    from repro.core.graph import StageGraph
+
+    assert STAGE_TYPES["calibrate"] is CalibrateStage
+    g = StageGraph("spec-rt")
+    g.add(CalibrateStage(min_samples=2, drift_threshold=0.5,
+                         activate=True))
+    g2 = from_spec(to_spec(g))
+    st = g2.stages["calibrate"]
+    assert isinstance(st, CalibrateStage)
+    assert st.min_samples == 2
+    assert st.drift_threshold == 0.5
+    assert st.activate is True
+
+
+def test_plan_stage_records_roofline_terms(tmp_path):
+    from repro.core import PlanStage, StageContext, StageGraph
+    from repro.core.provenance import ProvenanceStore
+    from repro.core.workflow import REGISTRY
+
+    store = ProvenanceStore(str(tmp_path / "runs"))
+    rec = store.create_run(template="t", template_version="1", config={},
+                           plan={})
+    g = StageGraph("plan-terms")
+    g.add(PlanStage())
+    ctx = StageContext(template=REGISTRY.get("train-xlstm-125m"),
+                       record=rec)
+    g.execute(ctx, max_workers=1)
+    doc = store.load(rec.run_id).manifest["plan"]
+    for k in ("chip", "kind", "compute_s", "memory_s", "collective_s"):
+        assert doc.get(k) is not None, k
+    assert doc["chip"] in CHIPS
+    assert doc["kind"] == "train"
+
+
+# ===========================================================================
+# Provider registry
+# ===========================================================================
+def _reg_profile(pid="acme", price=None, health="healthy"):
+    return ProviderProfile(
+        id=pid, name=pid.title(), service="tpu",
+        offers=(SliceOffer(chip="v5e", chips_per_pod=16,
+                           price_per_chip_hour=price),),
+        health=health)
+
+
+def test_registry_register_materializes_catalog_slices():
+    reg = ProviderRegistry()
+    gen0 = catalog_generation()
+    try:
+        slices = reg.register(_reg_profile())
+        assert [s.name for s in slices] == ["acme/v5e-16"]
+        assert find_slice("acme/v5e-16").chips_per_pod == 16
+        assert catalog_generation() == gen0 + 1  # append-only: one bump
+        assert reg.slice_names("acme") == ["acme/v5e-16"]
+        with pytest.raises(ValueError):
+            reg.register(_reg_profile())  # duplicate id
+    finally:
+        reg.deregister("acme")
+    with pytest.raises(KeyError):
+        find_slice("acme/v5e-16")
+
+
+def test_registry_price_override_and_update():
+    reg = ProviderRegistry()
+    try:
+        reg.register(_reg_profile(price=0.5))
+        assert find_slice("acme/v5e-16").chip.price_per_hour == 0.5
+        # the base catalog chip is untouched by the override
+        assert CHIPS["v5e"].price_per_hour != 0.5
+        reg.update_price("acme", "v5e", 0.25)
+        assert find_slice("acme/v5e-16").chip.price_per_hour == 0.25
+        with pytest.raises(KeyError):
+            reg.update_price("acme", "v5p", 1.0)
+    finally:
+        reg.deregister("acme")
+
+
+def test_registry_health_transitions_withdraw_and_restore():
+    reg = ProviderRegistry()
+    try:
+        reg.register(_reg_profile())
+        reg.set_health("acme", "down")
+        with pytest.raises(KeyError):
+            find_slice("acme/v5e-16")
+        assert reg.slice_names("acme") == []
+        reg.set_health("acme", "degraded")  # degraded still schedules
+        assert find_slice("acme/v5e-16")
+        with pytest.raises(ValueError):
+            reg.set_health("acme", "on-fire")
+        reg.set_active("acme", False)
+        with pytest.raises(KeyError):
+            find_slice("acme/v5e-16")
+    finally:
+        reg.deregister("acme")
+
+
+def test_registry_profile_validation_and_docs():
+    with pytest.raises(ValueError):
+        ProviderProfile(id="x", name="x", health="sideways")
+    with pytest.raises(ValueError):
+        ProviderProfile(id="x", name="x",
+                        offers=(SliceOffer(chip="h100", chips_per_pod=8),))
+    p = _reg_profile(price=0.4)
+    assert ProviderProfile.from_doc(p.to_doc()) == p
+    assert SliceOffer(chip="v5e", chips_per_pod=16,
+                      num_pods=2).slice_name("acme") == "acme/2xv5e-16"
+    assert set(HEALTH_STATES) == {"unknown", "healthy", "degraded", "down"}
+
+
+def test_registered_provider_slices_reach_the_planner():
+    reg = ProviderRegistry()
+    try:
+        # an implausibly cheap provider must win the cost ranking
+        reg.register(ProviderProfile(
+            id="cheap", name="Cheap", offers=(
+                SliceOffer(chip="v5e", chips_per_pod=64,
+                           price_per_chip_hour=0.01),)))
+        choices = plan(ResourceIntent(arch="qwen2", shape="train_4k",
+                                      goal="production"), top_k=3)
+        assert choices[0].slice.name == "cheap/v5e-64"
+    finally:
+        reg.deregister("cheap")

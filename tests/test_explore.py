@@ -408,3 +408,202 @@ def test_cli_explore_writes_deterministic_report(tmp_path, capsys):
     clear_planner_cache()
     b = run(tmp_path / "runs-b")
     assert a == b, "CLI explore.md must be byte-deterministic"
+
+
+# ===========================================================================
+# Calibration-aware sweeps: compare reports + cache salting
+# ===========================================================================
+def _fixed_calibration(coefs=(1.6, 0.9, 1.1, 0.002), seed=11):
+    from repro.core import calibrate
+
+    rng = np.random.default_rng(seed)
+    a_c, a_m, a_x, b = coefs
+    samples = []
+    for c, m, x in rng.uniform(1e-3, 1.0, (8, 3)):
+        samples.append(calibrate.Sample(
+            "v5e", "train", float(c), float(m), float(x),
+            float(a_c * c + a_m * m + a_x * x + b)))
+    return calibrate.Calibration(cells=tuple(calibrate.fit_cells(samples)),
+                                 generation=7)
+
+
+def test_compare_report_byte_deterministic():
+    """Satellite: fixed spec + fixed calibration store -> byte-identical
+    compare report, with per-cell deltas for the calibrated cells."""
+    from repro.core import calibrate
+    from repro.core.explore import compare_markdown, result_doc
+
+    clear_planner_cache()
+    base_doc = result_doc(explore(SPEC))
+    cal = _fixed_calibration()
+    calibrate.activate(cal)
+    try:
+        clear_planner_cache()
+        doc1 = result_doc(explore(SPEC))
+        clear_planner_cache()
+        doc2 = result_doc(explore(SPEC))
+    finally:
+        calibrate.deactivate()
+        clear_planner_cache()
+
+    import json as _json
+    assert _json.dumps(doc1, sort_keys=True) == _json.dumps(doc2,
+                                                            sort_keys=True)
+    r1 = compare_markdown(base_doc, doc1)
+    r2 = compare_markdown(base_doc, doc2)
+    assert r1 == r2, "compare report must be byte-deterministic"
+    # golden structure, mirroring report_markdown's guarantees
+    assert r1.startswith("# Explore comparison")
+    assert "## Cells" in r1 and "## Frontier" in r1
+    assert "calibration generation 7" in r1
+    # every grid cell has a delta row; the v5e-backed ones moved
+    cells_section = r1.split("## Cells")[1].split("## Frontier")[0]
+    rows = [ln for ln in cells_section.splitlines()
+            if ln.startswith("| qwen2-1.5b")]
+    assert len(rows) == len(SPEC.cell_specs())
+    assert any("%" in ln for ln in rows), "no per-cell delta rendered"
+    # self-comparison is the identity: zero changed cells
+    self_cmp = compare_markdown(doc1, doc2)
+    assert f"0 of {len(SPEC.cell_specs())} cells changed" in self_cmp
+    assert "membership unchanged" in self_cmp
+
+
+def test_explore_cell_cache_salted_by_calibration_state(tmp_path):
+    """Activating a calibration must invalidate cached sweep cells for
+    the kinds it covers; deactivating restores the original keys."""
+    from repro.core import calibrate
+
+    cache = StageCache(str(tmp_path / "cells"))
+    n = len(SPEC.cell_specs())
+    explore(SPEC, cache=cache)
+    assert explore(SPEC, cache=cache).cells_from_cache == n
+
+    calibrate.activate(_fixed_calibration())
+    try:
+        shifted = explore(SPEC, cache=cache)
+        assert shifted.cells_from_cache == 0
+        assert explore(SPEC, cache=cache).cells_from_cache == n
+    finally:
+        calibrate.deactivate()
+        clear_planner_cache()
+    restored = explore(SPEC, cache=cache)
+    assert restored.cells_from_cache == n
+    assert report_markdown(restored) != report_markdown(shifted)
+
+
+def test_cli_explore_compare_byte_deterministic(tmp_path, capsys):
+    """Satellite: `explore --compare RUN_ID` against a fixed calibration
+    store writes a byte-identical compare.md across repeat invocations."""
+    import glob
+    import json as _json
+    import os
+
+    from repro.core import calibrate
+    from repro.launch.cli import build_parser
+
+    runs = tmp_path / "runs"
+    args = build_parser().parse_args([
+        "explore", "--arch", "qwen2-1.5b", "--shape", "train_4k",
+        "--chips", "16,32", "--runs-dir", str(runs)])
+    args.fn(args)
+    capsys.readouterr()
+    (base_json,) = glob.glob(str(runs / "*" / "explore.json"))
+    run_id = os.path.basename(os.path.dirname(base_json))
+    with open(base_json) as f:
+        assert f.read() == _json.dumps(_json.load(open(base_json)),
+                                       indent=2, sort_keys=True)
+
+    store_path = str(tmp_path / "cal.json")
+    store = calibrate.CalibrationStore(store_path)
+    rng = np.random.default_rng(13)
+    store.ingest([calibrate.Sample("v5e", "train", float(c), float(m),
+                                   float(x),
+                                   float(1.5 * c + 0.9 * m + 1.1 * x))
+                  for c, m, x in rng.uniform(1e-3, 1.0, (8, 3))])
+    store.fit()
+
+    def compare_once():
+        clear_planner_cache()
+        a = build_parser().parse_args([
+            "explore", "--compare", run_id, "--calibration", store_path,
+            "--runs-dir", str(runs)])
+        a.fn(a)
+        out = capsys.readouterr().out
+        assert "# Explore comparison" in out
+        latest = max(glob.glob(str(runs / "*" / "compare.md")),
+                     key=os.path.getmtime)
+        with open(latest, encoding="utf-8") as f:
+            return f.read()
+    try:
+        a = compare_once()
+        b = compare_once()
+    finally:
+        calibrate.deactivate()
+        clear_planner_cache()
+    assert a == b, "compare.md must be byte-deterministic"
+    assert "cells changed" in a
+
+
+# ===========================================================================
+# Registry/catalog mutation under a live sweep (the fix)
+# ===========================================================================
+def test_register_slice_mid_explore_never_corrupts_frontier(tmp_path,
+                                                            monkeypatch):
+    """A register_slice landing while explore() is mid-sweep: cells
+    planned after the mutation carry the new generation snapshot, the
+    merged frontier stays internally consistent, and the cache never
+    aliases pre-mutation cells to the post-mutation catalog."""
+    import importlib
+
+    # (import repro.core.explore as ... would bind the explore()
+    # *function* re-exported by the package, not the module)
+    explore_mod = importlib.import_module("repro.core.explore")
+
+    cache = StageCache(str(tmp_path / "cells"))
+    g0 = catalog_generation()
+    real_run_cell = explore_mod._run_cell
+    state = {"calls": 0, "slice": None}
+
+    def hooked(cs, spec, engine, generation=0):
+        state["calls"] += 1
+        if state["calls"] == 2:  # lands between cell 1 and cell 2
+            state["slice"] = register_slice(
+                SliceType("v5e-midsweep", CHIPS["v5e"], 48, 1))
+        return real_run_cell(cs, spec, engine, generation=generation)
+
+    monkeypatch.setattr(explore_mod, "_run_cell", hooked)
+    try:
+        mid = explore_mod.explore(SPEC, cache=cache)
+        monkeypatch.setattr(explore_mod, "_run_cell", real_run_cell)
+
+        gens = [c.generation for c in mid.cells]
+        # cell 0 planned pre-mutation; cell 1's snapshot predates the
+        # mutation that landed inside its own planning (the documented
+        # conservative case); the rest saw the new catalog
+        assert gens[0] == g0 and gens[1] == g0
+        assert all(g == g0 + 1 for g in gens[2:])
+
+        # the frontier is internally consistent: every point is one of
+        # its own cell's survivors and no point dominates another
+        by_label = {c.cell.label(): c for c in mid.cells}
+        for p in mid.frontier:
+            cell = by_label[p.cell.label()]
+            assert any(s is p.choice for s in cell.survivors)
+        triples = [(p.choice.est.step_s, p.choice.est.cost_per_mtok,
+                    p.choice.slice.price_per_hour) for p in mid.frontier]
+        assert _brute_force_frontier(triples) == list(range(len(triples)))
+
+        # a follow-up sweep under the stable new catalog recomputes the
+        # stale-keyed cells (no aliasing of pre-mutation entries) ...
+        settled = explore_mod.explore(SPEC, cache=cache)
+        assert all(c.generation == g0 + 1 for c in settled.cells)
+        recomputed = [c for c in settled.cells if not c.from_cache]
+        assert len(recomputed) >= 2  # at least the pre-mutation cells
+        # ... and is then fully cached and byte-stable
+        warm = explore_mod.explore(SPEC, cache=cache)
+        assert warm.cells_from_cache == len(SPEC.cell_specs())
+        assert report_markdown(warm) == report_markdown(settled)
+    finally:
+        if state["slice"] is not None:
+            unregister_slice(state["slice"].name)
+        clear_planner_cache()
